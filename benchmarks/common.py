@@ -1,0 +1,74 @@
+"""Shared benchmark substrate: a cached trained CNN + controller plumbing.
+
+The paper's experiments quantize *trained* ResNets on CIFAR-100/ImageNet;
+offline we train the reduced ResNet on the teacher-labeled synthetic image
+task once and cache the weights under artifacts/ so every table reuses the
+same starting checkpoint (as the paper reuses its pretrained models).
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import numpy as np
+
+from repro.checkpoint import store as ck
+from repro.core.controller import ControllerConfig, SigmaQuantController
+from repro.core.policy import Targets
+from repro.data.images import ImageTask
+from repro.models import cnn as cnn_mod
+from repro.quant.env import CNNQuantEnv
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts")
+
+#: benchmark task — calibrated so quantization degrades *gradually*
+#: (float 0.93, W8 0.93, W6 0.92, W4 0.85, W2 0.11 on the mini CNN), the
+#: regime the paper's mixed-precision trade-off curves live in.
+TASK = ImageTask(n_classes=64, noise=2.2, seed=1)
+
+STAGE_MENU = {
+    "mini": ((16, 1), (32, 1), (64, 1)),
+    "small": ((16, 2), (32, 2), (64, 2)),
+    "wide": ((24, 2), (48, 2), (96, 2)),
+}
+
+
+def trained_cnn_env(name: str = "mini", *, steps: int = 400, seed: int = 0,
+                    objective: str = "size", steps_per_epoch: int = 10) -> CNNQuantEnv:
+    cfg = cnn_mod.CNNConfig(name=f"resnet_{name}", stages=STAGE_MENU[name],
+                            n_classes=TASK.n_classes, img_size=TASK.img_size)
+    params = cnn_mod.init(cfg, jax.random.key(seed))
+    env = CNNQuantEnv(params, cfg, TASK, objective=objective,
+                      steps_per_epoch=steps_per_epoch, seed=seed)
+    root = os.path.join(ART, f"cnn_{name}_s{seed}")
+    latest = ck.latest_step(root)
+    if latest is not None:
+        env.params, _ = ck.restore(root, env.params)
+    else:
+        env.pretrain(steps)
+        ck.save(root, steps, env.params, extra={"float_acc": env.float_accuracy()})
+    return env
+
+
+def controller_config(fast: bool = True, **kw) -> ControllerConfig:
+    base = dict(phase1_max_iters=2, phase2_max_iters=10, phase1_qat_epochs=2,
+                phase2_qat_epochs=1, stagnation_patience=4)
+    if not fast:
+        base.update(phase1_max_iters=3, phase2_max_iters=24, phase1_qat_epochs=4,
+                    phase2_qat_epochs=2, stagnation_patience=6)
+    base.update(kw)
+    return ControllerConfig(**base)
+
+
+def run_sigmaquant(env: CNNQuantEnv, acc_target: float, size_frac_of_int8: float,
+                   *, fast: bool = True, log=None, **cc_kw):
+    """Run the two-phase controller against (acc, size-fraction) targets."""
+    int8_size = sum(s.n_params for s in env.layer_infos()) / 2**20  # MiB at 8-bit
+    targets = Targets(acc_t=acc_target, res_t=size_frac_of_int8 * int8_size,
+                      acc_buffer=0.01, res_buffer=0.10)
+    ctrl = SigmaQuantController(env, targets, controller_config(fast, **cc_kw), log=log)
+    return ctrl.run(), targets
+
+
+def fmt_mib(x: float) -> str:
+    return f"{x:.3f}"

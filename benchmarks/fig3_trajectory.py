@@ -1,0 +1,40 @@
+"""Fig. 2/3 analogue: the two-phase trajectory through the accuracy x size
+plane — start point, Phase-1 re-clustering moves, Phase-2 KL refinements,
+zone classification at every step, final landing.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from . import common
+
+
+def run(fast: bool = True) -> dict:
+    env = common.trained_cnn_env("small")
+    log_lines: list[str] = []
+    result, targets = common.run_sigmaquant(
+        env, acc_target=0.86, size_frac_of_int8=0.5, fast=fast,
+        log=log_lines.append)
+    print(f"targets: acc >= {targets.acc_t:.3f}, size <= {targets.res_t:.3f} MiB")
+    print(f"{'ph':>3}{'step':>5}{'acc':>8}{'MiB':>8}  zone / move")
+    traj = []
+    for t in result.trace:
+        traj.append({"phase": t.phase, "step": t.step, "acc": t.acc,
+                     "size_mib": t.resource, "zone": t.zone, "note": t.note})
+        print(f"{t.phase:>3}{t.step:>5}{t.acc:>8.4f}{t.resource:>8.3f}  "
+              f"{t.zone:<14} {t.note}")
+    print(f"\nfinal: acc={result.acc:.4f} size={result.resource:.3f} MiB "
+          f"success={result.success} (phase1: acc={result.phase1_acc:.4f} "
+          f"size={result.phase1_resource:.3f})")
+    zones = [t.zone for t in result.trace]
+    out = {"trajectory": traj, "success": result.success,
+           "zones_visited": sorted(set(zones)),
+           "ends_in_target": zones[-1] == "target"}
+    os.makedirs(os.path.join(common.ART, "bench"), exist_ok=True)
+    json.dump(out, open(os.path.join(common.ART, "bench", "fig3.json"), "w"), indent=1)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,53 @@
+"""Roofline table (deliverable g): aggregate the dry-run JSON artifacts into
+the per-(arch x shape x mesh) three-term table for EXPERIMENTS.md §Roofline.
+
+Run ``python -m repro.launch.dryrun --all --both-meshes --out artifacts/dryrun``
+first; this benchmark only reads the artifacts.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from . import common
+
+
+def load_records(pattern: str = "*.json") -> list[dict]:
+    recs = []
+    for fn in sorted(glob.glob(os.path.join(common.ART, "dryrun", pattern))):
+        with open(fn) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def fmt_s(x: float) -> str:
+    return f"{x * 1e3:9.2f}ms" if x < 10 else f"{x:9.1f}s "
+
+
+def run(fast: bool = True) -> dict:
+    recs = load_records()
+    if not recs:
+        print("no dry-run artifacts found — run repro.launch.dryrun first")
+        return {"rows": []}
+    recs.sort(key=lambda r: (r["arch"], r["shape"], r["mesh"]))
+    print(f"{'arch':<26}{'shape':<13}{'mesh':<9}{'compute':>11}{'memory':>11}"
+          f"{'collective':>11} {'dominant':<11}{'MF/HLO':>7}{'roofline%':>10}")
+    for r in recs:
+        if r.get("variant"):
+            continue  # perf-iteration variants reported in §Perf, not here
+        print(f"{r['arch']:<26}{r['shape']:<13}{r['mesh']:<9}"
+              f"{fmt_s(r['compute_s'])}{fmt_s(r['memory_s'])}{fmt_s(r['collective_s'])}"
+              f" {r['dominant']:<11}{r['useful_flops_ratio']:>7.3f}"
+              f"{r['roofline_fraction']:>10.3f}")
+    worst = sorted((r for r in recs if not r.get("variant")),
+                   key=lambda r: r["roofline_fraction"])[:3]
+    print("\nworst roofline fractions (hillclimb candidates):")
+    for r in worst:
+        print(f"  {r['arch']} x {r['shape']} ({r['mesh']}): "
+              f"{r['roofline_fraction']:.4f}, dominant={r['dominant']}")
+    return {"rows": recs}
+
+
+if __name__ == "__main__":
+    run()

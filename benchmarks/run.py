@@ -1,0 +1,57 @@
+"""Benchmark harness entry point — one section per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only table3]
+
+``--full`` uses the paper-scale controller budgets (slower);
+the default fast mode keeps every section CPU-friendly.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+import traceback
+
+from . import (fig3_trajectory, fig5_hw, roofline, table1_sigma_kl,
+               table2_phases, table3_sota, table4_hparam, table5_bops,
+               table6_mac)
+
+SECTIONS = {
+    "table1": ("Table I: sigma vs KL vs final bits", table1_sigma_kl.run),
+    "fig3": ("Fig. 3: two-phase trajectory", fig3_trajectory.run),
+    "table2": ("Table II: phase-1 vs final across models", table2_phases.run),
+    "table3": ("Table III: vs uniform / bop-greedy / hawq-proxy", table3_sota.run),
+    "table4": ("Table IV: buffer sensitivity", table4_hparam.run),
+    "table5": ("Table V: BOPs-target mode", table5_bops.run),
+    "table6": ("Table VI: MAC PPA", table6_mac.run),
+    "fig5": ("Fig. 5: energy/latency vs accuracy", fig5_hw.run),
+    "roofline": ("Roofline table (from dry-run artifacts)", roofline.run),
+}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--full", action="store_true", help="paper-scale budgets")
+    ap.add_argument("--only", default=None, choices=sorted(SECTIONS))
+    args = ap.parse_args(argv)
+
+    failures = []
+    for key, (title, fn) in SECTIONS.items():
+        if args.only and key != args.only:
+            continue
+        print(f"\n{'=' * 72}\n== {title}\n{'=' * 72}")
+        t0 = time.time()
+        try:
+            fn(fast=not args.full)
+        except Exception:
+            traceback.print_exc()
+            failures.append(key)
+        print(f"-- {key} done in {time.time() - t0:.1f}s")
+    if failures:
+        print(f"\nFAILED sections: {failures}")
+        return 1
+    print("\nall benchmark sections OK")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

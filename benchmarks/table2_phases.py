@@ -1,0 +1,47 @@
+"""Table II analogue: Phase-1-only vs final configuration across model sizes,
+under a <=2%-accuracy-drop + <=40%-of-INT8-size budget (the paper's setting).
+Shows the direction Phase 2 moved (bit-increase vs bit-decrease) and whether
+both targets were ultimately met.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from . import common
+
+
+def run(fast: bool = True) -> dict:
+    rows = []
+    print(f"{'model':<8}{'int8MiB':>9}{'int8acc':>9}{'P1 acc':>8}{'P1 MiB':>8}"
+          f"{'final acc':>10}{'final MiB':>10}{'dir':>5}{'met':>5}")
+    for name in ("mini", "small", "wide"):
+        env = common.trained_cnn_env(name)
+        from repro.core.policy import BitPolicy
+
+        int8 = BitPolicy.uniform(env.layer_infos(), 8)
+        int8_acc = env.evaluate(int8)
+        int8_mib = int8.model_size_mib()
+        result, targets = common.run_sigmaquant(
+            env, acc_target=int8_acc - 0.02, size_frac_of_int8=0.40, fast=fast)
+        direction = "-"
+        if result.phase1_policy is not None:
+            d = result.policy.mean_bits() - result.phase1_policy.mean_bits()
+            direction = "^" if d > 0.01 else ("v" if d < -0.01 else "=")
+        rows.append({
+            "model": name, "int8_mib": int8_mib, "int8_acc": int8_acc,
+            "phase1_acc": result.phase1_acc, "phase1_mib": result.phase1_resource,
+            "final_acc": result.acc, "final_mib": result.resource,
+            "direction": direction, "target_met": result.success,
+        })
+        print(f"{name:<8}{int8_mib:>9.3f}{int8_acc:>9.4f}{result.phase1_acc:>8.4f}"
+              f"{result.phase1_resource:>8.3f}{result.acc:>10.4f}{result.resource:>10.3f}"
+              f"{direction:>5}{'Y' if result.success else 'N':>5}")
+    out = {"rows": rows}
+    os.makedirs(os.path.join(common.ART, "bench"), exist_ok=True)
+    json.dump(out, open(os.path.join(common.ART, "bench", "table2.json"), "w"), indent=1)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,53 @@
+"""Table IV analogue: buffer-size sensitivity (conservative / balanced /
+aggressive memory buffers) — observed Phase-1/Phase-2 round counts, QAT-epoch
+cost proxy, and whether the strict targets were met.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from . import common
+
+
+SETTINGS = {
+    # name -> (size fraction of INT8, res buffer fraction of target)
+    "conservative": (0.85, 0.05),
+    "balanced": (0.75, 0.10),
+    "aggressive": (0.50, 0.15),
+}
+
+
+def run(fast: bool = True) -> dict:
+    rows = []
+    print(f"{'setting':<14}{'size frac':>10}{'obs M':>7}{'obs N':>7}"
+          f"{'QAT ep':>8}{'met':>5}")
+    from repro.core.controller import SigmaQuantController
+    from repro.core.policy import BitPolicy, Targets
+
+    for name, (frac, buf) in SETTINGS.items():
+        env = common.trained_cnn_env("small")
+        int8_mib = BitPolicy.uniform(env.layer_infos(), 8).model_size_mib()
+        targets = Targets(acc_t=0.87, res_t=frac * int8_mib,
+                          acc_buffer=0.01, res_buffer=buf)
+        cc = common.controller_config(fast)
+        ctrl = SigmaQuantController(env, targets, cc)
+        result = ctrl.run()
+        m = sum(1 for t in result.trace if t.phase == 1)
+        n = sum(1 for t in result.trace if t.phase == 2)
+        epochs = m * cc.phase1_qat_epochs + n * cc.phase2_qat_epochs
+        rows.append({"setting": name, "size_frac": frac, "obs_m": m, "obs_n": n,
+                     "qat_epochs": epochs, "met": result.success,
+                     "acc": result.acc, "size_mib": result.resource})
+        print(f"{name:<14}{frac:>10.2f}{m:>7}{n:>7}{epochs:>8}"
+              f"{'Y' if result.success else 'N':>5}")
+    print("paper trend: tighter budgets cost more refinement rounds; "
+          "aggressive budgets may miss the strict targets")
+    out = {"rows": rows}
+    os.makedirs(os.path.join(common.ART, "bench"), exist_ok=True)
+    json.dump(out, open(os.path.join(common.ART, "bench", "table4.json"), "w"), indent=1)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,41 @@
+"""Table VI reproduction: MAC implementation areas (TSMC 28 nm) and the
+shift-add unit's savings — plus the energy/latency model fit points.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from repro.core import hardware
+
+from . import common
+
+
+def run(fast: bool = True) -> dict:
+    print(f"{'impl':<12}{'area um^2':>12}{'vs int8':>10}")
+    rows = []
+    for impl, area in hardware.AREA_UM2.items():
+        save = 1.0 - area / hardware.AREA_UM2["int8"]
+        rows.append({"impl": impl, "area_um2": area, "saving_vs_int8": save})
+        print(f"{impl:<12}{area:>12.1f}{save:>+10.1%}")
+    headline = hardware.area_saving_vs_int8()
+    print(f"\nshift-add area saving vs INT8: {headline:.1%} (paper: 22.3%)")
+
+    # energy model fit vs the paper's reported uniform deltas (ResNet34 §VI-E)
+    fit = {f"A8W{b}": float(hardware.mac_energy(b) - 1.0) for b in (2, 4, 6, 8)}
+    paper = {"A8W2": -0.250, "A8W4": -0.138}
+    print("energy model (vs INT8):", {k: f"{v:+.1%}" for k, v in fit.items()},
+          "| paper anchors:", {k: f"{v:+.1%}" for k, v in paper.items()})
+    err = max(abs(fit[k] - v) for k, v in paper.items())
+    assert err < 0.005, f"energy model drifted from paper anchors: {err}"
+    out = {"rows": rows, "area_saving_vs_int8": headline,
+           "energy_fit": fit, "paper_anchors": paper, "fit_error": err}
+    os.makedirs(os.path.join(common.ART, "bench"), exist_ok=True)
+    json.dump(out, open(os.path.join(common.ART, "bench", "table6.json"), "w"), indent=1)
+    return out
+
+
+if __name__ == "__main__":
+    run()

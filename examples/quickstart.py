@@ -1,0 +1,58 @@
+"""Quickstart: SigmaQuant end-to-end on a small CNN, in ~2 minutes on CPU.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+1. Train a small ResNet on the synthetic image task (float baseline).
+2. Run the SigmaQuant two-phase controller against user targets:
+   accuracy >= float-2%, size <= 50% of the INT8 model.
+3. Inspect the resulting per-layer bit allocation and the shift-add PPA.
+"""
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+import jax
+
+from repro.core import hardware
+from repro.core.controller import ControllerConfig, SigmaQuantController
+from repro.core.policy import BitPolicy, Targets
+from repro.data.images import ImageTask
+from repro.models import cnn
+from repro.quant.env import CNNQuantEnv
+
+
+def main():
+    # 1. float baseline -----------------------------------------------------
+    cfg = cnn.CNNConfig(stages=((16, 1), (32, 1), (64, 1)), n_classes=64)
+    task = ImageTask(n_classes=64, noise=2.2, seed=1)
+    env = CNNQuantEnv(cnn.init(cfg, jax.random.key(0)), cfg, task,
+                      steps_per_epoch=10)
+    print("pre-training float model ...")
+    env.pretrain(400)
+    fp_acc = env.float_accuracy()
+    int8 = BitPolicy.uniform(env.layer_infos(), 8)
+    print(f"float acc={fp_acc:.3f}; INT8 size={int8.model_size_mib():.3f} MiB")
+
+    # 2. SigmaQuant under hard constraints ---------------------------------
+    targets = Targets(acc_t=fp_acc - 0.02, res_t=0.5 * int8.model_size_mib(),
+                      acc_buffer=0.01, res_buffer=0.05)
+    ctrl = SigmaQuantController(
+        env, targets,
+        ControllerConfig(phase1_max_iters=2, phase2_max_iters=8,
+                         phase1_qat_epochs=2, phase2_qat_epochs=1),
+        log=print)
+    result = ctrl.run()
+
+    # 3. report -------------------------------------------------------------
+    print(f"\nfinal: acc={result.acc:.4f} (target >= {targets.acc_t:.4f}), "
+          f"size={result.resource:.3f} MiB (target <= {targets.res_t:.3f}), "
+          f"success={result.success}")
+    print("per-layer bits:", result.policy.bits)
+    rep = hardware.evaluate_policy(result.policy)
+    print(f"shift-add MAC vs INT8 MAC: energy {rep.energy_saving():+.1%} saved, "
+          f"latency x{rep.latency:.2f}, area {hardware.area_saving_vs_int8():+.1%} saved")
+
+
+if __name__ == "__main__":
+    main()

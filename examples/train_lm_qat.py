@@ -1,0 +1,90 @@
+"""End-to-end driver (deliverable b): train a ~100M-parameter LM with
+mixed-precision QAT, checkpoints, and fault tolerance, for a few hundred steps.
+
+    PYTHONPATH=src python examples/train_lm_qat.py [--steps 200] [--params-m 100]
+
+The model is a gemma-family decoder scaled to ~100M params; a simulated node
+failure is injected mid-run and the loop recovers from the last checkpoint —
+the loss curve continues exactly where it left off (stateless data pipeline).
+"""
+import argparse
+import pathlib
+import sys
+import tempfile
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+import dataclasses
+
+import jax
+
+from repro.checkpoint.store import CheckpointStore
+from repro.configs import get_config
+from repro.configs.base import ShapeSpec
+from repro.core.policy import BitPolicy
+from repro.data.pipeline import TokenTask, global_batch
+from repro.models import registry
+from repro.quant import apply as qapply
+from repro.quant.qat import make_lm_qat_step
+from repro.runtime.loop import LoopConfig, TrainLoop
+from repro.runtime.resilience import FailureInjector
+from repro.train import optimizer as opt_mod
+from repro.train.train_step import TrainConfig
+
+
+def hundred_m_config(params_m: float = 100.0):
+    """gemma-family decoder scaled to ~params_m million parameters."""
+    base = get_config("gemma-2b")
+    d = 640  # 12L x (attn 0.9M + geglu 4.9M) + 2x 20.5M embeddings ~ 111M
+    cfg = dataclasses.replace(base, n_layers=12, d_model=d, n_heads=10, n_kv_heads=1,
+                              head_dim=64, d_ff=4 * d, vocab_size=32_000)
+    return cfg
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--params-m", type=float, default=100.0)
+    ap.add_argument("--wbits", type=int, default=8)
+    ap.add_argument("--fail-at", type=int, default=120,
+                    help="inject a simulated node failure at this step")
+    args = ap.parse_args()
+
+    cfg = hundred_m_config(args.params_m)
+    api = registry.get_api(cfg)
+    params = api.init(cfg, jax.random.key(0))
+    n = sum(x.size for x in jax.tree.leaves(params))
+    print(f"model: {cfg.name}-scaled, {n / 1e6:.1f}M params, QAT W{args.wbits}A8")
+
+    tcfg = TrainConfig(optimizer=opt_mod.OptimizerConfig(lr=6e-4, warmup_steps=40))
+    step_fn, _ = make_lm_qat_step(cfg, tcfg)
+    opt_state = opt_mod.init(tcfg.optimizer, params)
+    bits = qapply.bits_for_scan(
+        BitPolicy.uniform(qapply.layer_specs(params, cfg), args.wbits), params, cfg)
+
+    task = TokenTask(vocab_size=cfg.vocab_size)
+    shape = ShapeSpec("train", "train", args.seq, args.batch)
+
+    def loop_step(state, batch):
+        p, o = state
+        p, o, m = step_fn(p, o, batch, bits)
+        return (p, o), m
+
+    ckpt = tempfile.mkdtemp(prefix="repro_100m_")
+    loop = TrainLoop(
+        loop_step, (params, opt_state),
+        lambda s: global_batch(task, cfg, shape, s),
+        CheckpointStore(ckpt, keep=2),
+        LoopConfig(args.steps, save_every=50, log_every=20),
+        injector=FailureInjector(fail_at=(args.fail_at,)) if args.fail_at else None)
+    loop.run()
+    print(f"restarts survived: {loop.restarts}")
+    for h in loop.history:
+        print(f"  step {h['step']:>4}  loss {h['loss']:.4f}  lr {h['lr']:.2e}")
+    print(f"task entropy floor: {task.entropy_floor():.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,177 @@
+"""Atomic, sharded, step-versioned npz checkpoints with async save.
+
+Layout (one directory per step)::
+
+    <root>/step_0000400/
+        shard-00000-of-00001.npz    # this host's leaves, keyed by tree path
+        MANIFEST.json               # step, n_hosts, leaf index, done-marker
+
+Guarantees needed by a 1000-node fleet:
+  * **atomic**: writes go to ``<root>/.tmp.step_X`` and are ``os.rename``d
+    into place only after the manifest is written — a reader never sees a
+    half-written step; a killed writer leaves only a ``.tmp`` to sweep.
+  * **restore-into-structure**: ``restore(..., like=pytree)`` checks
+    shapes/dtypes leaf-by-leaf and preserves static metadata (e.g.
+    ``QuantizedTensor.bits``) that lives in the treedef, not the arrays.
+  * **retention**: keep the newest ``keep`` steps, delete older ones (after
+    a successful save only — never drop the last good checkpoint first).
+  * **async**: ``CheckpointStore.save_async`` snapshots to host RAM
+    (``jax.device_get``) synchronously — O(seconds) — then writes in a
+    background thread so the train loop keeps stepping.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _to_savable(arr: np.ndarray) -> np.ndarray:
+    """npz can't round-trip ml_dtypes (bf16/f8 load back as void): store a
+    same-width unsigned view; restore views it back through the target dtype."""
+    if arr.dtype.kind not in "fiub":
+        return arr.view(np.dtype(f"u{arr.dtype.itemsize}"))
+    return arr
+
+
+def _flatten_with_paths(tree: Any) -> tuple[list[tuple[str, np.ndarray]], Any]:
+    leaves_paths, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in leaves_paths:
+        key = jax.tree_util.keystr(path)
+        out.append((key, _to_savable(np.asarray(leaf))))
+    return out, treedef
+
+
+def _step_dir(root: str, step: int) -> str:
+    return os.path.join(root, f"step_{step:08d}")
+
+
+def save(root: str, step: int, tree: Any, *, host_id: int = 0, n_hosts: int = 1,
+         extra: dict | None = None, keep: int = 3) -> str:
+    """Synchronous atomic save.  Returns the final step directory."""
+    os.makedirs(root, exist_ok=True)
+    tmp = os.path.join(root, f".tmp.step_{step:08d}.{host_id}")
+    final = _step_dir(root, step)
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    leaves, _ = _flatten_with_paths(tree)
+    shard = os.path.join(tmp, f"shard-{host_id:05d}-of-{n_hosts:05d}.npz")
+    np.savez(shard, **{k: v for k, v in leaves})
+    manifest = {
+        "step": step,
+        "n_hosts": n_hosts,
+        "leaves": [k for k, _ in leaves],
+        "extra": extra or {},
+    }
+    with open(os.path.join(tmp, "MANIFEST.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):  # re-save of the same step (restart double-write)
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    _apply_retention(root, keep)
+    return final
+
+
+def _apply_retention(root: str, keep: int) -> None:
+    steps = sorted(list_steps(root))
+    for s in steps[:-keep] if keep > 0 else []:
+        shutil.rmtree(_step_dir(root, s), ignore_errors=True)
+
+
+def list_steps(root: str) -> list[int]:
+    if not os.path.isdir(root):
+        return []
+    out = []
+    for name in os.listdir(root):
+        if name.startswith("step_") and os.path.exists(
+                os.path.join(root, name, "MANIFEST.json")):
+            out.append(int(name[5:]))
+    return sorted(out)
+
+
+def latest_step(root: str) -> int | None:
+    steps = list_steps(root)
+    return steps[-1] if steps else None
+
+
+def restore(root: str, like: Any, *, step: int | None = None, host_id: int = 0
+            ) -> tuple[Any, dict]:
+    """Restore into the structure (and static metadata) of ``like``.
+
+    -> (tree, extra).  Raises FileNotFoundError / ValueError on mismatch.
+    """
+    if step is None:
+        step = latest_step(root)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {root}")
+    d = _step_dir(root, step)
+    with open(os.path.join(d, "MANIFEST.json")) as f:
+        manifest = json.load(f)
+    shards = [fn for fn in os.listdir(d) if fn.startswith(f"shard-{host_id:05d}-")]
+    if not shards:
+        raise FileNotFoundError(f"host {host_id} shard missing in {d}")
+    data = np.load(os.path.join(d, shards[0]))
+    leaves_paths, treedef = jax.tree_util.tree_flatten_with_path(like)
+    new_leaves = []
+    for path, leaf in leaves_paths:
+        key = jax.tree_util.keystr(path)
+        if key not in data:
+            raise ValueError(f"checkpoint {d} missing leaf {key}")
+        arr = data[key]
+        if hasattr(leaf, "shape") and tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"{key}: shape {arr.shape} != expected {leaf.shape}")
+        want = getattr(leaf, "dtype", None)
+        if want is not None and arr.dtype.kind == "u" \
+                and np.dtype(want).kind not in "fiub" \
+                and np.dtype(want).itemsize == arr.dtype.itemsize:
+            arr = arr.view(np.dtype(want))  # bf16/f8 saved as uint view
+        new_leaves.append(jax.numpy.asarray(arr, dtype=want))
+    return jax.tree_util.tree_unflatten(treedef, new_leaves), manifest["extra"]
+
+
+class CheckpointStore:
+    """Async wrapper: snapshot-on-call, write-in-background, join-on-exit."""
+
+    def __init__(self, root: str, *, keep: int = 3, host_id: int = 0, n_hosts: int = 1):
+        self.root = root
+        self.keep = keep
+        self.host_id = host_id
+        self.n_hosts = n_hosts
+        self._thread: threading.Thread | None = None
+        self._error: BaseException | None = None
+
+    def save_async(self, step: int, tree: Any, extra: dict | None = None) -> None:
+        self.wait()  # one in-flight save at a time (bounded memory)
+        snapshot = jax.device_get(tree)   # sync: O(bytes) host copy
+
+        def work():
+            try:
+                save(self.root, step, snapshot, host_id=self.host_id,
+                     n_hosts=self.n_hosts, extra=extra, keep=self.keep)
+            except BaseException as e:  # surfaced on next wait()
+                self._error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def latest(self) -> int | None:
+        return latest_step(self.root)
+
+    def restore_latest(self, like: Any) -> tuple[Any, dict]:
+        self.wait()
+        return restore(self.root, like, host_id=self.host_id)

@@ -1,0 +1,10 @@
+# The paper's primary contribution: SigmaQuant — distribution-guided,
+# two-phase heterogeneous quantization under hard accuracy/resource targets.
+from .policy import BitPolicy, LayerInfo, Targets, Zone, classify_zone  # noqa: F401
+from .controller import (  # noqa: F401
+    ControllerConfig,
+    QuantEnv,
+    SigmaQuantController,
+    SigmaQuantResult,
+)
+from . import baselines, clustering, hardware, packing, quantizer, stats  # noqa: F401

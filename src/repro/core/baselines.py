@@ -1,0 +1,111 @@
+"""Baseline bit allocators the paper compares against (and one proxy extra).
+
+* ``uniform_policy``      — A8W{2,4,6,8} (paper's main baseline, Figs. 4-5).
+* ``bop_greedy_policy``   — the Table-I "Init Bits" style heuristic: greedily
+                            lower bits on the layers with the most MACs until
+                            a BOPs budget holds (no accuracy feedback).
+* ``hawq_proxy_policy``   — beyond-paper in-framework stand-in for HAWQ-style
+                            second-order sensitivity: Hutchinson estimate of
+                            the per-layer Hessian trace of the loss; bits are
+                            allocated by sorting trace * quantization error.
+"""
+from __future__ import annotations
+
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .policy import BitPolicy, LayerInfo
+
+VALID_BITS = (2, 4, 6, 8)
+
+
+def uniform_policy(layers: Sequence[LayerInfo], w_bits: int, act_bits: int = 8) -> BitPolicy:
+    return BitPolicy.uniform(layers, w_bits, act_bits)
+
+
+def bop_greedy_policy(
+    layers: Sequence[LayerInfo],
+    bop_budget: float,
+    act_bits: int = 8,
+) -> BitPolicy:
+    """Lower bits on the MAC-heaviest layers first until BOPs <= budget."""
+    policy = BitPolicy.uniform(layers, max(VALID_BITS), act_bits)
+    order = sorted(layers, key=lambda l: -l.macs)
+    for step in range(len(layers) * (len(VALID_BITS) - 1)):
+        if policy.bops() <= bop_budget:
+            break
+        l = order[step % len(order)]
+        if policy.bits[l.name] > min(VALID_BITS):
+            policy = policy.bumped([l.name], -2)
+    return policy
+
+
+def hutchinson_layer_traces(
+    loss_fn: Callable,
+    params,
+    quant_leaves: dict[str, tuple],  # name -> pytree path (jax.tree_util keypath)
+    key: jax.Array,
+    n_samples: int = 4,
+) -> dict[str, float]:
+    """Per-layer Hessian-trace estimates via Hutchinson's estimator.
+
+    trace(H_l) ~= E_v [ v^T H_l v ],  v ~ Rademacher, computed with one
+    hvp per sample over the whole pytree then reduced per layer.
+    """
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    paths = [p for p, _ in flat]
+    leaves = [l for _, l in flat]
+
+    def loss_flat(leaf_list):
+        return loss_fn(jax.tree_util.tree_unflatten(treedef, leaf_list))
+
+    traces = {name: 0.0 for name in quant_leaves}
+    for s in range(n_samples):
+        key, sub = jax.random.split(key)
+        vs = []
+        for i, leaf in enumerate(leaves):
+            sub2 = jax.random.fold_in(sub, i)
+            vs.append(jnp.where(jax.random.bernoulli(sub2, 0.5, leaf.shape), 1.0, -1.0).astype(leaf.dtype))
+        _, hvp = jax.jvp(jax.grad(loss_flat), (leaves,), (vs,))
+        for name, path in quant_leaves.items():
+            for i, p in enumerate(paths):
+                if p == path:
+                    traces[name] += float(jnp.vdot(vs[i], hvp[i])) / n_samples
+    return traces
+
+
+def hawq_proxy_policy(
+    layers: Sequence[LayerInfo],
+    traces: dict[str, float],
+    size_budget_mib: float,
+    act_bits: int = 8,
+) -> BitPolicy:
+    """Allocate bits by second-order sensitivity under a size budget.
+
+    Start at 8 bits everywhere; repeatedly lower the layer whose marginal
+    (trace-weighted quantization-noise increase) / (bytes saved) is smallest,
+    until the size budget holds — a greedy knapsack on the HAWQ objective
+    trace(H_l) * ||dW_l||^2 with dW^2 ∝ 2^(-2b).
+    """
+    policy = BitPolicy.uniform(layers, max(VALID_BITS), act_bits)
+
+    def marginal(l: LayerInfo, b_now: int) -> float:
+        tr = max(traces.get(l.name, 0.0), 0.0) + 1e-12
+        noise_now = 2.0 ** (-2 * b_now)
+        noise_next = 2.0 ** (-2 * (b_now - 2))
+        d_obj = tr * l.n_params * (noise_next - noise_now)
+        d_bytes = l.n_params * 2 / 8.0
+        return d_obj / d_bytes
+
+    guard = len(layers) * (len(VALID_BITS) - 1) + 1
+    while policy.model_size_mib() > size_budget_mib and guard > 0:
+        guard -= 1
+        movable = [l for l in layers if policy.bits[l.name] > min(VALID_BITS)]
+        if not movable:
+            break
+        pick = min(movable, key=lambda l: marginal(l, policy.bits[l.name]))
+        policy = policy.bumped([pick.name], -2)
+    return policy

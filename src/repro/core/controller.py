@@ -1,0 +1,226 @@
+"""The SigmaQuant two-phase controller (paper Algorithm 1, Figs. 2-3).
+
+The controller is model-agnostic: it talks to the network through a small
+``QuantEnv`` interface (evaluate / calibrate+QAT / statistics) so the same
+algorithm drives the paper-faithful CNN run, the LM QAT runs, and unit tests
+with synthetic environments.
+
+Phase 1 — adaptive clustering (§IV-B): size-penalized k-means over layer
+sigmas, clusters mapped (low sigma -> low bits) onto the bit-set, with the
+whole mapping shifted by the Fig. 2 zone direction; lambda grows 0.1/iter
+until at least one boundary enters its buffer.
+
+Phase 2 — KL refinement (§IV-C): per round, bump ``m`` layers by +/-2 bits
+chosen by the sigma+normalized-KL sensitivity score, recalibrate + short QAT,
+early-stop/revert on stagnation, finish when both strict targets hold.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Protocol
+
+import numpy as np
+
+from . import clustering
+from .policy import BitPolicy, LayerInfo, Targets, Zone, classify_zone
+
+__all__ = ["ControllerConfig", "QuantEnv", "SigmaQuantResult", "SigmaQuantController", "TraceEntry"]
+
+
+class QuantEnv(Protocol):
+    """What the controller needs from a quantizable model."""
+
+    def layer_infos(self) -> tuple[LayerInfo, ...]: ...
+
+    def sigmas(self) -> np.ndarray:
+        """Per-layer weight standard deviations (current float weights)."""
+
+    def sensitivities(self, policy: BitPolicy) -> np.ndarray:
+        """Per-layer sensitivity scores (sigma + normalized KL) at the policy's bits."""
+
+    def evaluate(self, policy: BitPolicy) -> float:
+        """Quantized-model quality, higher is better (top-1 acc, or mapped -loss)."""
+
+    def calibrate_and_qat(self, policy: BitPolicy, epochs: int) -> None:
+        """Recalibrate ranges and run a short QAT cycle under ``policy``."""
+
+    def resource(self, policy: BitPolicy) -> float:
+        """Resource metric per the objective: model size (MiB) or BOPs."""
+
+
+@dataclasses.dataclass(frozen=True)
+class ControllerConfig:
+    bit_set: tuple[int, ...] = (2, 4, 6, 8)
+    k: int = 4
+    lam0: float = 0.1
+    lam_step: float = 0.1
+    phase1_max_iters: int = 3      # paper: 1-3 rounds
+    phase2_max_iters: int = 40     # paper: 5-40 refinement rounds
+    layers_per_round: int = 2      # paper: m = 2
+    bit_step: int = 2              # paper: +/- 2 bits within {2,4,6,8}
+    phase1_qat_epochs: int = 4
+    phase2_qat_epochs: int = 2
+    stagnation_patience: int = 5   # §IV-C.4 early stopping / reversion
+    tabu_rounds: int = 4           # freeze a layer after a rejected move
+    size_aware_rank: bool = False  # beyond-paper: rank decreases by sens/bytes
+    objective: str = "size"        # "size" (MiB) or "bops"
+
+
+@dataclasses.dataclass
+class TraceEntry:
+    phase: int
+    step: int
+    acc: float
+    resource: float
+    zone: str
+    bits: dict[str, int]
+    note: str = ""
+
+
+@dataclasses.dataclass
+class SigmaQuantResult:
+    policy: BitPolicy
+    acc: float
+    resource: float
+    success: bool
+    abandoned: bool
+    trace: list[TraceEntry]
+    phase1_policy: BitPolicy | None = None
+    phase1_acc: float = float("nan")
+    phase1_resource: float = float("nan")
+
+
+class SigmaQuantController:
+    def __init__(self, env: QuantEnv, targets: Targets, config: ControllerConfig | None = None,
+                 log: Callable[[str], None] | None = None):
+        self.env = env
+        self.targets = targets
+        self.cfg = config or ControllerConfig()
+        self._log = log or (lambda s: None)
+
+    # -- helpers -------------------------------------------------------------
+    def _record(self, trace, phase, step, acc, res, policy, note=""):
+        zone = classify_zone(acc, res, self.targets).value
+        trace.append(TraceEntry(phase, step, acc, res, zone, dict(policy.bits), note))
+        self._log(f"[phase{phase} step{step}] acc={acc:.4f} res={res:.3f} zone={zone} {note}")
+
+    def _measure(self, policy):
+        return self.env.evaluate(policy), self.env.resource(policy)
+
+    # -- phases ---------------------------------------------------------------
+    def run(self) -> SigmaQuantResult:
+        cfg, t = self.cfg, self.targets
+        layers = self.env.layer_infos()
+        trace: list[TraceEntry] = []
+
+        # Alg. 1 lines 1-3: start from uniform 8-bit
+        policy = BitPolicy.uniform(layers, max(cfg.bit_set))
+        acc, res = self._measure(policy)
+        self._record(trace, 0, 0, acc, res, policy, "init uniform-8bit")
+
+        # ---- Phase 1: adaptive clustering (lines 4-20) ----
+        lam, i = cfg.lam0, 0
+        while (not t.acc_ok(acc, buffered=True)) and (not t.res_ok(res, buffered=True)) \
+                and i < cfg.phase1_max_iters:
+            i += 1
+            sig = self.env.sigmas()
+            labels, _ = clustering.adaptive_kmeans(sig, cfg.k, lam)
+            zone = classify_zone(acc, res, t)
+            if zone is Zone.ABANDON:
+                self._record(trace, 1, i, acc, res, policy, "abandon zone")
+                return SigmaQuantResult(policy, acc, res, False, True, trace)
+            shift = 1 if zone is Zone.BIT_INCREASE else (-1 if zone is Zone.BIT_DECREASE else 0)
+            bits_arr = clustering.assign_bits_to_clusters(labels, cfg.bit_set, shift=shift)
+            policy = BitPolicy.from_bits(layers, {l.name: int(b) for l, b in zip(layers, bits_arr)},
+                                         policy.act_bits)
+            self.env.calibrate_and_qat(policy, cfg.phase1_qat_epochs)
+            acc, res = self._measure(policy)
+            self._record(trace, 1, i, acc, res, policy, f"lambda={lam:.2f} shift={shift:+d}")
+            if t.acc_ok(acc, buffered=True) or t.res_ok(res, buffered=True):
+                break
+            lam += cfg.lam_step
+
+        if (not t.acc_ok(acc, buffered=True)) and (not t.res_ok(res, buffered=True)):
+            # lines 18-20: give up — infeasible
+            self._record(trace, 1, i, acc, res, policy, "infeasible — abandoned")
+            return SigmaQuantResult(policy, acc, res, False, True, trace)
+
+        phase1_policy, phase1_acc, phase1_res = policy, acc, res
+
+        # ---- Phase 2: iterative KL refinement (lines 21-31) ----
+        best = (policy, acc, res)
+        stagnant, j = 0, 0
+        tabu: dict[str, int] = {}  # layer -> round until which it is frozen
+        lo, hi = min(cfg.bit_set), max(cfg.bit_set)
+        sizes = np.asarray([l.n_params for l in layers], dtype=np.float64)
+        while j < cfg.phase2_max_iters and not (t.acc_ok(acc) and t.res_ok(res)):
+            j += 1
+            sens = np.asarray(self.env.sensitivities(policy), dtype=np.float64)
+            bits_vec = policy.bit_vector()
+            names = [l.name for l in layers]
+            free = [k for k in range(len(names)) if tabu.get(names[k], 0) < j]
+            if not t.acc_ok(acc):
+                # raise bits on the most sensitive layers not already at max
+                cand = [k for k in sorted(free, key=lambda k: -sens[k]) if bits_vec[k] < hi]
+                delta = +cfg.bit_step
+            else:
+                # shrink the least harmful layers not already at min
+                if cfg.size_aware_rank:
+                    rank_key = sens / np.maximum(sizes, 1.0)  # sensitivity per byte saved
+                else:
+                    rank_key = sens
+                cand = [k for k in sorted(free, key=lambda k: rank_key[k]) if bits_vec[k] > lo]
+                delta = -cfg.bit_step
+            chosen = cand[: cfg.layers_per_round]
+            if not chosen:  # nowhere to move — bit ladder / tabu exhausted
+                self._record(trace, 2, j, acc, res, policy, "no movable layers")
+                break
+            prev = (policy, acc, res)
+            policy = policy.bumped([names[k] for k in chosen], delta)
+            move = f"{delta:+d}b on {[names[k] for k in chosen]}"
+            self.env.calibrate_and_qat(policy, cfg.phase2_qat_epochs)
+            acc, res = self._measure(policy)
+
+            # §IV-C.4 revert-on-failure: a move that worsens the constraint
+            # violation is rejected and its layers are tabu for a few rounds
+            # (prevents increase/decrease oscillation on the same layers).
+            if self._badness(acc, res) > self._badness(prev[1], prev[2]) + 1e-12:
+                self._record(trace, 2, j, acc, res, policy, move + " — rejected")
+                for k in chosen:
+                    tabu[names[k]] = j + cfg.tabu_rounds
+                policy, acc, res = prev
+                stagnant += 1
+            else:
+                self._record(trace, 2, j, acc, res, policy, move)
+                if self._better(acc, res, best[1], best[2]):
+                    best = (policy, acc, res)
+                    stagnant = 0
+                else:
+                    stagnant += 1
+            if stagnant >= cfg.stagnation_patience:
+                policy, acc, res = best
+                self._record(trace, 2, j, acc, res, policy, "stagnated — reverted to best")
+                break
+
+        success = t.acc_ok(acc) and t.res_ok(res)
+        if not success and self._better(best[1], best[2], acc, res):
+            policy, acc, res = best
+        return SigmaQuantResult(policy, acc, res, success, False, trace,
+                                phase1_policy, phase1_acc, phase1_res)
+
+    def _badness(self, acc: float, res: float) -> float:
+        """Total (normalized) constraint violation — 0 inside the target zone."""
+        t = self.targets
+        va = max(0.0, t.acc_t - acc)
+        vr = max(0.0, (res - t.res_t) / max(t.res_t, 1e-9))
+        return va + vr
+
+    def _better(self, acc_a, res_a, acc_b, res_b) -> bool:
+        """Lexicographic-ish ordering: constraint violation first, then slack."""
+        ba, bb = self._badness(acc_a, res_a), self._badness(acc_b, res_b)
+        if abs(ba - bb) > 1e-12:
+            return ba < bb
+        # tie-break: smaller resource wins, then higher accuracy
+        if abs(res_a - res_b) > 1e-12:
+            return res_a < res_b
+        return acc_a > acc_b

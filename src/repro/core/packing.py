@@ -1,0 +1,81 @@
+"""Sub-byte weight packing for the serving path.
+
+Signed b-bit integer levels are packed into int8 container lanes:
+
+    bits=2 -> 4 values / byte
+    bits=4 -> 2 values / byte
+    bits=6 -> 1 value  / byte  (6-in-8; TPU vector loads are byte granular,
+                                non-power-of-two lane packing is not viable —
+                                see DESIGN.md §2 "changed assumptions")
+    bits=8 -> 1 value  / byte
+
+Packing happens along the *last* axis (the contraction axis of the matmul so
+a packed block unpacks into contiguous K).  The padded length is recorded by
+the caller via the original shape.  All ops are pure jnp (usable inside jit
+and on any backend) and exactly invertible: unpack(pack(q)) == q.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+#: values per int8 container byte for each supported bitwidth
+LANES = {2: 4, 4: 2, 6: 1, 8: 1}
+
+
+def container_bytes(shape: tuple[int, ...], bits: int) -> int:
+    """Bytes the packed buffer occupies in HBM (container accounting)."""
+    lanes = LANES[bits]
+    *lead, k = shape
+    k_pad = -(-k // lanes)
+    n = 1
+    for d in lead:
+        n *= d
+    return n * k_pad
+
+
+def logical_bytes(shape: tuple[int, ...], bits: int) -> float:
+    """Paper-metric bytes: n_params * bits / 8 (Model Size in Tables II/III)."""
+    n = 1
+    for d in shape:
+        n *= d
+    return n * bits / 8.0
+
+
+def pack(levels: jax.Array, bits: int) -> jax.Array:
+    """Pack signed b-bit integer levels (int32/int8 valued) into int8 lanes."""
+    if bits not in LANES:
+        raise ValueError(f"bits must be one of {sorted(LANES)}, got {bits}")
+    lanes = LANES[bits]
+    lev = levels.astype(jnp.int32)
+    if lanes == 1:
+        return lev.astype(jnp.int8)
+    k = lev.shape[-1]
+    pad = (-k) % lanes
+    if pad:
+        lev = jnp.pad(lev, [(0, 0)] * (lev.ndim - 1) + [(0, pad)])
+    grouped = lev.reshape(*lev.shape[:-1], -1, lanes)
+    mask = (1 << bits) - 1
+    out = jnp.zeros(grouped.shape[:-1], dtype=jnp.int32)
+    for lane in range(lanes):
+        out = out | ((grouped[..., lane] & mask) << (bits * lane))
+    return out.astype(jnp.uint8).astype(jnp.int8)
+
+
+def unpack(packed: jax.Array, bits: int, k: int) -> jax.Array:
+    """Inverse of :func:`pack`; ``k`` is the original last-axis length."""
+    if bits not in LANES:
+        raise ValueError(f"bits must be one of {sorted(LANES)}, got {bits}")
+    lanes = LANES[bits]
+    if lanes == 1:
+        return packed.astype(jnp.int32)[..., :k]
+    u = packed.astype(jnp.uint8).astype(jnp.int32)
+    mask = (1 << bits) - 1
+    sign = 1 << (bits - 1)
+    vals = []
+    for lane in range(lanes):
+        v = (u >> (bits * lane)) & mask
+        v = jnp.where(v >= sign, v - (1 << bits), v)  # sign extend
+        vals.append(v)
+    out = jnp.stack(vals, axis=-1).reshape(*u.shape[:-1], -1)
+    return out[..., :k]

@@ -1,0 +1,181 @@
+"""Bitwidth policies, layer registries, and resource accounting.
+
+A ``BitPolicy`` is the artifact SigmaQuant produces: an ordered mapping from
+quantizable-layer name -> weight bits (plus a global activation bitwidth).
+It is mesh- and framework-independent; the quant/ package applies it to a
+param pytree, and core/hardware.py prices it on the shift-add model.
+
+Resource metrics (paper §V, §VI-D):
+  * model size  = sum_l n_params(l) * B_w(l) / 8           [bytes; "logical"]
+  * container   = sum_l packed container bytes              [bytes HBM moves]
+  * BOPs        = sum_l B_w(l) * B_a(l) * MACs(l)           [bit operations]
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import json
+from typing import Iterable, Mapping
+
+import numpy as np
+
+from . import packing
+
+VALID_BITS = (2, 4, 6, 8)
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerInfo:
+    """Static description of one quantizable layer."""
+
+    name: str
+    shape: tuple[int, ...]
+    macs: int  # multiply-accumulates per forward pass of the reference batch
+    kind: str = "dense"  # dense | embedding | conv | expert
+
+    @property
+    def n_params(self) -> int:
+        n = 1
+        for d in self.shape:
+            n *= d
+        return n
+
+
+@dataclasses.dataclass
+class BitPolicy:
+    """Ordered per-layer weight bits + global activation bits."""
+
+    layers: tuple[LayerInfo, ...]
+    bits: dict[str, int]
+    act_bits: int = 8
+
+    # -- constructors -------------------------------------------------------
+    @classmethod
+    def uniform(cls, layers: Iterable[LayerInfo], w_bits: int, act_bits: int = 8) -> "BitPolicy":
+        layers = tuple(layers)
+        return cls(layers, {l.name: int(w_bits) for l in layers}, act_bits)
+
+    @classmethod
+    def from_bits(cls, layers: Iterable[LayerInfo], bits: Mapping[str, int], act_bits: int = 8) -> "BitPolicy":
+        layers = tuple(layers)
+        missing = [l.name for l in layers if l.name not in bits]
+        if missing:
+            raise KeyError(f"policy missing layers: {missing[:5]}")
+        return cls(layers, {l.name: int(bits[l.name]) for l in layers}, act_bits)
+
+    # -- mutation (functional) ----------------------------------------------
+    def with_bits(self, name: str, bits: int) -> "BitPolicy":
+        if bits not in VALID_BITS:
+            raise ValueError(f"bits {bits} not in {VALID_BITS}")
+        new = dict(self.bits)
+        new[name] = bits
+        return BitPolicy(self.layers, new, self.act_bits)
+
+    def bumped(self, names: Iterable[str], delta: int) -> "BitPolicy":
+        """+/- delta bits on the named layers, clamped to the valid bit-set."""
+        new = dict(self.bits)
+        lo, hi = min(VALID_BITS), max(VALID_BITS)
+        for n in names:
+            new[n] = int(np.clip(new[n] + delta, lo, hi))
+        return BitPolicy(self.layers, new, self.act_bits)
+
+    # -- accounting ----------------------------------------------------------
+    def model_size_bytes(self) -> float:
+        return sum(packing.logical_bytes(l.shape, self.bits[l.name]) for l in self.layers)
+
+    def model_size_mib(self) -> float:
+        return self.model_size_bytes() / 2**20
+
+    def container_bytes(self) -> int:
+        return sum(packing.container_bytes(l.shape, self.bits[l.name]) for l in self.layers)
+
+    def bops(self) -> float:
+        return float(sum(self.bits[l.name] * self.act_bits * l.macs for l in self.layers))
+
+    def bit_vector(self) -> np.ndarray:
+        return np.asarray([self.bits[l.name] for l in self.layers], dtype=np.int64)
+
+    def mean_bits(self) -> float:
+        sizes = np.asarray([l.n_params for l in self.layers], dtype=np.float64)
+        return float((self.bit_vector() * sizes).sum() / sizes.sum())
+
+    # -- io -------------------------------------------------------------------
+    def to_json(self) -> str:
+        return json.dumps(
+            {
+                "act_bits": self.act_bits,
+                "bits": self.bits,
+                "layers": [dataclasses.asdict(l) for l in self.layers],
+            },
+            indent=2,
+            default=lambda o: list(o) if isinstance(o, tuple) else o,
+        )
+
+    @classmethod
+    def from_json(cls, s: str) -> "BitPolicy":
+        d = json.loads(s)
+        layers = tuple(
+            LayerInfo(x["name"], tuple(x["shape"]), int(x["macs"]), x.get("kind", "dense"))
+            for x in d["layers"]
+        )
+        return cls(layers, {k: int(v) for k, v in d["bits"].items()}, int(d["act_bits"]))
+
+
+# ---------------------------------------------------------------------------
+# Decision zones (paper Fig. 2)
+# ---------------------------------------------------------------------------
+
+
+class Zone(enum.Enum):
+    TARGET = "target"            # both constraints met
+    BIT_INCREASE = "bit_increase"  # accuracy low, size comfortably under budget
+    BIT_DECREASE = "bit_decrease"  # accuracy fine, size over budget
+    ITERATION = "iteration"      # exactly one constraint inside its buffer
+    TRANSITION = "transition"    # between phase-1 zones; keep current trend
+    ABANDON = "abandon"          # both hopeless (far outside buffers)
+
+
+@dataclasses.dataclass(frozen=True)
+class Targets:
+    """User boundary conditions (§I): accuracy >= acc_t, resource <= res_t."""
+
+    acc_t: float
+    res_t: float
+    acc_buffer: float = 0.01   # Delta A
+    res_buffer: float = 0.05   # Delta M (fraction of res_t)
+    abandon_factor: float = 4.0  # "anywhere near acceptable" multiplier
+
+    def acc_ok(self, acc: float, *, buffered: bool = False) -> bool:
+        slack = self.acc_buffer if buffered else 0.0
+        return acc >= self.acc_t - slack
+
+    def res_ok(self, res: float, *, buffered: bool = False) -> bool:
+        slack = self.res_buffer * self.res_t if buffered else 0.0
+        return res <= self.res_t + slack
+
+
+def classify_zone(acc: float, res: float, t: Targets) -> Zone:
+    """Fig. 2 decision zones from the current (accuracy, resource) point.
+
+    TARGET       both strict constraints hold.
+    ABANDON      both violated far beyond their buffers (hopeless).
+    BIT_INCREASE accuracy clearly low while size is strictly inside budget.
+    BIT_DECREASE size clearly over while accuracy is strictly satisfied.
+    ITERATION    exactly one metric inside its buffer (Phase-2 territory).
+    TRANSITION   everything else (keep the current Phase-1 trend).
+    """
+    acc_strict, res_strict = t.acc_ok(acc), t.res_ok(res)
+    acc_buf, res_buf = t.acc_ok(acc, buffered=True), t.res_ok(res, buffered=True)
+    if acc_strict and res_strict:
+        return Zone.TARGET
+    far_acc = acc < t.acc_t - t.abandon_factor * max(t.acc_buffer, 1e-9)
+    far_res = res > t.res_t * (1.0 + t.abandon_factor * max(t.res_buffer, 1e-9))
+    if far_acc and far_res:
+        return Zone.ABANDON
+    if not acc_buf and res_strict:
+        return Zone.BIT_INCREASE
+    if acc_strict and not res_buf:
+        return Zone.BIT_DECREASE
+    if acc_buf != res_buf:
+        return Zone.ITERATION
+    return Zone.TRANSITION

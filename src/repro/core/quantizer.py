@@ -1,0 +1,165 @@
+"""Uniform symmetric/asymmetric quantizers + straight-through fake-quant.
+
+Implements the paper's quantization scheme (SigmaQuant §III-A, §IV-C):
+
+  * weights:     symmetric min-max (per output channel) or k*sigma statistical
+                 scaling, signed b-bit levels  q in [-Q, Q], Q = 2^(b-1) - 1
+  * activations: asymmetric, 99.9-percentile clipped, 8-bit by default
+
+All functions are pure jnp and jit/vmap/scan friendly.  ``bits`` may be a
+traced scalar so that per-layer bitwidths can ride through ``lax.scan`` over
+stacked layer parameters (the QAT path).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+ScaleMode = Literal["max", "sigma"]
+
+#: paper's bit-set (Alg. 1): valid weight bitwidths.
+VALID_BITS = (2, 4, 6, 8)
+
+
+def qmax(bits: jax.Array | int) -> jax.Array:
+    """Largest positive level for signed symmetric quantization: 2^(b-1)-1."""
+    bits = jnp.asarray(bits, dtype=jnp.float32)
+    return jnp.exp2(bits - 1.0) - 1.0
+
+
+def _reduce_axes(w: jax.Array, channel_axis: int | None) -> tuple[int, ...]:
+    # 1-D tensors (biases, norm gains) quantize per-tensor: a per-"channel"
+    # scale there would mean one scale per element == lossless identity.
+    if channel_axis is None or w.ndim <= 1:
+        return tuple(range(w.ndim))
+    channel_axis = channel_axis % w.ndim
+    return tuple(a for a in range(w.ndim) if a != channel_axis)
+
+
+def weight_scale(
+    w: jax.Array,
+    bits: jax.Array | int,
+    *,
+    channel_axis: int | None = -1,
+    mode: ScaleMode = "max",
+    sigma_k: float = 3.0,
+) -> jax.Array:
+    """Quantization step Delta per §III-A.1.
+
+    ``max``   : Delta = max|w| / Q          (paper's deployed scheme, per-channel)
+    ``sigma`` : Delta = k * std(w) / Q      (statistical scaling)
+
+    Returns an array broadcastable against ``w`` (keepdims layout).
+    """
+    axes = _reduce_axes(w, channel_axis)
+    q = qmax(bits)
+    if mode == "max":
+        amax = jnp.max(jnp.abs(w), axis=axes, keepdims=True)
+    elif mode == "sigma":
+        amax = sigma_k * jnp.std(w, axis=axes, keepdims=True)
+    else:  # pragma: no cover - guarded by Literal
+        raise ValueError(f"unknown scale mode {mode!r}")
+    # Guard all-zero channels; scale must stay strictly positive and must not
+    # underflow to a subnormal (XLA flushes subnormals to zero -> 0/0 NaNs).
+    amax = jnp.maximum(amax, 1e-12)
+    return (amax / q).astype(jnp.float32)
+
+
+def quantize(w: jax.Array, scale: jax.Array, bits: jax.Array | int) -> jax.Array:
+    """w -> integer levels (stored in int32; packing is a separate concern)."""
+    q = qmax(bits)
+    lev = jnp.clip(jnp.round(w / scale), -q, q)
+    return lev.astype(jnp.int32)
+
+
+def dequantize(levels: jax.Array, scale: jax.Array) -> jax.Array:
+    return levels.astype(jnp.float32) * scale
+
+
+def quantize_dequantize(
+    w: jax.Array,
+    bits: jax.Array | int,
+    *,
+    channel_axis: int | None = -1,
+    mode: ScaleMode = "max",
+    sigma_k: float = 3.0,
+) -> jax.Array:
+    """Round-trip w through the b-bit grid (no gradient tricks)."""
+    scale = weight_scale(w, bits, channel_axis=channel_axis, mode=mode, sigma_k=sigma_k)
+    q = qmax(bits)
+    lev = jnp.clip(jnp.round(w / scale), -q, q)
+    return (lev * scale).astype(w.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Straight-through estimator fake-quant (QAT forward op)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def fake_quant(w: jax.Array, bits: jax.Array, channel_axis: int | None, mode: ScaleMode):
+    """STE fake-quant: forward = quantize-dequantize, backward = clipped identity.
+
+    ``bits`` is a (possibly traced) scalar so per-layer bitwidths can be carried
+    through ``lax.scan``. Gradients flow where |w| <= clip range (standard STE
+    with range masking, as in LSQ-style QAT).
+    """
+    return _fq_fwd(w, bits, channel_axis, mode)[0]
+
+
+def _fq_fwd(w, bits, channel_axis, mode):
+    scale = weight_scale(w, bits, channel_axis=channel_axis, mode=mode)
+    q = qmax(bits)
+    lev = jnp.clip(jnp.round(w / scale), -q, q)
+    out = (lev * scale).astype(w.dtype)
+    inside = (jnp.abs(w) <= (q * scale)).astype(w.dtype)
+    return out, inside
+
+
+def _fq_bwd(channel_axis, mode, res, g):
+    inside = res
+    return (g * inside, jnp.zeros(()))
+
+
+fake_quant.defvjp(_fq_fwd, _fq_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Activation quantization (asymmetric, percentile clipped) — §IV-C
+# ---------------------------------------------------------------------------
+
+
+def activation_range(x: jax.Array, percentile: float = 99.9) -> tuple[jax.Array, jax.Array]:
+    """Asymmetric clip range from the +/- percentile of the batch (calibration)."""
+    lo = jnp.percentile(x, 100.0 - percentile)
+    hi = jnp.percentile(x, percentile)
+    hi = jnp.maximum(hi, lo + jnp.finfo(jnp.float32).tiny)
+    return lo.astype(jnp.float32), hi.astype(jnp.float32)
+
+
+def fake_quant_activation(
+    x: jax.Array,
+    bits: jax.Array | int = 8,
+    *,
+    lo: jax.Array | None = None,
+    hi: jax.Array | None = None,
+    percentile: float = 99.9,
+) -> jax.Array:
+    """Asymmetric b-bit fake-quant of activations with percentile clipping.
+
+    If (lo, hi) calibration constants are not given they are computed on the
+    fly (batch statistics) — fine for QAT, deterministic for serving when the
+    calibrated constants are passed in.
+    """
+    if lo is None or hi is None:
+        lo, hi = activation_range(x, percentile)
+    levels = jnp.exp2(jnp.asarray(bits, jnp.float32)) - 1.0
+    scale = (hi - lo) / levels
+    scale = jnp.maximum(scale, jnp.finfo(jnp.float32).tiny)
+    q = jnp.round((jnp.clip(x, lo, hi) - lo) / scale)
+    y = q * scale + lo
+    # STE: identity gradient inside the clip range.
+    return x + jax.lax.stop_gradient(y.astype(x.dtype) - x)

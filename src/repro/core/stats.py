@@ -1,0 +1,108 @@
+"""Distribution statistics: sigma and KL divergence (SigmaQuant §III-A.2/3).
+
+The paper treats quantization as *distribution fitting*: the empirical weight
+distribution p(w) (Dirac mixture = normalized histogram) is approximated by
+the discrete distribution induced by the quantized weights, and the mismatch
+is measured with D_KL(p || p~)  (Eq. 1).
+
+A KL between Dirac mixtures is ill-defined without binning; following the
+standard calibration treatment we histogram both distributions over the same
+fixed symmetric support with epsilon smoothing (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import quantizer
+
+# 256 bins == the int8 reference grid; aligning bin width with the finest
+# quantization grid keeps D_KL magnitudes comparable to the paper's Table I
+# (a finer histogram inflates every D_KL by the empty-bin mass).
+DEFAULT_BINS = 256
+_EPS = 1e-10
+
+
+def layer_sigma(w: jax.Array) -> jax.Array:
+    """The paper's first-order sensitivity proxy: std of the layer weights."""
+    return jnp.std(w.astype(jnp.float32))
+
+
+def _histogram(w: jax.Array, lo: jax.Array, hi: jax.Array, bins: int) -> jax.Array:
+    """Normalized histogram of ``w`` over [lo, hi] with ``bins`` bins (jit-safe)."""
+    w = w.reshape(-1).astype(jnp.float32)
+    width = (hi - lo) / bins
+    idx = jnp.clip(((w - lo) / width).astype(jnp.int32), 0, bins - 1)
+    counts = jnp.zeros((bins,), jnp.float32).at[idx].add(1.0)
+    return counts / jnp.maximum(counts.sum(), 1.0)
+
+
+def kl_divergence(p: jax.Array, q: jax.Array, eps: float = _EPS) -> jax.Array:
+    """D_KL(p || q) with additive smoothing; >= 0, 0 iff p == q."""
+    p = p + eps
+    q = q + eps
+    p = p / p.sum()
+    q = q / q.sum()
+    return jnp.sum(p * (jnp.log(p) - jnp.log(q)))
+
+
+def quantization_kl(
+    w: jax.Array,
+    bits: jax.Array | int,
+    *,
+    bins: int = DEFAULT_BINS,
+    channel_axis: int | None = -1,
+    mode: quantizer.ScaleMode = "max",
+) -> jax.Array:
+    """D_KL(p_l || p~_l): float weight histogram vs dequantized-weight histogram.
+
+    Both histograms share the same symmetric support [-max|w|, max|w|] so the
+    divergence purely reflects the level-set approximation (Eq. 1).
+    """
+    w32 = w.astype(jnp.float32)
+    amax = jnp.maximum(jnp.max(jnp.abs(w32)), jnp.finfo(jnp.float32).tiny)
+    wq = quantizer.quantize_dequantize(w32, bits, channel_axis=channel_axis, mode=mode)
+    p = _histogram(w32, -amax, amax, bins)
+    q = _histogram(wq, -amax, amax, bins)
+    return kl_divergence(p, q)
+
+
+def normalized_kl(
+    w: jax.Array,
+    bits: jax.Array | int,
+    *,
+    bins: int = DEFAULT_BINS,
+    channel_axis: int | None = -1,
+    ref_bits: int = 2,
+) -> jax.Array:
+    """D^_KL in [0, 1]: KL at ``bits`` divided by the worst-case (2-bit) KL.
+
+    §IV-C asks for a normalized divergence "bounded between 0 and 1"; since
+    KL decreases monotonically with bits, only the *minimum*-bit KL bounds
+    the ratio at 1 (the paper's "divide by the 8-bit baseline" wording would
+    make robust layers explode: KL(8) ~ 0 in the denominator inverted the
+    Phase-2 ranking in practice — a layer harmless at every bitwidth scored
+    600x more sensitive than the genuinely fragile ones; see DESIGN.md §2
+    changed-assumptions).
+    """
+    kl_b = quantization_kl(w, bits, bins=bins, channel_axis=channel_axis)
+    kl_ref = quantization_kl(w, ref_bits, bins=bins, channel_axis=channel_axis)
+    return kl_b / jnp.maximum(kl_ref, 1e-6)
+
+
+def sensitivity_score(
+    w: jax.Array,
+    bits: jax.Array | int,
+    *,
+    sigma_weight: float = 0.5,
+    sigma_ref: float = 0.05,
+    bins: int = DEFAULT_BINS,
+) -> jax.Array:
+    """Phase-2 sensitivity (§IV-C.1): combines sigma and normalized KL.
+
+    score = (1 - a) * D^_KL + a * (sigma / sigma_ref), both terms O(1).
+    High score => layer is fragile => raise its bits first / lower it last.
+    """
+    dkl = normalized_kl(w, bits, bins=bins)
+    sig = layer_sigma(w) / sigma_ref
+    return (1.0 - sigma_weight) * dkl + sigma_weight * sig

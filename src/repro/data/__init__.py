@@ -1,0 +1,2 @@
+from .pipeline import TokenTask, PipelineState, host_batch, global_batch  # noqa: F401
+from .images import ImageTask  # noqa: F401

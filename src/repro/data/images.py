@@ -1,0 +1,51 @@
+"""Teacher-generated synthetic image classification (CNN faithful-repro path).
+
+A fixed random teacher (conv stem + linear head) labels class-conditioned
+Gaussian-blob images.  Labels are a real function of pixels, so (i) a student
+CNN can learn them and (ii) quantizing the student genuinely degrades/recovers
+accuracy — the property the SigmaQuant controller experiments need.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ImageTask:
+    n_classes: int = 20
+    img_size: int = 16
+    channels: int = 3
+    seed: int = 0
+    noise: float = 0.35
+
+    def _prototypes(self) -> jax.Array:
+        """Spatially smooth class prototypes (low-res noise, upsampled) so the
+        ±1-pixel jitter keeps images correlated with their class."""
+        key = jax.random.key(self.seed ^ 0x1A6E)
+        lo = self.img_size // 4
+        coarse = jax.random.normal(key, (self.n_classes, lo, lo, self.channels))
+        return 2.0 * jax.image.resize(
+            coarse, (self.n_classes, self.img_size, self.img_size, self.channels),
+            method="linear")
+
+    def batch(self, key: jax.Array, batch: int) -> tuple[jax.Array, jax.Array]:
+        """-> (images (B,H,W,C) float32, labels (B,) int32)."""
+        protos = self._prototypes()
+        kl, kn, kj = jax.random.split(key, 3)
+        labels = jax.random.randint(kl, (batch,), 0, self.n_classes)
+        base = protos[labels]
+        noise = jax.random.normal(kn, base.shape) * self.noise
+        # mild spatial jitter: roll each image by -1/0/+1 pixels
+        shifts = jax.random.randint(kj, (batch, 2), -1, 2)
+        imgs = jax.vmap(lambda im, sh: jnp.roll(im, sh, axis=(0, 1)))(base + noise, shifts)
+        return imgs.astype(jnp.float32), labels.astype(jnp.int32)
+
+    def batch_at(self, step: int, batch: int) -> tuple[jax.Array, jax.Array]:
+        return self.batch(jax.random.fold_in(jax.random.key(self.seed), step), batch)
+
+    def eval_set(self, n: int = 512) -> tuple[jax.Array, jax.Array]:
+        """Fixed held-out evaluation set (step -1 namespace)."""
+        return self.batch(jax.random.fold_in(jax.random.key(self.seed), 2**31 - 1), n)

@@ -1,0 +1,45 @@
+"""Jit'd wrapper for the fused fake-quant kernel with impl dispatch + STE."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quantizer
+from .kernel import fake_quant_pallas
+from .ref import fake_quant_ref
+
+
+def fake_quant(w: jax.Array, bits, *, impl: str = "auto") -> jax.Array:
+    """Forward-only fused fake-quant (per-output-channel max scaling)."""
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "xla"
+    scale = quantizer.weight_scale(w, bits, channel_axis=-1)
+    if w.ndim != 2 or impl == "xla":
+        return fake_quant_ref(w, scale.reshape((1,) * (w.ndim - 1) + (-1,)), bits)
+    if impl == "pallas":
+        return fake_quant_pallas(w, scale.reshape(1, -1), jnp.asarray(bits))
+    if impl == "interpret":
+        return fake_quant_pallas(w, scale.reshape(1, -1), jnp.asarray(bits), interpret=True)
+    raise ValueError(f"unknown impl {impl!r}")
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def fake_quant_ste(w: jax.Array, bits, impl: str = "auto"):
+    """STE wrapper: forward = fused fake-quant, backward = masked identity."""
+    return fake_quant(w, bits, impl=impl)
+
+
+def _fwd(w, bits, impl):
+    scale = quantizer.weight_scale(w, bits, channel_axis=-1)
+    q = quantizer.qmax(bits)
+    inside = (jnp.abs(w) <= q * scale).astype(w.dtype)
+    return fake_quant(w, bits, impl=impl), inside
+
+
+def _bwd(impl, inside, g):
+    return (g * inside, None)
+
+
+fake_quant_ste.defvjp(_fwd, _bwd)

@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for fused fake-quant (QAT forward hot op)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def fake_quant_ref(w: jax.Array, scale: jax.Array, bits) -> jax.Array:
+    """clip(round(w / scale), -q, q) * scale with q = 2^(b-1) - 1.
+
+    ``scale`` broadcasts against w ((1, N) per-output-channel); ``bits`` may
+    be a traced scalar (per-layer bits under lax.scan).
+    """
+    q = jnp.exp2(jnp.asarray(bits, jnp.float32) - 1.0) - 1.0
+    lev = jnp.clip(jnp.round(w.astype(jnp.float32) / scale), -q, q)
+    return (lev * scale).astype(w.dtype)

@@ -1,0 +1,109 @@
+"""Pallas TPU kernel: packed low-bit weight x float activation GEMM.
+
+    y[M, N] = x[M, K] @ dequant(W_packed[N, K/lanes], scale[N]).T
+
+The paper's MAC (8-bit x n-bit shift-add) maps on TPU to *dequant-in-kernel*:
+the packed int8 lanes are the only weight bytes that cross HBM->VMEM, so a
+W4 layer moves half the bytes of a W8 layer — the decode-roofline win that
+stands in for the ASIC's cycle savings (DESIGN.md §2).
+
+Blocking: grid (M/bm, N/bn, K/bk), K innermost ("arbitrary") so the f32
+output block is revisited and accumulated in place in VMEM.  bm = bn = 128
+aligns the MXU; bk is chosen so x-block + unpacked w-block + out-block fit
+VMEM comfortably (default 512 -> ~0.8 MB f32 working set per step).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.packing import LANES
+
+
+def _unpack_block(packed: jax.Array, bits: int, bk: int) -> jax.Array:
+    """int8 (bn, bk/lanes) -> int32 levels (bn, bk), sign-extended."""
+    lanes = LANES[bits]
+    if lanes == 1:
+        return packed.astype(jnp.int32)
+    u = packed.astype(jnp.uint8).astype(jnp.int32)
+    mask = (1 << bits) - 1
+    sign = 1 << (bits - 1)
+    parts = []
+    for lane in range(lanes):
+        v = (u >> (bits * lane)) & mask
+        parts.append(jnp.where(v >= sign, v - (1 << bits), v))
+    # lane-interleaved along K: value k sits at (byte k//lanes, lane k%lanes)
+    return jnp.stack(parts, axis=-1).reshape(packed.shape[0], bk)
+
+
+def _kernel(x_ref, packed_ref, scale_ref, out_ref, *, bits: int, bk: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    levels = _unpack_block(packed_ref[...], bits, bk)          # (bn, bk) int32
+    w = levels.astype(jnp.float32) * scale_ref[...].T           # (bn, bk) f32
+    x = x_ref[...].astype(jnp.float32)                          # (bm, bk)
+    out_ref[...] += jax.lax.dot_general(
+        x, w, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bits", "k", "bm", "bn", "bk", "interpret", "out_dtype")
+)
+def quant_matmul_pallas(
+    x: jax.Array,        # (M, K) float32/bfloat16
+    packed: jax.Array,   # (N, K/lanes) int8
+    scale: jax.Array,    # (1, N) f32
+    *,
+    bits: int,
+    k: int,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 512,
+    interpret: bool = False,
+    out_dtype=None,
+) -> jax.Array:
+    m, kx = x.shape
+    n = packed.shape[0]
+    lanes = LANES[bits]
+    assert kx == k, (kx, k)
+    out_dtype = out_dtype or x.dtype
+
+    bm = min(bm, _round_up(m, 8))
+    bk = min(bk, k)
+    bn = min(bn, n)
+    if k % bk or bk % lanes:
+        raise ValueError(f"K={k} must be divisible by bk={bk} (and bk by lanes={lanes})")
+    if n % bn:
+        raise ValueError(f"N={n} must be divisible by bn={bn}")
+    m_pad = _round_up(m, bm)
+    if m_pad != m:
+        x = jnp.pad(x, ((0, m_pad - m), (0, 0)))
+
+    grid = (m_pad // bm, n // bn, k // bk)
+    out = pl.pallas_call(
+        functools.partial(_kernel, bits=bits, bk=bk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bn, bk // lanes), lambda i, j, kk: (j, kk)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m_pad, n), jnp.float32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")
+        ),
+        interpret=interpret,
+    )(x, packed, scale)
+    return out[:m].astype(out_dtype)
+
+
+def _round_up(v: int, m: int) -> int:
+    return -(-v // m) * m

@@ -1,0 +1,61 @@
+"""Jit'd public wrapper for the quantized matmul with impl dispatch.
+
+impl:
+  "xla"     unpack -> dequant -> jnp.matmul (ref path; what the multi-pod
+            dry-run lowers so the HLO stays SPMD-partitionable & analyzable)
+  "pallas"  the TPU kernel (kernel.py)
+  "interpret"  the Pallas kernel body interpreted on CPU (tests)
+  "auto"    pallas on TPU backends, xla elsewhere
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import quant_matmul_pallas
+from .ref import quant_matmul_ref
+
+
+def _backend() -> str:
+    return jax.default_backend()
+
+
+def quant_matmul(
+    x: jax.Array,           # (..., M, K)
+    packed: jax.Array,      # (N, K/lanes) int8
+    scale: jax.Array,       # (1, N) f32
+    bits: int,
+    k: int,
+    *,
+    impl: str = "auto",
+    out_dtype=None,
+) -> jax.Array:
+    if impl == "auto":
+        impl = "pallas" if _backend() == "tpu" else "xla"
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    if impl == "xla":
+        y = quant_matmul_ref(x2, packed, scale, bits, k, out_dtype=out_dtype)
+    elif impl == "pallas":
+        y = quant_matmul_pallas(x2, packed, scale, bits=bits, k=k, out_dtype=out_dtype or x.dtype)
+    elif impl == "interpret":
+        y = quant_matmul_pallas(
+            x2, packed, scale, bits=bits, k=k, interpret=True, out_dtype=out_dtype or x.dtype
+        )
+    else:
+        raise ValueError(f"unknown impl {impl!r}")
+    return y.reshape(*lead, -1)
+
+
+def qt_matmul(x: jax.Array, qt, *, impl: str = "auto", out_dtype=None) -> jax.Array:
+    """Matmul against a QuantizedTensor (repro.quant.tensor)."""
+    if qt.packed.ndim != 2:
+        # batched experts etc.: vmap over leading dims
+        f = lambda p, s: qt_matmul_arrays(x, p, s, qt.bits, qt.k, impl=impl, out_dtype=out_dtype)
+        raise NotImplementedError("use explicit vmap for batched QuantizedTensor")
+    return quant_matmul(x, qt.packed, qt.scale.reshape(1, -1), qt.bits, qt.k,
+                        impl=impl, out_dtype=out_dtype)
+
+
+def qt_matmul_arrays(x, packed, scale, bits, k, *, impl="auto", out_dtype=None):
+    return quant_matmul(x, packed, scale.reshape(1, -1), bits, k, impl=impl, out_dtype=out_dtype)

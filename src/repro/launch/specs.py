@@ -1,0 +1,72 @@
+"""Input construction per (architecture x shape) cell.
+
+``abstract=True`` returns ShapeDtypeStruct stand-ins (the multi-pod dry-run:
+weak-type-correct, shardable, zero allocation).  ``abstract=False`` builds
+small concrete batches for smoke tests / examples.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.models import registry
+
+
+def _arr(shape, dtype, abstract, key=None, kind="normal", maxval=None):
+    if abstract:
+        return jax.ShapeDtypeStruct(shape, dtype)
+    if kind == "tokens":
+        return jax.random.randint(key, shape, 0, maxval, dtype=dtype)
+    return (jax.random.normal(key, shape) * 0.02).astype(dtype)
+
+
+def train_batch(cfg: ArchConfig, shape: ShapeSpec, *, abstract: bool = True,
+                key=None) -> dict:
+    """Batch pytree for train_step (tokens/labels, embeds, frames per family)."""
+    b, s = shape.global_batch, shape.seq_len
+    keys = jax.random.split(key, 4) if key is not None else [None] * 4
+    vocab = cfg.vocab_size
+    batch: dict = {}
+    if cfg.family in ("audio", "encdec"):
+        batch["frames"] = _arr((b, cfg.encoder_seq, cfg.d_model), jnp.bfloat16
+                               if cfg.dtype == "bfloat16" else jnp.float32,
+                               abstract, keys[0])
+        batch["tokens"] = _arr((b, s), jnp.int32, abstract, keys[1], "tokens", vocab)
+        batch["labels"] = _arr((b, s), jnp.int32, abstract, keys[2], "tokens", vocab)
+        return batch
+    if cfg.input_kind == "embeddings":  # vlm: precomputed patch+text embeddings
+        batch["embeds"] = _arr((b, s, cfg.d_model), jnp.bfloat16
+                               if cfg.dtype == "bfloat16" else jnp.float32,
+                               abstract, keys[0])
+    else:
+        batch["tokens"] = _arr((b, s), jnp.int32, abstract, keys[0], "tokens", vocab)
+    batch["labels"] = _arr((b, s), jnp.int32, abstract, keys[1], "tokens", vocab)
+    return batch
+
+
+def prefill_inputs(cfg: ArchConfig, shape: ShapeSpec, *, abstract: bool = True,
+                   key=None) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    keys = jax.random.split(key, 2) if key is not None else [None] * 2
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    if cfg.family in ("audio", "encdec"):
+        return {
+            "frames": _arr((b, cfg.encoder_seq, cfg.d_model), dt, abstract, keys[0]),
+            "tokens": _arr((b, s), jnp.int32, abstract, keys[1], "tokens", cfg.vocab_size),
+        }
+    if cfg.input_kind == "embeddings":
+        return {"embeds": _arr((b, s, cfg.d_model), dt, abstract, keys[0])}
+    return {"tokens": _arr((b, s), jnp.int32, abstract, keys[0], "tokens", cfg.vocab_size)}
+
+
+def decode_inputs(cfg: ArchConfig, shape: ShapeSpec, *, abstract: bool = True,
+                  key=None) -> dict:
+    """token + position + decode state (KV caches of seq_len / SSM states)."""
+    b, s = shape.global_batch, shape.seq_len
+    api = registry.get_api(cfg)
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    state = api.init_decode_state(cfg, b, s, dt, abstract=abstract)
+    token = _arr((b, 1), jnp.int32, abstract, key, "tokens", cfg.vocab_size)
+    pos = jax.ShapeDtypeStruct((), jnp.int32) if abstract else jnp.asarray(s - 1, jnp.int32)
+    return {"state": state, "token": token, "pos": pos}

@@ -1,0 +1,135 @@
+"""Small ResNet-family CNN for the paper-faithful SigmaQuant runs.
+
+The paper validates on ResNet/CIFAR-100; offline we train this reduced
+ResNet on a synthetic-but-learnable image task (repro.data.synthetic) and
+run the full two-phase controller on it (benchmarks/table*_*.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policy import LayerInfo
+from repro.kernels.fake_quant.ops import fake_quant_ste
+
+
+@dataclasses.dataclass(frozen=True)
+class CNNConfig:
+    name: str = "resnet_mini"
+    in_channels: int = 3
+    img_size: int = 16
+    stages: tuple[tuple[int, int], ...] = ((16, 1), (32, 1), (64, 1))  # (width, blocks)
+    n_classes: int = 20
+    dtype: str = "float32"
+
+
+def _conv_init(key, k, cin, cout):
+    fan_in = k * k * cin
+    return jax.random.normal(key, (k, k, cin, cout)) * math.sqrt(2.0 / fan_in)
+
+
+def conv(w, x, stride=1):
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+    )
+
+
+def block_strides(cfg: CNNConfig) -> tuple[int, ...]:
+    """Static stride per residual block (2 on each stage-entry downsample)."""
+    strides, cin = [], cfg.stages[0][0]
+    for width, n_blocks in cfg.stages:
+        for b in range(n_blocks):
+            strides.append(2 if (b == 0 and width != cin) else 1)
+            cin = width
+    return tuple(strides)
+
+
+def init(cfg: CNNConfig, key) -> dict:
+    keys = iter(jax.random.split(key, 64))
+    params: dict = {"stem": _conv_init(next(keys), 3, cfg.in_channels, cfg.stages[0][0])}
+    cin = cfg.stages[0][0]
+    blocks = []
+    for width, n_blocks in cfg.stages:
+        for b in range(n_blocks):
+            stride = 2 if (b == 0 and width != cin) else 1
+            blk = {
+                "conv1": _conv_init(next(keys), 3, cin, width),
+                "conv2": _conv_init(next(keys), 3, width, width),
+                "scale1": jnp.ones((width,)),
+                "scale2": jnp.ones((width,)),
+            }
+            if stride != 1 or cin != width:
+                blk["proj"] = _conv_init(next(keys), 1, cin, width)
+            blocks.append(blk)
+            cin = width
+    params["blocks"] = blocks
+    params["fc"] = jax.random.normal(next(keys), (cin, cfg.n_classes)) * math.sqrt(1.0 / cin)
+    return params
+
+
+def _maybe_fq(w, bits):
+    return w if bits is None else fake_quant_ste(w, bits, "xla")
+
+
+def _norm_act(x, scale):
+    mu = jnp.mean(x, axis=(0, 1, 2), keepdims=True)
+    var = jnp.var(x, axis=(0, 1, 2), keepdims=True) + 1e-5
+    return jax.nn.relu((x - mu) * jax.lax.rsqrt(var) * scale)
+
+
+def forward(params: dict, x: jax.Array, cfg: CNNConfig, *, bits: dict | None = None) -> jax.Array:
+    """x: (B, H, W, C) -> logits (B, n_classes).  bits: name -> scalar."""
+
+    def b(name):
+        return None if bits is None else bits.get(name)
+
+    h = conv(_maybe_fq(params["stem"], b("stem")), x)
+    h = jax.nn.relu(h)
+    strides = block_strides(cfg)
+    for i, blk in enumerate(params["blocks"]):
+        stride = strides[i]
+        y = conv(_maybe_fq(blk["conv1"], b(f"block{i}.conv1")), h, stride)
+        y = _norm_act(y, blk["scale1"])
+        y = conv(_maybe_fq(blk["conv2"], b(f"block{i}.conv2")), y)
+        y = _norm_act(y, blk["scale2"])
+        if "proj" in blk:
+            h = conv(_maybe_fq(blk["proj"], b(f"block{i}.proj")), h, stride)
+        h = h + y
+    pooled = jnp.mean(h, axis=(1, 2))
+    return pooled @ _maybe_fq(params["fc"], b("fc"))
+
+
+def quant_layer_specs(params: dict, cfg: CNNConfig) -> tuple[LayerInfo, ...]:
+    """LayerInfo per quantizable conv/fc with per-sample MACs."""
+    infos = []
+    hw = cfg.img_size
+    infos.append(LayerInfo("stem", tuple(params["stem"].shape),
+                           macs=9 * cfg.in_channels * cfg.stages[0][0] * hw * hw, kind="conv"))
+    strides = block_strides(cfg)
+    for i, blk in enumerate(params["blocks"]):
+        stride = strides[i]
+        if stride == 2:
+            hw //= 2
+        k1 = blk["conv1"].shape
+        infos.append(LayerInfo(f"block{i}.conv1", tuple(k1),
+                               macs=int(9 * k1[2] * k1[3] * hw * hw), kind="conv"))
+        k2 = blk["conv2"].shape
+        infos.append(LayerInfo(f"block{i}.conv2", tuple(k2),
+                               macs=int(9 * k2[2] * k2[3] * hw * hw), kind="conv"))
+        if "proj" in blk:
+            kp = blk["proj"].shape
+            infos.append(LayerInfo(f"block{i}.proj", tuple(kp),
+                                   macs=int(kp[2] * kp[3] * hw * hw), kind="conv"))
+    fc = params["fc"].shape
+    infos.append(LayerInfo("fc", tuple(fc), macs=int(fc[0] * fc[1]), kind="dense"))
+    return tuple(infos)
+
+
+def get_weight(params: dict, name: str) -> jax.Array:
+    if name == "stem" or name == "fc":
+        return params[name]
+    blk, leaf = name.split(".")
+    return params["blocks"][int(blk[5:])][leaf]

@@ -1,0 +1,185 @@
+"""Zamba2-style hybrid: Mamba2 backbone + one *shared* attention block
+applied every ``attn_every`` layers [arXiv:2411.15242].
+
+The shared block has a single parameter set (quantized once — one policy
+entry) but per-application KV caches at decode (activations differ at each
+depth).  At long-context decode the shared block attends over a sliding
+window (cfg.attn_window) — the documented deviation that keeps long_500k
+sub-quadratic (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import layers, mamba2
+
+
+def _dtype(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+def n_attn_applications(cfg) -> int:
+    return (cfg.n_layers + cfg.attn_every - 1) // cfg.attn_every
+
+
+def shared_block_init(key, cfg, dtype=jnp.float32) -> dict:
+    ka, km = jax.random.split(key)
+    return {
+        "attn": layers.attention_init(ka, cfg, dtype),
+        "mlp": layers.mlp_init(km, cfg, dtype),
+        "ln1": layers.norm_init(cfg.d_model, cfg.norm, dtype),
+        "ln2": layers.norm_init(cfg.d_model, cfg.norm, dtype),
+    }
+
+
+def init(cfg, key) -> dict:
+    dt = _dtype(cfg)
+    keys = jax.random.split(key, cfg.n_layers + 3)
+    stacked = jax.tree.map(
+        lambda *xs: jnp.stack(xs),
+        *[mamba2.block_init(keys[i], cfg, dt) for i in range(cfg.n_layers)],
+    )
+    return {
+        "embed": layers.embed_init(keys[-3], cfg.vocab_size, cfg.d_model, dt),
+        "layers": stacked,
+        "shared_attn": shared_block_init(keys[-2], cfg, dt),
+        "final_norm": layers.norm_init(cfg.d_model, "rmsnorm", dt),
+        "lm_head": layers.dense_init(keys[-1], cfg.d_model, cfg.vocab_size, dt),
+    }
+
+
+def _apply_shared(sp, x, cfg, positions, *, bits=None, qimpl="auto"):
+    h = x + layers.attention(sp["attn"], layers.norm(sp["ln1"], x, cfg.norm, cfg.norm_eps),
+                             cfg, positions, causal=True, window=cfg.attn_window,
+                             bits=None if bits is None else bits.get("attn"), qimpl=qimpl)
+    return h + layers.mlp(sp["mlp"], layers.norm(sp["ln2"], h, cfg.norm, cfg.norm_eps),
+                          cfg.mlp, bits=None if bits is None else bits.get("mlp"), qimpl=qimpl)
+
+
+def forward(params, cfg, tokens=None, embeds=None, *, bits=None, qimpl="auto",
+            remat: bool = True) -> jax.Array:
+    from . import decoder
+
+    x = decoder.embed_tokens(params, tokens, cfg,
+                             bits=None if bits is None else bits.get("embed")) \
+        if embeds is None else embeds.astype(_dtype(cfg))
+    b, s = x.shape[:2]
+    positions = layers.position_ids(b, s, cfg.rope)
+    sp = params["shared_attn"]
+    shared_bits = None if bits is None else bits.get("shared_attn")
+    layer_bits = None if bits is None else bits["layers"]
+
+    from repro.dist.sharding import shard_batch_act
+
+    x = shard_batch_act(x)
+
+    def body(h, xs):
+        lp, lb, idx = xs
+        lb = lb if isinstance(lb, dict) else None
+        h = shard_batch_act(h)
+        h = jax.lax.cond(
+            idx % cfg.attn_every == 0,
+            lambda v: _apply_shared(sp, v, cfg, positions, bits=shared_bits, qimpl=qimpl),
+            lambda v: v,
+            h,
+        )
+        y = mamba2.block_forward(lp, layers.rmsnorm(lp["ln"], h, cfg.norm_eps), cfg,
+                                 bits=lb, qimpl=qimpl)
+        return h + y, None
+
+    if remat:
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    lb = layer_bits if layer_bits is not None else jnp.zeros((cfg.n_layers,))
+    x, _ = jax.lax.scan(body, x, (params["layers"], lb, jnp.arange(cfg.n_layers)))
+    return layers.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# serving layout
+# ---------------------------------------------------------------------------
+
+
+def unstack_layers(params, cfg) -> dict:
+    out = dict(params)
+    out["layers"] = [jax.tree.map(lambda a: a[i], params["layers"]) for i in range(cfg.n_layers)]
+    return out
+
+
+def init_decode_state(cfg, batch: int, seq: int, dtype=jnp.bfloat16, abstract=False):
+    hd = cfg.resolved_head_dim
+    mk = (lambda s, dt: jax.ShapeDtypeStruct(s, dt)) if abstract else (lambda s, dt: jnp.zeros(s, dt))
+    kv = lambda: {"k": mk((batch, seq, cfg.n_kv_heads, hd), dtype),
+                  "v": mk((batch, seq, cfg.n_kv_heads, hd), dtype)}
+    mamba_state = (mamba2.abstract_state if abstract else mamba2.init_state)
+    return {
+        "mamba": [mamba_state(cfg, batch) for _ in range(cfg.n_layers)],
+        "attn": [kv() for _ in range(n_attn_applications(cfg))],
+    }
+
+
+def _apply_shared_decode(sp, x, cfg, cache, pos, *, qimpl="auto"):
+    att, (ck, cv) = layers.attention_decode(
+        sp["attn"], layers.norm(sp["ln1"], x, cfg.norm, cfg.norm_eps),
+        cache["k"], cache["v"], pos, cfg, window=cfg.attn_window, qimpl=qimpl)
+    h = x + att
+    h = h + layers.mlp(sp["mlp"], layers.norm(sp["ln2"], h, cfg.norm, cfg.norm_eps),
+                       cfg.mlp, qimpl=qimpl)
+    return h, {"k": ck, "v": cv}
+
+
+def decode_step(params, cfg, state, token, pos, *, qimpl="auto"):
+    from . import decoder
+
+    x = decoder.embed_tokens(params, token, cfg)
+    sp = params["shared_attn"]
+    new_mamba, new_attn = [], []
+    app = 0
+    for i, (lp, st) in enumerate(zip(params["layers"], state["mamba"])):
+        if i % cfg.attn_every == 0:
+            x, ncache = _apply_shared_decode(sp, x, cfg, state["attn"][app], pos, qimpl=qimpl)
+            new_attn.append(ncache)
+            app += 1
+        y, nst = mamba2.block_decode(lp, layers.rmsnorm(lp["ln"], x, cfg.norm_eps), st, cfg,
+                                     qimpl=qimpl)
+        new_mamba.append(nst)
+        x = x + y
+    hidden = layers.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = layers.qdense(params["lm_head"], hidden, qimpl=qimpl)
+    return logits, {"mamba": new_mamba, "attn": new_attn}
+
+
+def prefill(params, cfg, tokens=None, embeds=None, *, qimpl="auto"):
+    """Unrolled full-sequence pass returning logits + decode state."""
+    from repro.dist.sharding import shard_batch_act
+    from . import decoder
+
+    x = decoder.embed_tokens(params, tokens, cfg) if embeds is None \
+        else embeds.astype(_dtype(cfg))
+    x = shard_batch_act(x)
+    b, s = x.shape[:2]
+    positions = layers.position_ids(b, s, cfg.rope)
+    sp = params["shared_attn"]
+    new_mamba, new_attn = [], []
+    for i, lp in enumerate(params["layers"]):
+        if i % cfg.attn_every == 0:
+            hd = cfg.resolved_head_dim
+            xn = layers.norm(sp["ln1"], x, cfg.norm, cfg.norm_eps)
+            q, k, v = layers._qkv(sp["attn"], xn, cfg, positions, qimpl=qimpl)
+            new_attn.append({"k": k, "v": v})
+            if s > layers.FLASH_THRESHOLD:
+                o = layers._flash_attention(q, k, v, cfg.n_kv_heads, causal=True,
+                                            window=cfg.attn_window)
+            else:
+                o = layers._direct_attention(q, k, v, cfg.n_kv_heads, causal=True,
+                                             window=cfg.attn_window)
+            h = x + layers.qdense(sp["attn"]["wo"], o.reshape(b, s, -1), qimpl=qimpl)
+            x = h + layers.mlp(sp["mlp"], layers.norm(sp["ln2"], h, cfg.norm, cfg.norm_eps),
+                               cfg.mlp, qimpl=qimpl)
+        y, st = mamba2.block_forward(lp, layers.rmsnorm(lp["ln"], x, cfg.norm_eps), cfg,
+                                     qimpl=qimpl, return_state=True)
+        new_mamba.append(st)
+        x = x + y
+    hidden = layers.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = layers.qdense(params["lm_head"], hidden[:, -1:], qimpl=qimpl)
+    return logits, {"mamba": new_mamba, "attn": new_attn}

@@ -1,0 +1,279 @@
+"""Mamba2 (SSD — state-space duality) blocks and the attention-free LM.
+
+Chunked SSD algorithm per the Mamba-2 paper [arXiv:2405.21060]:
+intra-chunk quadratic term + inter-chunk state recurrence (lax.scan), with
+n_groups = 1 (B/C shared across heads).  The sequential recurrence oracle in
+tests/test_mamba2.py validates it token-by-token.
+
+Quantizable weights: in_proj / out_proj (the dominant matrices).  SSM decay
+parameters (A_log, dt_bias, D) and the short conv stay fp32 — quantizing the
+recurrence dynamics is outside the paper's weight-quantization scope
+(DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import layers
+
+
+def _dtype(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+def block_init(key, cfg, dtype=jnp.float32) -> dict:
+    d, din, n, h = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_nheads
+    conv_ch = din + 2 * n
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": layers.dense_init(ks[0], d, 2 * din + 2 * n + h, dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv_width, conv_ch)) * 0.2).astype(jnp.float32),
+        "conv_b": jnp.zeros((conv_ch,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "D": jnp.ones((h,), jnp.float32),
+        "gate_norm": jnp.ones((din,), dtype),
+        "out_proj": layers.dense_init(ks[2], din, d, dtype),
+        "ln": layers.norm_init(d, "rmsnorm", dtype),
+    }
+
+
+def _split_proj(cfg, zxbcdt):
+    din, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_nheads
+    z, xc, dt = jnp.split(zxbcdt, [din, 2 * din + 2 * n], axis=-1)
+    return z, xc, dt  # xc = [x, B, C] (conv channels), dt (h,)
+
+
+def _causal_conv(xc, w, b):
+    """Depthwise causal conv1d, width W: (B, S, C) with (W, C) filters."""
+    wlen = w.shape[0]
+    pad = jnp.pad(xc, ((0, 0), (wlen - 1, 0), (0, 0)))
+    out = sum(pad[:, i : i + xc.shape[1]] * w[i] for i in range(wlen))
+    return jax.nn.silu(out + b)
+
+
+def _segsum_exp(da):
+    """exp(cumulative decay) lower-triangular matrix.
+
+    da: (..., L) per-step log-decay ->  out[..., i, j] = exp(sum_{j<k<=i} da_k)
+    masked to i >= j.
+    """
+    l = da.shape[-1]
+    cs = jnp.cumsum(da, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]          # (..., i, j)
+    mask = jnp.tril(jnp.ones((l, l), bool))
+    # mask BEFORE the exp: masked diffs are large-positive, exp overflows to
+    # inf and inf * 0 in the backward pass poisons every gradient with NaN.
+    return jnp.exp(jnp.where(mask, diff, -1e30))
+
+
+def ssd_chunked(x, dt, a_log, b_in, c_in, d_skip, chunk: int):
+    """SSD scan.  x: (B,S,H,P), dt: (B,S,H), A=-exp(a_log): (H,),
+    B/C: (B,S,N) shared across heads, D: (H,).  Returns (B,S,H,P)."""
+    bsz, s, h, p = x.shape
+    n = b_in.shape[-1]
+    q = min(chunk, s)
+    assert s % q == 0, (s, q)
+    nc = s // q
+    a = -jnp.exp(a_log)                                  # (H,) negative decay rates
+
+    x32 = x.astype(jnp.float32).reshape(bsz, nc, q, h, p)
+    dt32 = dt.astype(jnp.float32).reshape(bsz, nc, q, h)
+    b32 = b_in.astype(jnp.float32).reshape(bsz, nc, q, n)
+    c32 = c_in.astype(jnp.float32).reshape(bsz, nc, q, n)
+
+    da = dt32 * a                                        # (b, c, l, h) log-decay
+    da_hl = jnp.moveaxis(da, -1, -2)                     # (b, c, h, l)
+    da_cum = jnp.cumsum(da_hl, axis=-1)                  # (b, c, h, l)
+
+    # intra-chunk (quadratic within chunk)
+    decay_mat = _segsum_exp(da_hl)                       # (b, c, h, l, l)
+    xdt = x32 * dt32[..., None]                          # (b, c, l, h, p)
+    y_diag = jnp.einsum("bcln,bcsn,bchls,bcshp->bclhp", c32, b32, decay_mat, xdt)
+
+    # per-chunk input states
+    decay_states = jnp.exp(da_cum[..., -1:] - da_cum)    # (b, c, h, l)
+    states = jnp.einsum("bcln,bchl,bclhp->bchpn", b32, decay_states * jnp.moveaxis(dt32, -1, -2), x32)
+
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(da_cum[..., -1])               # (b, c, h)
+
+    def step(carry, inp):
+        st, dec = inp
+        prev = carry
+        new = prev * dec[..., None, None] + st
+        return new, prev
+
+    init = jnp.zeros((bsz, h, p, n), jnp.float32)
+    final_state, prev_states = jax.lax.scan(
+        step, init, (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0))
+    )
+    prev_states = jnp.moveaxis(prev_states, 0, 1)        # (b, c, h, p, n)
+
+    # contribution of carried-in state
+    state_decay = jnp.exp(da_cum)                        # (b, c, h, l)
+    y_off = jnp.einsum("bcln,bchpn,bchl->bclhp", c32, prev_states, state_decay)
+
+    y = (y_diag + y_off).reshape(bsz, s, h, p) + x32.reshape(bsz, s, h, p) * d_skip[:, None]
+    return y.astype(x.dtype), final_state
+
+
+def block_forward(p, x, cfg, *, bits=None, qimpl="auto", return_state: bool = False):
+    """Full-sequence Mamba2 mixer (train / prefill)."""
+    bsz, s, _ = x.shape
+    din, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_nheads
+    hp = cfg.ssm_head_dim
+    zxbcdt = layers.qdense(p["in_proj"], x, bits=None if bits is None else bits.get("in_proj"),
+                           qimpl=qimpl)
+    z, xc_raw, dt = _split_proj(cfg, zxbcdt)
+    xc = _causal_conv(xc_raw.astype(jnp.float32), p["conv_w"], p["conv_b"]).astype(x.dtype)
+    xs, b_in, c_in = jnp.split(xc, [din, din + n], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    y, final_state = ssd_chunked(xs.reshape(bsz, s, h, hp), dt, p["A_log"], b_in, c_in,
+                                 p["D"], cfg.ssm_chunk)
+    y = y.reshape(bsz, s, din)
+    y = layers.rmsnorm(p["gate_norm"], y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                       cfg.norm_eps)
+    out = layers.qdense(p["out_proj"], y, bits=None if bits is None else bits.get("out_proj"),
+                        qimpl=qimpl)
+    if return_state:
+        w = cfg.ssm_conv_width
+        conv_tail = xc_raw[:, -(w - 1):].astype(jnp.float32) if s >= w - 1 else jnp.pad(
+            xc_raw.astype(jnp.float32), ((0, 0), (w - 1 - s, 0), (0, 0)))
+        return out, {"conv": conv_tail, "ssm": final_state}
+    return out
+
+
+def block_decode(p, x, state, cfg, *, qimpl="auto"):
+    """Single-token step.  state = {"conv": (B, W-1, C), "ssm": (B, H, P, N)}."""
+    bsz = x.shape[0]
+    din, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_nheads
+    hp = cfg.ssm_head_dim
+    zxbcdt = layers.qdense(p["in_proj"], x, qimpl=qimpl)   # (B, 1, ·)
+    z, xc, dt = _split_proj(cfg, zxbcdt)
+    xc = xc[:, 0].astype(jnp.float32)                       # (B, C)
+    conv_hist = jnp.concatenate([state["conv"], xc[:, None]], axis=1)  # (B, W, C)
+    conv_out = jax.nn.silu(jnp.einsum("bwc,wc->bc", conv_hist, p["conv_w"]) + p["conv_b"])
+    new_conv = conv_hist[:, 1:]
+    xs, b_in, c_in = jnp.split(conv_out, [din, din + n], axis=-1)
+    dt1 = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B, H)
+    a = -jnp.exp(p["A_log"])
+    da = jnp.exp(dt1 * a)                                   # (B, H)
+    xh = xs.reshape(bsz, h, hp).astype(jnp.float32)
+    upd = (dt1[..., None, None] * xh[..., None]) * b_in[:, None, None, :]
+    new_ssm = state["ssm"] * da[..., None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", new_ssm, c_in) + xh * p["D"][:, None]
+    y = y.reshape(bsz, 1, din).astype(x.dtype)
+    y = layers.rmsnorm(p["gate_norm"], y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                       cfg.norm_eps)
+    out = layers.qdense(p["out_proj"], y, qimpl=qimpl)
+    return out, {"conv": new_conv, "ssm": new_ssm}
+
+
+def init_state(cfg, batch: int) -> dict:
+    din, n = cfg.d_inner, cfg.ssm_state
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv_width - 1, din + 2 * n), jnp.float32),
+        "ssm": jnp.zeros((batch, cfg.ssm_nheads, cfg.ssm_head_dim, n), jnp.float32),
+    }
+
+
+def abstract_state(cfg, batch: int) -> dict:
+    din, n = cfg.d_inner, cfg.ssm_state
+    return {
+        "conv": jax.ShapeDtypeStruct((batch, cfg.ssm_conv_width - 1, din + 2 * n), jnp.float32),
+        "ssm": jax.ShapeDtypeStruct((batch, cfg.ssm_nheads, cfg.ssm_head_dim, n), jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# attention-free LM (mamba2-2.7b)
+# ---------------------------------------------------------------------------
+
+
+def init(cfg, key) -> dict:
+    dt = _dtype(cfg)
+    keys = jax.random.split(key, cfg.n_layers + 2)
+    stacked = jax.tree.map(
+        lambda *xs: jnp.stack(xs), *[block_init(keys[i], cfg, dt) for i in range(cfg.n_layers)]
+    )
+    return {
+        "embed": layers.embed_init(keys[-2], cfg.vocab_size, cfg.d_model, dt),
+        "layers": stacked,
+        "final_norm": layers.norm_init(cfg.d_model, "rmsnorm", dt),
+        "lm_head": layers.dense_init(keys[-1], cfg.d_model, cfg.vocab_size, dt),
+    }
+
+
+def forward(params, cfg, tokens=None, embeds=None, *, bits=None, qimpl="auto",
+            remat: bool = True) -> jax.Array:
+    from . import decoder
+
+    x = decoder.embed_tokens(params, tokens, cfg,
+                             bits=None if bits is None else bits.get("embed")) \
+        if embeds is None else embeds.astype(_dtype(cfg))
+    layer_bits = None if bits is None else bits["layers"]
+
+    from repro.dist.sharding import shard_batch_act
+
+    x = shard_batch_act(x)
+
+    def body(h, xs):
+        lp, lb = xs
+        lb = lb if isinstance(lb, dict) else None
+        h = shard_batch_act(h)
+        y = block_forward(lp, layers.rmsnorm(lp["ln"], h, cfg.norm_eps), cfg,
+                          bits=lb, qimpl=qimpl)
+        return h + y, None
+
+    if remat:
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    xs = (params["layers"], layer_bits if layer_bits is not None else jnp.zeros((cfg.n_layers,)))
+    x, _ = jax.lax.scan(body, x, xs)
+    return layers.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# serving layout (unrolled layers, fixed-size state — no KV growth)
+# ---------------------------------------------------------------------------
+
+
+def unstack_layers(params, cfg) -> dict:
+    out = dict(params)
+    out["layers"] = [jax.tree.map(lambda a: a[i], params["layers"]) for i in range(cfg.n_layers)]
+    return out
+
+
+def prefill(params, cfg, tokens=None, embeds=None, *, qimpl="auto"):
+    from repro.dist.sharding import shard_batch_act
+    from . import decoder
+
+    x = decoder.embed_tokens(params, tokens, cfg) if embeds is None \
+        else embeds.astype(_dtype(cfg))
+    x = shard_batch_act(x)
+    states = []
+    for lp in params["layers"]:
+        y, st = block_forward(lp, layers.rmsnorm(lp["ln"], x, cfg.norm_eps), cfg,
+                              qimpl=qimpl, return_state=True)
+        states.append(st)
+        x = x + y
+    hidden = layers.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = layers.qdense(params["lm_head"], hidden[:, -1:], qimpl=qimpl)
+    return logits, states
+
+
+def decode_step(params, cfg, states, token, pos, *, qimpl="auto"):
+    from . import decoder
+
+    del pos  # SSM state carries all history — no positional cache index
+    x = decoder.embed_tokens(params, token, cfg)
+    new_states = []
+    for lp, st in zip(params["layers"], states):
+        y, nst = block_decode(lp, layers.rmsnorm(lp["ln"], x, cfg.norm_eps), st, cfg,
+                              qimpl=qimpl)
+        new_states.append(nst)
+        x = x + y
+    hidden = layers.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = layers.qdense(params["lm_head"], hidden, qimpl=qimpl)
+    return logits, new_states

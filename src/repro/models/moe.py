@@ -1,0 +1,118 @@
+"""Mixture-of-Experts FFN: shared + routed top-k with capacity dispatch.
+
+Sort-based capacity dispatch (linear cost, TPU-friendly — the dropless /
+MegaBlocks-style formulation without the custom grouped-GEMM kernel):
+
+  1. router -> top-k expert ids + renormalized gates per token
+  2. assignments sorted by expert; position-in-expert = rank - expert start
+  3. tokens scattered into a (E, C, d) buffer (capacity C, overflow dropped)
+  4. batched per-expert GEMMs  (E, C, d) x (E, d, f)
+  5. results gathered back and combined with gates; shared experts run dense
+
+DeepSeekMoE-style fine-grained setup: ``n_shared_experts`` always-on experts
+are fused into one dense MLP of width n_shared * d_ff.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.fake_quant.ops import fake_quant_ste
+from repro.quant.tensor import QuantizedTensor
+from . import layers
+
+
+def _round_up(v: int, m: int) -> int:
+    return -(-v // m) * m
+
+
+def capacity(n_tokens: int, cfg) -> int:
+    c = int(n_tokens * cfg.top_k / cfg.n_experts * cfg.moe_capacity_factor) + 1
+    return _round_up(c, 8)
+
+
+def moe_init(key, cfg, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 5)
+    e, d, f = cfg.n_experts, cfg.d_model, cfg.d_ff
+    std = 1.0 / jnp.sqrt(d)
+    p = {
+        "router": layers.dense_init(ks[0], d, e, jnp.float32),
+        "w_gate": (jax.random.normal(ks[1], (e, d, f)) * std).astype(dtype),
+        "w_up": (jax.random.normal(ks[2], (e, d, f)) * std).astype(dtype),
+        "w_down": (jax.random.normal(ks[3], (e, f, d)) / jnp.sqrt(f)).astype(dtype),
+    }
+    if cfg.n_shared_experts:
+        import dataclasses
+        shared_cfg = dataclasses.replace(cfg, d_ff=cfg.n_shared_experts * cfg.d_ff)
+        p["shared"] = layers.mlp_init(ks[4], shared_cfg, dtype)
+    return p
+
+
+def _expert_weight(w, bits, dtype=None):
+    """Stacked (E, ., .) expert weights: fake-quant (QAT) or dequant (serve)."""
+    if isinstance(w, QuantizedTensor):
+        # packed bytes are what HBM moves; on TPU the kernel fuses dequant,
+        # the XLA fallback dequantizes into the compute dtype
+        return w.dequantize(dtype or jnp.bfloat16)
+    if bits is not None:
+        return fake_quant_ste(w, bits, "xla")
+    return w
+
+
+def moe_mlp(p: dict, x: jax.Array, cfg, *, bits=None, qimpl: str = "auto") -> jax.Array:
+    b, s, d = x.shape
+    t = b * s
+    e, k = cfg.n_experts, cfg.top_k
+    c = capacity(t, cfg)
+    xf = x.reshape(t, d)
+
+    # 1. routing (router stays fp32 — tiny and precision-critical)
+    logits = xf.astype(jnp.float32) @ p["router"]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, eidx = jax.lax.top_k(probs, k)                       # (t, k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    # 2. sort assignments by expert
+    e_flat = eidx.reshape(-1)                                    # (t*k,)
+    t_flat = jnp.repeat(jnp.arange(t), k)
+    g_flat = gates.reshape(-1)
+    order = jnp.argsort(e_flat)
+    e_s, t_s, g_s = e_flat[order], t_flat[order], g_flat[order]
+    starts = jnp.searchsorted(e_s, jnp.arange(e))
+    pos = jnp.arange(t * k) - starts[e_s]
+    keep = pos < c
+    pos_c = jnp.where(keep, pos, 0)
+
+    # 3. scatter into capacity buffer
+    buf = jnp.zeros((e, c, d), x.dtype)
+    vals = jnp.where(keep[:, None], xf[t_s], 0)
+    buf = buf.at[e_s, pos_c].add(vals)
+
+    # 4. batched expert GEMMs
+    wg = _expert_weight(p["w_gate"], None if bits is None else bits.get("w_gate"), x.dtype)
+    wu = _expert_weight(p["w_up"], None if bits is None else bits.get("w_up"), x.dtype)
+    wd = _expert_weight(p["w_down"], None if bits is None else bits.get("w_down"), x.dtype)
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, wg.astype(x.dtype))) * jnp.einsum(
+        "ecd,edf->ecf", buf, wu.astype(x.dtype)
+    )
+    y_e = jnp.einsum("ecf,efd->ecd", h, wd.astype(x.dtype))
+
+    # 5. gather back + combine
+    y_tok = y_e[e_s, pos_c] * (g_s * keep)[:, None].astype(x.dtype)
+    y = jnp.zeros((t, d), x.dtype).at[t_s].add(y_tok)
+    y = y.reshape(b, s, d)
+
+    if "shared" in p:
+        y = y + layers.mlp(p["shared"], x, cfg.mlp,
+                           bits=None if bits is None else bits.get("shared"), qimpl=qimpl)
+    return y
+
+
+def aux_load_balance_loss(p: dict, x: jax.Array, cfg) -> jax.Array:
+    """Switch-style load-balancing auxiliary loss (fraction * prob per expert)."""
+    t = x.shape[0] * x.shape[1]
+    logits = x.reshape(t, -1).astype(jnp.float32) @ p["router"]
+    probs = jax.nn.softmax(logits, axis=-1)
+    _, eidx = jax.lax.top_k(probs, cfg.top_k)
+    frac = jnp.mean(jax.nn.one_hot(eidx, cfg.n_experts), axis=(0, 1))
+    return cfg.n_experts * jnp.sum(frac * probs.mean(0))

@@ -1,0 +1,119 @@
+"""Family registry: one uniform API over all assigned architectures.
+
+    api = get_api(cfg)
+    params = api.init(cfg, key)
+    loss   = api.loss(params, cfg, batch, bits=...)        # train/QAT
+    logits, state = api.prefill(params_serve, cfg, **inputs)
+    logits, state = api.decode_step(params_serve, cfg, state, token, pos)
+
+Batch/state construction (incl. ShapeDtypeStruct abstract variants for the
+dry-run) lives in repro.launch.specs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from . import decoder, encdec, hybrid, layers, mamba2
+
+
+def lm_loss_from_hidden(params, cfg, hidden, labels, *, bits=None, qimpl="auto",
+                        loss_chunk: int = 2048) -> jax.Array:
+    """Chunked softmax CE against the LM head (shared across families)."""
+    from repro.dist.sharding import shard_batch_act
+
+    hidden = shard_batch_act(hidden)
+    b, s, d = hidden.shape
+    chunk = min(loss_chunk, s)
+    assert s % chunk == 0, (s, chunk)
+    n = s // chunk
+    hid = hidden.reshape(b, n, chunk, d).swapaxes(0, 1)
+    lab = labels.reshape(b, n, chunk).swapaxes(0, 1)
+
+    @jax.checkpoint  # recompute chunk logits in backward: O(chunk*V) live, not O(S*V)
+    def step(acc, xs):
+        h, y = xs
+        logits = decoder.logits_fn(params, h, cfg, bits=bits, qimpl=qimpl).astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, y[..., None], axis=-1)[..., 0]
+        return acc + jnp.sum(logz - gold), None
+
+    total, _ = jax.lax.scan(step, jnp.zeros((), jnp.float32), (hid, lab))
+    return total / (b * s)
+
+
+def _decoder_loss(params, cfg, batch, *, bits=None, qimpl="auto"):
+    hidden = decoder.forward(params, cfg, tokens=batch.get("tokens"),
+                             embeds=batch.get("embeds"), bits=bits, qimpl=qimpl)
+    return lm_loss_from_hidden(params, cfg, hidden, batch["labels"], bits=bits, qimpl=qimpl)
+
+
+def _mamba_loss(params, cfg, batch, *, bits=None, qimpl="auto"):
+    hidden = mamba2.forward(params, cfg, tokens=batch.get("tokens"),
+                            embeds=batch.get("embeds"), bits=bits, qimpl=qimpl)
+    return lm_loss_from_hidden(params, cfg, hidden, batch["labels"], bits=bits, qimpl=qimpl)
+
+
+def _hybrid_loss(params, cfg, batch, *, bits=None, qimpl="auto"):
+    hidden = hybrid.forward(params, cfg, tokens=batch.get("tokens"),
+                            embeds=batch.get("embeds"), bits=bits, qimpl=qimpl)
+    return lm_loss_from_hidden(params, cfg, hidden, batch["labels"], bits=bits, qimpl=qimpl)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelAPI:
+    init: Callable
+    loss: Callable
+    unstack: Callable
+    prefill: Callable
+    decode_step: Callable
+    init_decode_state: Callable  # (cfg, batch, seq, dtype, abstract) -> state pytree
+
+
+def _decoder_state(cfg, batch, seq, dtype=jnp.bfloat16, abstract=False):
+    return (decoder.abstract_cache if abstract else decoder.init_cache)(cfg, batch, seq, dtype)
+
+
+def _mamba_state(cfg, batch, seq, dtype=jnp.bfloat16, abstract=False):
+    del seq, dtype
+    mk = mamba2.abstract_state if abstract else mamba2.init_state
+    return [mk(cfg, batch) for _ in range(cfg.n_layers)]
+
+
+def _hybrid_state(cfg, batch, seq, dtype=jnp.bfloat16, abstract=False):
+    return hybrid.init_decode_state(cfg, batch, seq, dtype, abstract=abstract)
+
+
+def _encdec_state(cfg, batch, seq, dtype=jnp.bfloat16, abstract=False):
+    return encdec.init_cache(cfg, batch, seq, dtype, abstract=abstract)
+
+
+_DECODER_API = ModelAPI(
+    init=decoder.init,
+    loss=_decoder_loss,
+    unstack=decoder.unstack_layers,
+    prefill=decoder.prefill,
+    decode_step=decoder.decode_step,
+    init_decode_state=_decoder_state,
+)
+
+_REGISTRY: dict[str, ModelAPI] = {
+    "dense": _DECODER_API,
+    "moe": _DECODER_API,
+    "vlm": _DECODER_API,
+    "ssm": ModelAPI(mamba2.init, _mamba_loss, mamba2.unstack_layers,
+                    mamba2.prefill, mamba2.decode_step, _mamba_state),
+    "hybrid": ModelAPI(hybrid.init, _hybrid_loss, hybrid.unstack_layers,
+                       hybrid.prefill, hybrid.decode_step, _hybrid_state),
+    "encdec": ModelAPI(encdec.init, encdec.loss, encdec.unstack_layers,
+                       encdec.prefill, encdec.decode_step, _encdec_state),
+    "audio": ModelAPI(encdec.init, encdec.loss, encdec.unstack_layers,
+                      encdec.prefill, encdec.decode_step, _encdec_state),
+}
+
+
+def get_api(cfg) -> ModelAPI:
+    return _REGISTRY[cfg.family]

@@ -1,0 +1,199 @@
+"""Glue between SigmaQuant policies and model parameter pytrees.
+
+* ``layer_specs``        — enumerate quantizable layers (LayerInfo) from params
+* ``get_weight``         — fetch one layer's float weight by policy name
+* ``bits_for_scan``      — policy -> per-layer (L,) bit arrays riding lax.scan
+* ``quantize_for_serve`` — float params -> packed QuantizedTensor leaves
+
+Naming convention: stacked per-layer leaves expand to ``layer{i:03d}.<path>``;
+top-level leaves keep their dotted path (``embed``, ``lm_head``,
+``shared_attn.attn.wq``, ...).  Enumeration order is deterministic (sorted
+paths) so policies, bit-vectors, and stats line up across hosts.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.policy import BitPolicy, LayerInfo
+from repro.quant.tensor import QuantizedTensor, quantize_tensor
+
+#: leaf names that are quantizable weights
+QUANT_KEYS = frozenset({
+    "wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down",
+    "in_proj", "out_proj", "embed", "lm_head",
+})
+#: stacked per-layer subtrees
+STACKED_KEYS = ("layers", "enc_layers", "dec_layers")
+
+
+def _walk(tree: Any, path: tuple[str, ...] = ()):
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            yield from _walk(tree[k], path + (str(k),))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            yield from _walk(v, path + (str(i),))
+    else:
+        yield path, tree
+
+
+def _is_quant_leaf(path: tuple[str, ...], leaf) -> bool:
+    if path[-1] not in QUANT_KEYS:
+        return False
+    shape = leaf.shape if hasattr(leaf, "shape") else ()
+    return len(shape) >= 2
+
+
+def _macs_for(path: tuple[str, ...], shape: tuple[int, ...], cfg) -> int:
+    """Per-token MACs for the layer (BOPs accounting, §VI-D)."""
+    if path[-1] == "embed":
+        return shape[-1]  # one row read per token
+    if len(shape) == 3:  # stacked experts (E, d, f): only top_k of E active
+        e, d, f = shape
+        top_k = max(getattr(cfg, "top_k", 1), 1)
+        return top_k * d * f
+    k, n = shape[-2], shape[-1]
+    return k * n
+
+
+def layer_specs(params: dict, cfg) -> tuple[LayerInfo, ...]:
+    """Enumerate quantizable layers from a *train-layout* (stacked) pytree."""
+    infos: list[LayerInfo] = []
+    for path, leaf in _walk(params):
+        if not _is_quant_leaf(path, leaf):
+            continue
+        if path[0] in STACKED_KEYS:
+            n_layers = leaf.shape[0]
+            per_layer_shape = tuple(leaf.shape[1:])
+            prefix = "" if path[0] == "layers" else path[0] + "."
+            for i in range(n_layers):
+                name = f"{prefix}layer{i:03d}." + ".".join(path[1:])
+                kind = "expert" if len(per_layer_shape) == 3 else (
+                    "embedding" if path[-1] in ("embed", "lm_head") else "dense")
+                infos.append(LayerInfo(name, per_layer_shape,
+                                       macs=_macs_for(path, per_layer_shape, cfg), kind=kind))
+        else:
+            name = ".".join(path)
+            kind = "embedding" if path[-1] in ("embed", "lm_head") else "dense"
+            infos.append(LayerInfo(name, tuple(leaf.shape),
+                                   macs=_macs_for(path, tuple(leaf.shape), cfg), kind=kind))
+    return tuple(sorted(infos, key=lambda l: l.name))
+
+
+def get_weight(params: dict, name: str):
+    """Fetch a (possibly stacked-sliced) weight by policy name."""
+    parts = name.split(".")
+    tree: Any = params
+    if parts[0].startswith("layer") and parts[0][5:].isdigit():
+        idx = int(parts[0][5:])
+        tree = params["layers"]
+        for p in parts[1:]:
+            tree = tree[p]
+        return tree[idx]
+    if len(parts) >= 2 and parts[1].startswith("layer") and parts[1][5:].isdigit():
+        idx = int(parts[1][5:])
+        tree = params[parts[0]]
+        for p in parts[2:]:
+            tree = tree[p]
+        return tree[idx]
+    for p in parts:
+        tree = tree[int(p)] if isinstance(tree, (list, tuple)) else tree[p]
+    return tree
+
+
+def _bits_subtree(policy: BitPolicy, subtree: dict, stacked_key: str, n_layers: int,
+                  prefix: str) -> Any:
+    """Mirror a stacked param subtree with (L,) float bit arrays."""
+
+    def rec(tree, path):
+        if isinstance(tree, dict):
+            out = {}
+            for k, v in tree.items():
+                sub = rec(v, path + (k,))
+                if sub is not None:
+                    out[k] = sub
+            return out or None
+        if path[-1] in QUANT_KEYS and hasattr(tree, "shape") and len(tree.shape) >= 3:
+            vals = [policy.bits[f"{prefix}layer{i:03d}." + ".".join(path)]
+                    for i in range(n_layers)]
+            return jnp.asarray(vals, jnp.float32)
+        return None
+
+    return rec(subtree, ())
+
+
+def bits_for_scan(policy: BitPolicy, params: dict, cfg) -> dict:
+    """Policy -> QAT ``bits`` pytree: scalars for top-level weights, (L,)
+    arrays (mirroring the stacked layout) for per-layer weights."""
+    out: dict[str, Any] = {}
+    for key in STACKED_KEYS:
+        if key in params:
+            prefix = "" if key == "layers" else key + "."
+            n_layers = jax.tree.leaves(params[key])[0].shape[0]
+            sub = _bits_subtree(policy, params[key], key, n_layers, prefix)
+            if sub:
+                out[key] = sub
+    for path, leaf in _walk({k: v for k, v in params.items() if k not in STACKED_KEYS}):
+        if _is_quant_leaf(path, leaf):
+            name = ".".join(path)
+            node = out
+            for p in path[:-1]:
+                node = node.setdefault(p, {})
+            node[path[-1]] = jnp.asarray(policy.bits[name], jnp.float32)
+    return out
+
+
+def quantize_for_serve(params: dict, policy: BitPolicy, cfg) -> dict:
+    """Unstacked (serve-layout) float params -> packed QuantizedTensor leaves.
+
+    The embedding is stored in lm_head layout (d, V) — see decoder.embed_tokens.
+    """
+
+    def rec(tree, path):
+        if isinstance(tree, dict):
+            return {k: rec(v, path + (k,)) for k, v in tree.items()}
+        if isinstance(tree, list):
+            return [rec(v, path + (str(i),)) for i, v in enumerate(tree)]
+        name = _serve_name(path)
+        if name in policy.bits and path[-1] in QUANT_KEYS and tree.ndim >= 2:
+            bits = policy.bits[name]
+            if path[-1] == "embed":
+                return quantize_tensor(jnp.asarray(tree).T, bits)  # (d, V) layout
+            if tree.ndim == 3:  # stacked experts: quantize each (d, f) slice
+                return quantize_tensor(tree, bits)
+            return quantize_tensor(tree, bits)
+        return tree
+
+    return rec(params, ())
+
+
+def _serve_name(path: tuple[str, ...]) -> str:
+    """serve-layout path (lists of layers) -> policy name."""
+    parts = list(path)
+    for skey in STACKED_KEYS:
+        if parts and parts[0] == skey and len(parts) > 1 and parts[1].isdigit():
+            prefix = "" if skey == "layers" else skey + "."
+            return f"{prefix}layer{int(parts[1]):03d}." + ".".join(parts[2:])
+    return ".".join(parts)
+
+
+def sigma_vector(params: dict, specs: tuple[LayerInfo, ...]) -> np.ndarray:
+    """Per-layer weight std-devs in spec order (Phase-1 clustering features)."""
+    return np.asarray([float(jnp.std(get_weight(params, s.name).astype(jnp.float32)))
+                       for s in specs])
+
+
+def kl_vector(params: dict, specs: tuple[LayerInfo, ...], policy: BitPolicy,
+              *, bins: int = 256) -> np.ndarray:
+    """Per-layer normalized KL at the policy's bits (Phase-2 sensitivity)."""
+    from repro.core import stats
+
+    out = []
+    for s in specs:
+        w = get_weight(params, s.name)
+        out.append(float(stats.normalized_kl(w, policy.bits[s.name], bins=bins)))
+    return np.asarray(out)

@@ -1,0 +1,166 @@
+"""QuantEnv implementations: the bridge between the SigmaQuant controller
+(core/controller.py) and real models.
+
+* ``CNNQuantEnv`` — the paper-faithful path: top-1 accuracy on the synthetic
+  image task, SGD QAT, conv/fc layers (paper §V: ResNet/CIFAR-100 analogue).
+* ``LMQuantEnv``  — the assigned-architecture path: quality = ``-val_loss``
+  (DESIGN.md §2: the accuracy constraint sign-flips into a loss constraint),
+  AdamW QAT over the synthetic token task.
+
+Both report ``resource`` per the controller objective: model size (MiB,
+weights only, logical bits — the paper's accounting) or BOPs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import stats
+from repro.core.policy import BitPolicy, LayerInfo
+from repro.data.images import ImageTask
+from repro.data.pipeline import TokenTask, global_batch
+from repro.models import cnn as cnn_mod
+from repro.train import optimizer as opt_mod
+from . import apply as apply_mod
+from . import qat as qat_mod
+
+
+def _bops(policy: BitPolicy) -> float:
+    return policy.bops()
+
+
+class CNNQuantEnv:
+    """QuantEnv over the reduced ResNet + teacher-labeled image task."""
+
+    def __init__(self, params: dict, cfg: cnn_mod.CNNConfig, task: ImageTask,
+                 *, batch: int = 128, steps_per_epoch: int = 20,
+                 objective: str = "size", seed: int = 0):
+        self.params = params
+        self.cfg = cfg
+        self.task = task
+        self.batch = batch
+        self.steps_per_epoch = steps_per_epoch
+        self.objective = objective
+        self._specs = cnn_mod.quant_layer_specs(params, cfg)
+        self._step_fn, ocfg = qat_mod.make_cnn_qat_step(cfg)
+        self._opt_state = opt_mod.init(ocfg, params)
+        self._eval_fn = qat_mod.make_cnn_eval(cfg)
+        self._eval_imgs, self._eval_labels = task.eval_set(512)
+        self._data_step = seed * 1_000_003  # disjoint stream per env
+
+    # -- QuantEnv protocol ---------------------------------------------------
+    def layer_infos(self) -> tuple[LayerInfo, ...]:
+        return self._specs
+
+    def sigmas(self) -> np.ndarray:
+        return np.asarray([
+            float(jnp.std(cnn_mod.get_weight(self.params, s.name).astype(jnp.float32)))
+            for s in self._specs])
+
+    def sensitivities(self, policy: BitPolicy) -> np.ndarray:
+        out = []
+        for s in self._specs:
+            w = cnn_mod.get_weight(self.params, s.name)
+            out.append(float(stats.sensitivity_score(w, policy.bits[s.name])))
+        return np.asarray(out)
+
+    def evaluate(self, policy: BitPolicy) -> float:
+        bits = qat_mod.cnn_bits_pytree(policy)
+        return float(self._eval_fn(self.params, self._eval_imgs, self._eval_labels, bits))
+
+    def calibrate_and_qat(self, policy: BitPolicy, epochs: int) -> None:
+        bits = qat_mod.cnn_bits_pytree(policy)
+        for _ in range(epochs * self.steps_per_epoch):
+            batch = self.task.batch_at(self._data_step, self.batch)
+            self._data_step += 1
+            self.params, self._opt_state, _ = self._step_fn(
+                self.params, self._opt_state, batch, bits)
+
+    def resource(self, policy: BitPolicy) -> float:
+        return _bops(policy) if self.objective == "bops" else policy.model_size_mib()
+
+    # -- extras used by benchmarks -------------------------------------------
+    def float_accuracy(self) -> float:
+        none_bits = {s.name: jnp.asarray(32.0) for s in self._specs}
+        return float(self._eval_fn(self.params, self._eval_imgs, self._eval_labels, none_bits))
+
+    def pretrain(self, steps: int = 300) -> float:
+        """Float pre-training (paper trains the FP32 baseline first)."""
+        bits = {s.name: jnp.asarray(32.0) for s in self._specs}
+        for _ in range(steps):
+            batch = self.task.batch_at(self._data_step, self.batch)
+            self._data_step += 1
+            self.params, self._opt_state, loss = self._step_fn(
+                self.params, self._opt_state, batch, bits)
+        return float(loss)
+
+
+class LMQuantEnv:
+    """QuantEnv over an assigned LM architecture + synthetic token task.
+
+    quality = -val_loss; resource = logical model size (MiB) or BOPs.
+    """
+
+    def __init__(self, params: dict, cfg: Any, shape, task: TokenTask | None = None,
+                 *, qat_steps_per_epoch: int = 4, objective: str = "size"):
+        self.params = params
+        self.cfg = cfg
+        self.shape = shape
+        self.task = task or TokenTask(vocab_size=cfg.vocab_size)
+        self.qat_steps_per_epoch = qat_steps_per_epoch
+        self.objective = objective
+        self._specs = apply_mod.layer_specs(params, cfg)
+        self._step_fn, tcfg = qat_mod.make_lm_qat_step(cfg)
+        self._opt_state = opt_mod.init(tcfg.optimizer, params)
+        self._eval_fn = qat_mod.make_lm_eval(cfg)
+        self._val_batch = global_batch(self.task, cfg, shape, step=2**30)
+        self._data_step = 0
+
+    def layer_infos(self) -> tuple[LayerInfo, ...]:
+        return self._specs
+
+    def sigmas(self) -> np.ndarray:
+        return apply_mod.sigma_vector(self.params, self._specs)
+
+    def sensitivities(self, policy: BitPolicy) -> np.ndarray:
+        out = []
+        for s in self._specs:
+            w = apply_mod.get_weight(self.params, s.name)
+            out.append(float(stats.sensitivity_score(w, policy.bits[s.name])))
+        return np.asarray(out)
+
+    def evaluate(self, policy: BitPolicy) -> float:
+        bits = apply_mod.bits_for_scan(policy, self.params, self.cfg)
+        return -float(self._eval_fn(self.params, self._val_batch, bits))
+
+    def calibrate_and_qat(self, policy: BitPolicy, epochs: int) -> None:
+        bits = apply_mod.bits_for_scan(policy, self.params, self.cfg)
+        for _ in range(epochs * self.qat_steps_per_epoch):
+            batch = global_batch(self.task, self.cfg, self.shape, self._data_step)
+            self._data_step += 1
+            self.params, self._opt_state, _ = self._step_fn(
+                self.params, self._opt_state, batch, bits)
+
+    def resource(self, policy: BitPolicy) -> float:
+        return _bops(policy) if self.objective == "bops" else policy.model_size_mib()
+
+    def float_loss(self) -> float:
+        bits = apply_mod.bits_for_scan(
+            BitPolicy.uniform(self._specs, 32), self.params, self.cfg)
+        return float(self._eval_fn(self.params, self._val_batch, bits))
+
+    def pretrain(self, steps: int) -> float:
+        bits = apply_mod.bits_for_scan(
+            BitPolicy.uniform(self._specs, 32), self.params, self.cfg)
+        loss = float("nan")
+        for _ in range(steps):
+            batch = global_batch(self.task, self.cfg, self.shape, self._data_step)
+            self._data_step += 1
+            self.params, self._opt_state, m = self._step_fn(
+                self.params, self._opt_state, batch, bits)
+            loss = m["loss"]
+        return float(loss)

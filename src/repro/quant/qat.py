@@ -1,0 +1,82 @@
+"""Quantization-aware training loops (the controller's Calibrate+QAT inner op).
+
+Both envs jit a single step whose ``bits`` pytree has a *static structure*
+(one scalar/vector per quantizable leaf) and *traced values* — so every
+policy the controller tries reuses the same compiled step.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policy import BitPolicy
+from repro.models import cnn as cnn_mod
+from repro.models import registry
+from repro.train import optimizer as opt_mod
+from repro.train.train_step import TrainConfig, make_train_step
+
+
+# ---------------------------------------------------------------------------
+# CNN (paper-faithful path)
+# ---------------------------------------------------------------------------
+
+
+def cnn_bits_pytree(policy: BitPolicy) -> dict:
+    return {name: jnp.asarray(b, jnp.float32) for name, b in policy.bits.items()}
+
+
+def make_cnn_qat_step(cfg: cnn_mod.CNNConfig, lr: float = 0.02):
+    """SGD-with-momentum QAT step over the synthetic image task."""
+    ocfg = opt_mod.OptimizerConfig(name="sgd", lr=lr, warmup_steps=0,
+                                   decay_steps=10_000, grad_clip=1.0)
+
+    def loss_fn(params, batch, bits):
+        imgs, labels = batch
+        logits = cnn_mod.forward(params, imgs, cfg, bits=bits)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+        return jnp.mean(logz - gold)
+
+    @jax.jit
+    def step(params, opt_state, batch, bits):
+        loss, grads = jax.value_and_grad(lambda p: loss_fn(p, batch, bits))(params)
+        params, opt_state, _ = opt_mod.apply(ocfg, grads, opt_state, params)
+        return params, opt_state, loss
+
+    return step, ocfg
+
+
+def make_cnn_eval(cfg: cnn_mod.CNNConfig):
+    @jax.jit
+    def top1(params, imgs, labels, bits):
+        logits = cnn_mod.forward(params, imgs, cfg, bits=bits)
+        return jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))
+
+    return top1
+
+
+# ---------------------------------------------------------------------------
+# LM (assigned-architecture path)
+# ---------------------------------------------------------------------------
+
+
+def make_lm_qat_step(cfg, tcfg: TrainConfig | None = None):
+    """Jitted LM train step with the QAT ``bits`` pytree as a traced input."""
+    tcfg = tcfg or TrainConfig(optimizer=opt_mod.OptimizerConfig(lr=1e-3, warmup_steps=10))
+    api = registry.get_api(cfg)
+
+    def loss_fn(params, batch, bits):
+        return api.loss(params, cfg, batch, bits=bits)
+
+    raw = make_train_step(cfg, tcfg, loss_fn)
+    return jax.jit(raw), tcfg
+
+
+def make_lm_eval(cfg):
+    api = registry.get_api(cfg)
+
+    @jax.jit
+    def val_loss(params, batch, bits):
+        return api.loss(params, cfg, batch, bits=bits)
+
+    return val_loss

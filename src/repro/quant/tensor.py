@@ -1,0 +1,82 @@
+"""QuantizedTensor — the serving-side weight container.
+
+A weight matrix quantized per SigmaQuant's scheme (symmetric per-output-
+channel, b-bit) and packed into int8 HBM lanes.  Registered as a pytree so it
+flows through jit/pjit/checkpointing like any array; ``bits`` and ``shape``
+are static metadata.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import packing, quantizer
+
+
+@dataclasses.dataclass
+class QuantizedTensor:
+    """Packed b-bit weight + per-output-channel scale.
+
+    Logical layout: ``shape = (in_features, out_features)`` (or any (..., K, N));
+    packing is along K (the contraction axis) so the unpacked block is
+    contiguous in K for the matmul kernel.  ``packed`` stores K-packed lanes
+    transposed to (..., N, K_packed) — output-channel major, which is both
+    the natural per-channel-scale layout and the kernel's B-operand layout.
+    """
+
+    packed: jax.Array       # int8 (..., N, ceil(K/lanes))
+    scale: jax.Array        # f32  (..., 1, N) broadcastable over K after unpack
+    bits: int               # static
+    shape: tuple[int, ...]  # static logical (..., K, N)
+
+    @property
+    def k(self) -> int:
+        return self.shape[-2]
+
+    @property
+    def n(self) -> int:
+        return self.shape[-1]
+
+    def dequantize(self, dtype=jnp.float32) -> jax.Array:
+        """Back to float (reference path; kernels fuse this into the GEMM).
+
+        Pass the compute dtype (bf16) to halve the materialized traffic on
+        the XLA fallback path.
+        """
+        levels = packing.unpack(self.packed, self.bits, self.k).astype(jnp.int8)
+        w = levels.astype(dtype) * jnp.swapaxes(self.scale, -1, -2).astype(dtype)
+        return jnp.swapaxes(w, -1, -2)  # (..., K, N)
+
+    def container_bytes(self) -> int:
+        return packing.container_bytes(self.shape[:-2] + (self.n, self.k), self.bits)
+
+    def logical_bytes(self) -> float:
+        return packing.logical_bytes(self.shape, self.bits)
+
+
+jax.tree_util.register_dataclass(
+    QuantizedTensor,
+    data_fields=["packed", "scale"],
+    meta_fields=["bits", "shape"],
+)
+
+
+def quantize_tensor(w: jax.Array, bits: int) -> QuantizedTensor:
+    """Quantize a float weight (..., K, N) per output channel and pack along K."""
+    w32 = w.astype(jnp.float32)
+    scale = quantizer.weight_scale(w32, bits, channel_axis=-1)  # (..., 1, N)
+    levels = quantizer.quantize(w32, scale, bits)               # (..., K, N) int32
+    levels_nk = jnp.swapaxes(levels, -1, -2)                    # (..., N, K)
+    packed = packing.pack(levels_nk, bits)
+    return QuantizedTensor(packed=packed, scale=scale, bits=int(bits), shape=tuple(w.shape))
+
+
+def abstract_quantized(shape: tuple[int, ...], bits: int) -> QuantizedTensor:
+    """ShapeDtypeStruct stand-in (dry-run: no allocation)."""
+    *lead, k, n = shape
+    lanes = packing.LANES[bits]
+    packed = jax.ShapeDtypeStruct((*lead, n, -(-k // lanes)), jnp.int8)
+    scale = jax.ShapeDtypeStruct((*lead, 1, n), jnp.float32)
+    return QuantizedTensor(packed=packed, scale=scale, bits=int(bits), shape=tuple(shape))

@@ -1,0 +1,3 @@
+from .model import HwSpec, RooflineTerms, TPU_V5E, roofline_terms, model_flops  # noqa: F401
+from .extract import collective_bytes, cost_summary, CollectiveStats  # noqa: F401
+from . import hlo_cost  # noqa: F401

@@ -1,0 +1,107 @@
+"""Extract roofline inputs from a compiled (dry-run) artifact.
+
+``cost_analysis()`` gives HLO FLOPs and HBM bytes.  Collective bytes are NOT
+in cost_analysis — we parse the optimized HLO text and sum the result-shape
+bytes of every collective op, weighted by a wire factor:
+
+    all-gather          1      (each chip receives ~the full output once)
+    all-reduce          2      (ring = reduce-scatter + all-gather)
+    reduce-scatter      1
+    all-to-all          1
+    collective-permute  1
+
+Totals are *global* (whole mesh); the roofline model divides by chips.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "s4": 0.5, "u4": 0.5, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_WIRE_FACTOR = {
+    "all-gather": 1.0,
+    "all-reduce": 2.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+    "ragged-all-to-all": 1.0,
+}
+
+#: `bf16[4,128]{1,0}` or scalar `f32[]`
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\][^ )]*")
+_COLL_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?\S+\s*=\s*(.*?)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute|"
+    r"ragged-all-to-all)(?:-start|-done)?\(", re.M)
+
+
+def _shape_bytes(type_str: str) -> float:
+    total = 0.0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    by_kind_bytes: dict[str, float]
+    by_kind_count: dict[str, int]
+
+    @property
+    def total_wire_bytes(self) -> float:
+        return sum(self.by_kind_bytes.get(k, 0.0) * _WIRE_FACTOR[k]
+                   for k in self.by_kind_bytes)
+
+    @property
+    def total_raw_bytes(self) -> float:
+        return sum(self.by_kind_bytes.values())
+
+
+def collective_bytes(hlo_text: str) -> CollectiveStats:
+    """Sum result-shape bytes of every collective in optimized HLO text."""
+    by_bytes: dict[str, float] = defaultdict(float)
+    by_count: dict[str, int] = defaultdict(int)
+    seen_done: set[str] = set()
+    for m in _COLL_RE.finditer(hlo_text):
+        result_type, kind = m.group(1), m.group(2)
+        line = hlo_text[m.start():hlo_text.find("\n", m.start())]
+        # async pairs appear as -start/-done; count the -start only
+        if f"{kind}-done" in line:
+            continue
+        by_bytes[kind] += _shape_bytes(result_type)
+        by_count[kind] += 1
+    return CollectiveStats(dict(by_bytes), dict(by_count))
+
+
+def cost_summary(compiled) -> dict:
+    """flops / bytes / per-device peak memory from a compiled executable."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):  # older jax returns [dict]
+        cost = cost[0]
+    out = {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+    }
+    try:
+        mem = compiled.memory_analysis()
+        out["argument_bytes"] = float(getattr(mem, "argument_size_in_bytes", 0))
+        out["output_bytes"] = float(getattr(mem, "output_size_in_bytes", 0))
+        out["temp_bytes"] = float(getattr(mem, "temp_size_in_bytes", 0))
+        out["peak_bytes"] = (out["argument_bytes"] + out["output_bytes"]
+                             + out["temp_bytes"])
+    except Exception:  # backend without memory stats
+        pass
+    return out

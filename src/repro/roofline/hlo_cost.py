@@ -1,0 +1,303 @@
+"""Loop-aware HLO cost analysis.
+
+XLA's ``compiled.cost_analysis()`` visits every instruction ONCE — a
+``lax.scan`` over 48 layers reports 1/48th of the real FLOPs, and
+collectives inside the loop body are similarly undercounted (validated in
+tests/test_hlo_cost.py).  This analyzer re-prices the optimized HLO text
+with ``while`` trip counts taken from the ``known_trip_count`` backend
+config that XLA attaches to scan-derived loops, recursing through fusions
+and loop bodies:
+
+    flops:  dot = 2 * |out| * K (K = prod of contracting dims);
+            elementwise/reduce ~ |out|; everything inside a while x trip.
+    bytes:  per top-level op: sum(|operands|) + |out|; dynamic-slice /
+            dynamic-update-slice touch only the slice; fusion internals are
+            free (they live in registers/VMEM — XLA's own convention).
+    collectives: result-shape bytes x wire factor x trip multiplier.
+
+Validated against XLA's cost_analysis on loop-free modules (dot-dominated
+modules agree to <2%) and against analytic counts on scanned matmuls.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "s4": 0.5, "u4": 0.5, "pred": 1, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_WIRE_FACTOR = {
+    "all-gather": 1.0, "all-reduce": 2.0, "reduce-scatter": 1.0,
+    "all-to-all": 1.0, "collective-permute": 1.0, "ragged-all-to-all": 1.0,
+}
+
+_COLLECTIVES = tuple(_WIRE_FACTOR)
+
+#: ops that are free (layout/meta only)
+_FREE = {"parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+         "after-all", "partition-id", "replica-id", "opt-barrier",
+         "get-dimension-size"}
+
+_ARRAY_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _type_elems_bytes(type_str: str) -> tuple[float, float]:
+    """(n_elements, n_bytes) summed over every array in a (tuple) type."""
+    elems = bytes_ = 0.0
+    for m in _ARRAY_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1.0
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems += n
+        bytes_ += n * _DTYPE_BYTES[dt]
+    return elems, bytes_
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    type_str: str
+    opcode: str
+    operands: list[str]
+    attrs: str
+
+
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.+?)\s+([a-z][\w\-]*)\((.*?)\)(.*)$")
+# computation header: `%name (params...) -> type {` — params may nest parens
+# (tuple-typed while params), so only anchor on the leading name.
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(")
+_TRIP_RE = re.compile(r'known_trip_count[^}]*?"n"\s*:\s*"?(\d+)')
+
+
+def _parse(hlo: str) -> tuple[dict[str, list[Op]], str | None]:
+    comps: dict[str, list[Op]] = {}
+    entry = None
+    cur: list[Op] | None = None
+    for line in hlo.splitlines():
+        if cur is None:
+            m = _COMP_RE.match(line)
+            if m and line.rstrip().endswith("{") and " -> " in line:
+                name = m.group(1)
+                comps[name] = cur = []
+                if line.lstrip().startswith("ENTRY"):
+                    entry = name
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        name, type_str, opcode, args, attrs = m.groups()
+        # operand names appear in the args parens only
+        operands = re.findall(r"%([\w.\-]+)", args)
+        cur.append(Op(name, type_str.strip(), opcode, operands, attrs))
+    return comps, entry
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: dict = dataclasses.field(default_factory=lambda: defaultdict(float))
+    coll_count: dict = dataclasses.field(default_factory=lambda: defaultdict(float))
+
+    def add(self, other: "Cost", mult: float = 1.0) -> None:
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        for k, v in other.coll_bytes.items():
+            self.coll_bytes[k] += v * mult
+        for k, v in other.coll_count.items():
+            self.coll_count[k] += v * mult
+
+    @property
+    def coll_wire_bytes(self) -> float:
+        return sum(v * _WIRE_FACTOR[k] for k, v in self.coll_bytes.items())
+
+
+class HloCostAnalyzer:
+    def __init__(self, hlo_text: str):
+        self.comps, self.entry = _parse(hlo_text)
+        self.shapes: dict[str, str] = {}
+        for ops in self.comps.values():
+            for op in ops:
+                self.shapes[op.name] = op.type_str
+        self._memo: dict[str, Cost] = {}
+        self.warnings: list[str] = []
+
+    # -- helpers -------------------------------------------------------------
+    def _out_elems_bytes(self, op: Op) -> tuple[float, float]:
+        return _type_elems_bytes(op.type_str)
+
+    def _operand_bytes(self, op: Op) -> float:
+        return sum(_type_elems_bytes(self.shapes.get(o, ""))[1] for o in op.operands)
+
+    def _dot_flops(self, op: Op) -> float:
+        out_elems, _ = self._out_elems_bytes(op)
+        m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.attrs)
+        k = 1.0
+        if m and op.operands:
+            lhs_type = self.shapes.get(op.operands[0], "")
+            am = _ARRAY_RE.search(lhs_type)
+            if am:
+                dims = [int(d) for d in am.group(2).split(",") if d]
+                for idx in (int(i) for i in m.group(1).split(",") if i):
+                    if idx < len(dims):
+                        k *= dims[idx]
+        return 2.0 * out_elems * k
+
+    def _conv_flops(self, op: Op) -> float:
+        out_elems, _ = self._out_elems_bytes(op)
+        if len(op.operands) >= 2:
+            kern = _type_elems_bytes(self.shapes.get(op.operands[1], ""))[0]
+            out_t = _ARRAY_RE.search(op.type_str)
+            oc = int(out_t.group(2).split(",")[-1]) if out_t and out_t.group(2) else 1
+            return 2.0 * out_elems * (kern / max(oc, 1))
+        return 2.0 * out_elems
+
+    def _called(self, attrs: str, key: str) -> str | None:
+        m = re.search(key + r"=%([\w.\-]+)", attrs)
+        return m.group(1) if m else None
+
+    # -- main recursion -------------------------------------------------------
+    def comp_cost(self, name: str) -> Cost:
+        if name in self._memo:
+            return self._memo[name]
+        self._memo[name] = Cost()  # cycle guard
+        total = Cost()
+        for op in self.comps.get(name, []):
+            total.add(self.op_cost(op))
+        self._memo[name] = total
+        return total
+
+    def op_cost(self, op: Op) -> Cost:
+        c = Cost()
+        out_elems, out_bytes = self._out_elems_bytes(op)
+        code = op.opcode
+        if code in _FREE:
+            return c
+        if code == "while":
+            trip = 1.0
+            m = _TRIP_RE.search(op.attrs)
+            if m:
+                trip = float(m.group(1))
+            else:
+                self.warnings.append(f"while {op.name}: unknown trip count, x1")
+            for key in ("body", "condition"):
+                sub = self._called(op.attrs, key)
+                if sub:
+                    c.add(self.comp_cost(sub), trip)
+            return c
+        if code == "fusion":
+            sub = self._called(op.attrs, "calls")
+            if sub:
+                inner = self.comp_cost(sub)
+                c.flops += inner.flops
+                c.add(Cost(coll_bytes=inner.coll_bytes, coll_count=inner.coll_count))
+            # HBM traffic: fusion boundary only; in-place DUS/scatter roots
+            # touch the slice/updates, not the buffer; gather roots touch
+            # the addressed rows
+            root = self.comps.get(sub, [])
+            root_op = root[-1] if root else None
+            root_code = root_op.opcode if root_op is not None else ""
+            if root_code == "dynamic-update-slice":
+                upd = _type_elems_bytes(self.shapes.get(root_op.operands[1], ""))[1] \
+                    if len(root_op.operands) > 1 else out_bytes
+                c.bytes += 2 * upd + 64
+            elif root_code == "scatter":
+                upd = _type_elems_bytes(self.shapes.get(root_op.operands[-1], ""))[1] \
+                    if len(root_op.operands) >= 3 else out_bytes
+                c.bytes += 3 * upd + 64
+            elif root_code == "gather":
+                c.bytes += 2 * out_bytes
+            else:
+                c.bytes += self._operand_bytes(op) + out_bytes
+            return c
+        if code == "conditional":
+            # price the max-cost branch (the scan-over-layers cond in the
+            # zamba2 hybrid alternates branches; summing both would overcount,
+            # ignoring them undercounts ~the whole layer body)
+            branches = []
+            m = re.search(r"branch_computations=\{([^}]*)\}", op.attrs)
+            if m:
+                branches = re.findall(r"%([\w.\-]+)", m.group(1))
+            for key in ("true_computation", "false_computation"):
+                sub = self._called(op.attrs, key)
+                if sub:
+                    branches.append(sub)
+            if branches:
+                costs = [self.comp_cost(b) for b in branches]
+                c.add(max(costs, key=lambda x: x.flops + x.bytes))
+            c.bytes += self._operand_bytes(op) + out_bytes
+            return c
+        if code in ("call", "async-start"):
+            for key in ("to_apply", "calls"):
+                sub = self._called(op.attrs, key)
+                if sub:
+                    c.add(self.comp_cost(sub))
+            c.bytes += self._operand_bytes(op) + out_bytes
+            return c
+        if code == "dot":
+            c.flops += self._dot_flops(op)
+            c.bytes += self._operand_bytes(op) + out_bytes
+            return c
+        if code == "convolution":
+            c.flops += self._conv_flops(op)
+            c.bytes += self._operand_bytes(op) + out_bytes
+            return c
+        if code in ("dynamic-slice", "gather"):
+            # touches the addressed slice/rows, not the whole table
+            c.bytes += 2 * out_bytes
+            return c
+        if code == "dynamic-update-slice":
+            upd = _type_elems_bytes(self.shapes.get(op.operands[1], ""))[1] \
+                if len(op.operands) > 1 else out_bytes
+            c.bytes += 2 * upd + 64
+            return c
+        if code == "scatter":
+            # scatter(operand, indices, updates): in-place on the operand;
+            # touches ~2x the update rows plus indices
+            upd = _type_elems_bytes(self.shapes.get(op.operands[-1], ""))[1] \
+                if len(op.operands) >= 3 else out_bytes
+            c.bytes += 3 * upd + 64
+            return c
+        base = code.replace("-start", "").replace("-done", "")
+        if base in _COLLECTIVES:
+            if code.endswith("-done"):
+                return c
+            c.coll_bytes[base] += out_bytes
+            c.coll_count[base] += 1
+            c.bytes += self._operand_bytes(op) + out_bytes
+            return c
+        if code in ("reduce", "reduce-window"):
+            c.flops += self._operand_bytes(op) / 4.0  # ~1 flop per input elem
+            c.bytes += self._operand_bytes(op) + out_bytes
+            return c
+        if code in ("copy", "copy-start", "transpose", "reshape", "slice",
+                    "broadcast", "iota", "concatenate", "gather", "scatter",
+                    "pad", "reverse", "convert", "select", "compare"):
+            c.bytes += self._operand_bytes(op) + out_bytes
+            return c
+        # generic elementwise / everything else: 1 flop per output element
+        c.flops += out_elems
+        c.bytes += self._operand_bytes(op) + out_bytes
+        return c
+
+    def entry_cost(self) -> Cost:
+        if self.entry is None:
+            raise ValueError("no ENTRY computation found")
+        return self.comp_cost(self.entry)
+
+
+def analyze(hlo_text: str) -> Cost:
+    return HloCostAnalyzer(hlo_text).entry_cost()

@@ -1,0 +1,116 @@
+"""Three-term roofline model over the compiled dry-run artifact.
+
+    compute    = HLO_FLOPs       / (chips x peak FLOP/s)
+    memory     = HLO_bytes       / (chips x HBM B/s)
+    collective = collective bytes/ (chips x ICI B/s)
+
+The step's lower bound is max(terms) (perfect overlap) and its upper bound is
+the sum (no overlap).  The *dominant* term is what the §Perf loop iterates on.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class HwSpec:
+    name: str
+    peak_flops: float       # bf16 FLOP/s per chip
+    hbm_bw: float           # bytes/s per chip
+    ici_bw: float           # bytes/s per link per chip
+
+
+#: hardware constants fixed by the brief
+TPU_V5E = HwSpec(name="tpu_v5e", peak_flops=197e12, hbm_bw=819e9, ici_bw=50e9)
+
+
+@dataclasses.dataclass(frozen=True)
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    flops: float            # global HLO FLOPs (= per-device x chips)
+    hbm_bytes: float        # global HLO bytes accessed
+    coll_bytes: float       # global collective bytes on the wire
+    n_chips: int
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        """Best-case step time (perfect overlap of the three engines)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def fraction_of_roofline(self, model_flops: float) -> float:
+        """useful-FLOPs MFU at the roofline-bound step time."""
+        if self.bound_s <= 0:
+            return 0.0
+        return model_flops / (self.n_chips * TPU_V5E.peak_flops * self.bound_s)
+
+
+def roofline_terms(per_device_flops: float, per_device_bytes: float,
+                   per_device_coll_bytes: float, n_chips: int,
+                   hw: HwSpec = TPU_V5E) -> RooflineTerms:
+    """Terms from the *per-device* SPMD module (what cost_analysis reports).
+
+    compute_s = per-device FLOPs / per-chip peak — identical to
+    global_FLOPs / (chips x peak) since global = per-device x chips.
+    """
+    return RooflineTerms(
+        compute_s=per_device_flops / hw.peak_flops,
+        memory_s=per_device_bytes / hw.hbm_bw,
+        collective_s=per_device_coll_bytes / hw.ici_bw,
+        flops=per_device_flops * n_chips,
+        hbm_bytes=per_device_bytes * n_chips,
+        coll_bytes=per_device_coll_bytes * n_chips,
+        n_chips=n_chips)
+
+
+def model_flops(cfg, shape, *, train: bool) -> float:
+    """Useful model FLOPs: 6·N·D (train) / 2·N_active·D (inference) per token.
+
+    N counts *active* parameters (MoE: shared + top_k routed experts).
+    decode shapes process 1 new token per sequence.
+    """
+    n_active = active_params(cfg)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence in the batch
+    return 2.0 * n_active * shape.global_batch
+
+
+def active_params(cfg) -> float:
+    """Parameter count with MoE experts discounted to the activated top-k."""
+    d, f, v, L = cfg.d_model, cfg.d_ff, cfg.vocab_size, cfg.n_layers
+    hd = cfg.resolved_head_dim if cfg.n_heads else 0
+    attn = d * (cfg.n_heads * hd) + 2 * d * (cfg.n_kv_heads * hd) + (cfg.n_heads * hd) * d
+    gated = cfg.mlp in ("swiglu", "geglu")
+    ffn_one = (3 if gated else 2) * d * f
+    if cfg.n_experts:
+        ffn = (cfg.n_shared_experts + cfg.top_k) * ffn_one
+    else:
+        ffn = ffn_one
+    if cfg.family == "ssm":
+        d_in = cfg.d_inner
+        # in_proj (z,x,B,C,dt) + out_proj, conv + A/D negligible
+        per_layer = d * (2 * d_in + 2 * cfg.ssm_state + cfg.ssm_nheads) + d_in * d
+        body = L * per_layer
+    elif cfg.family == "hybrid":
+        d_in = cfg.d_inner
+        mamba = d * (2 * d_in + 2 * cfg.ssm_state + cfg.ssm_nheads) + d_in * d
+        n_attn = L // max(cfg.attn_every, 1)
+        body = L * mamba + n_attn * (attn + ffn)
+    elif cfg.family in ("encdec", "audio"):
+        body = (L + cfg.n_encoder_layers) * (attn + ffn) + L * attn  # + cross-attn
+    else:
+        body = L * (attn + ffn)
+    embed = v * d * (1 if cfg.tie_embeddings else 2)
+    return float(body + embed)

@@ -1,0 +1,59 @@
+"""Re-price saved dry-run HLOs without recompiling.
+
+The dry-run saves each cell's optimized HLO (``<out>/hlo/<tag>.hlo.gz``);
+this tool re-runs the loop-aware cost analysis over those artifacts and
+rewrites the roofline fields of the matching JSON records — so accounting
+fixes iterate in seconds instead of a full compile sweep.
+
+    PYTHONPATH=src python -m repro.roofline.reprice artifacts/dryrun
+"""
+from __future__ import annotations
+
+import glob
+import gzip
+import json
+import os
+import sys
+
+from repro.configs import get_config
+from repro.configs.base import SHAPES
+
+from . import hlo_cost
+from .model import model_flops, roofline_terms
+
+
+def reprice_dir(out_dir: str) -> int:
+    n = 0
+    for jf in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        rec = json.load(open(jf))
+        tag = os.path.basename(jf).rsplit("_", 1)[0]  # strip _<scheme>.json
+        hf = os.path.join(out_dir, "hlo", tag + (f"_{rec['variant']}" if rec.get("variant") else "") + ".hlo.gz")
+        if not os.path.exists(hf):
+            print(f"skip {os.path.basename(jf)} (no HLO)")
+            continue
+        with gzip.open(hf, "rt") as f:
+            cost = hlo_cost.analyze(f.read())
+        terms = roofline_terms(cost.flops, cost.bytes, cost.coll_wire_bytes,
+                               rec["n_chips"])
+        cfg = get_config(rec["arch"])
+        mf = model_flops(cfg, SHAPES[rec["shape"]], train=(rec["kind"] == "train"))
+        rec.update({
+            "hlo_flops": terms.flops, "hlo_bytes": terms.hbm_bytes,
+            "per_device_flops": cost.flops, "per_device_bytes": cost.bytes,
+            "collectives": {k: {"bytes": v, "count": cost.coll_count[k]}
+                            for k, v in cost.coll_bytes.items()},
+            "coll_wire_bytes": cost.coll_wire_bytes,
+            "compute_s": terms.compute_s, "memory_s": terms.memory_s,
+            "collective_s": terms.collective_s, "dominant": terms.dominant,
+            "bound_s": terms.bound_s, "model_flops": mf,
+            "useful_flops_ratio": mf / terms.flops if terms.flops else 0.0,
+            "roofline_fraction": terms.fraction_of_roofline(mf),
+        })
+        json.dump(rec, open(jf, "w"), indent=1)
+        n += 1
+    print(f"repriced {n} records in {out_dir}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(reprice_dir(sys.argv[1] if len(sys.argv) > 1 else "artifacts/dryrun"))

@@ -1,0 +1,7 @@
+from .resilience import (  # noqa: F401
+    FailureInjector,
+    SimulatedFailure,
+    StragglerMonitor,
+)
+from .loop import TrainLoop, LoopConfig  # noqa: F401
+from . import elastic  # noqa: F401

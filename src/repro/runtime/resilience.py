@@ -1,0 +1,72 @@
+"""Fault-tolerance primitives: failure injection, stragglers, retry policy.
+
+On a real fleet the failure signal comes from the runtime (NCCL/ICI timeout,
+host heartbeat loss); offline we inject ``SimulatedFailure`` at chosen steps
+and assert the loop recovers to a bitwise-identical state (tests/test_runtime).
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+
+
+class SimulatedFailure(RuntimeError):
+    """Stands in for a node crash / link flap in offline tests."""
+
+
+@dataclasses.dataclass
+class FailureInjector:
+    """Raises once per step listed in ``fail_at`` (then marks it consumed)."""
+
+    fail_at: tuple[int, ...] = ()
+    kind: str = "step"           # step | save  (where the fault fires)
+
+    def __post_init__(self):
+        self._pending = set(self.fail_at)
+
+    def check(self, step: int, site: str = "step") -> None:
+        if site == self.kind and step in self._pending:
+            self._pending.discard(step)
+            raise SimulatedFailure(f"injected failure at {site} step {step}")
+
+
+class StragglerMonitor:
+    """Per-step wall-time tracker with k-of-median flagging.
+
+    A step slower than ``threshold``x the rolling median is flagged; the
+    caller decides the mitigation (re-shard, evict host, re-dispatch).  The
+    median over a deque is robust to the compile-step outlier at step 0.
+    """
+
+    def __init__(self, window: int = 32, threshold: float = 3.0, warmup: int = 3):
+        self.durations: collections.deque[float] = collections.deque(maxlen=window)
+        self.threshold = threshold
+        self.warmup = warmup
+        self.flagged: list[tuple[int, float, float]] = []  # (step, dt, median)
+
+    def observe(self, step: int, dt: float) -> bool:
+        med = self.median()
+        is_straggler = (len(self.durations) >= self.warmup and med > 0
+                        and dt > self.threshold * med)
+        if is_straggler:
+            self.flagged.append((step, dt, med))
+        else:
+            self.durations.append(dt)  # flagged steps don't poison the median
+        return is_straggler
+
+    def median(self) -> float:
+        if not self.durations:
+            return 0.0
+        s = sorted(self.durations)
+        return s[len(s) // 2]
+
+
+class StepTimer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc):
+        self.dt = time.perf_counter() - self.t0
+        return False

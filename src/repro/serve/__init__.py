@@ -1,0 +1,2 @@
+from .engine import Request, ServeEngine  # noqa: F401
+from .sampling import sample  # noqa: F401

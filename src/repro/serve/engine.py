@@ -1,0 +1,176 @@
+"""Batched serving engine with continuous batching over fixed decode slots.
+
+Design (vLLM-style, adapted to JAX's static shapes):
+
+  * A fixed pool of ``max_slots`` decode slots shares one (B, S, ...) decode
+    state (KV caches / SSM states).  All compiled shapes are static.
+  * **Admission**: a new request's prompt (minus its last token) is prefilled
+    *individually*, right-padded to the next multiple of ``prefill_pad`` (a
+    handful of compiled prefill sizes, not one per length).  The resulting
+    state is tree-inserted into the free slot; then one decode step replays
+    the last prompt token at ``pos = len-1`` — that both yields the first
+    sampled token *and* overwrites the pad garbage at that position.  Pad
+    positions beyond ``pos`` are masked by the per-slot ``kv_valid``.
+  * **Decode**: all active slots advance in one decode step with a *vector*
+    of per-slot positions (layers.attention_decode vmaps the cache write).
+  * **Completion**: a slot frees on EOS/max_tokens and is immediately
+    refilled from the queue (continuous batching).
+
+Weights may be float or SigmaQuant-packed ``QuantizedTensor`` leaves
+(quant.apply.quantize_for_serve) — the engine is agnostic; decode becomes
+memory-bound on HBM weight bytes, which is exactly where per-layer bitwidth
+pays (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import registry
+from .sampling import sample
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: list[int]
+    max_new_tokens: int = 16
+    eos_id: int = -1              # -1: never stop early
+
+
+@dataclasses.dataclass
+class _Slot:
+    req: Request | None = None
+    pos: int = 0                  # next write position
+    generated: list[int] = dataclasses.field(default_factory=list)
+
+    @property
+    def free(self) -> bool:
+        return self.req is None
+
+
+def _round_up(n: int, mult: int) -> int:
+    return -(-n // mult) * mult
+
+
+class ServeEngine:
+    def __init__(self, cfg: ArchConfig, params: dict, *, max_slots: int = 4,
+                 max_seq: int = 256, prefill_pad: int = 32, qimpl: str = "auto",
+                 temperature: float = 0.0, top_k: int = 0, seed: int = 0,
+                 state_dtype=jnp.float32):
+        if cfg.family in ("audio", "encdec"):
+            raise NotImplementedError(
+                "enc-dec serving goes through registry.prefill/decode_step directly "
+                "(cross-attention KV needs the frames input at admission)")
+        self.cfg = cfg
+        self.params = params
+        self.api = registry.get_api(cfg)
+        self.max_slots = max_slots
+        self.max_seq = max_seq
+        self.prefill_pad = prefill_pad
+        self.temperature = temperature
+        self.top_k = top_k
+        self._key = jax.random.key(seed)
+        self.slots = [_Slot() for _ in range(max_slots)]
+        self.state = self.api.init_decode_state(cfg, max_slots, max_seq, state_dtype)
+        self.stats = {"prefill_tokens": 0, "decode_steps": 0, "completed": 0,
+                      "wall_s": 0.0}
+
+        api, cfg_ = self.api, cfg
+
+        def decode(params, state, tokens, pos):
+            logits, state = api.decode_step(params, cfg_, state, tokens, pos, qimpl=qimpl)
+            return logits[:, -1], state
+
+        def prefill(params, tokens):
+            _, st = api.prefill(params, cfg_, tokens=tokens, qimpl=qimpl)
+            return st
+
+        self._decode = jax.jit(decode)
+        self._prefill = jax.jit(prefill)
+
+    # -- state surgery ---------------------------------------------------
+    def _insert_state(self, slot: int, st_new: Any) -> None:
+        """Tree-insert a batch-1 prefill state into slot ``slot``."""
+
+        def ins(cache, new):
+            new = new.astype(cache.dtype)
+            idx = (slot,) + (0,) * (cache.ndim - 1)
+            return jax.lax.dynamic_update_slice(cache, new, idx)
+
+        self.state = jax.tree.map(ins, self.state, st_new)
+
+    # -- admission ---------------------------------------------------------
+    def _admit(self, slot_id: int, req: Request) -> None:
+        prompt = req.prompt
+        assert 1 <= len(prompt) < self.max_seq, (len(prompt), self.max_seq)
+        head, last = prompt[:-1], prompt[-1]
+        slot = self.slots[slot_id]
+        slot.req, slot.generated = req, []
+        if head:
+            pad = min(_round_up(len(head), self.prefill_pad), self.max_seq)
+            toks = np.zeros((1, pad), np.int32)
+            toks[0, : len(head)] = head
+            st = self._prefill(self.params, jnp.asarray(toks))
+            self._insert_state(slot_id, st)
+            self.stats["prefill_tokens"] += len(head)
+        slot.pos = len(prompt) - 1
+        self._pending_token[slot_id] = last  # replayed by the next decode step
+
+    # -- main loop -----------------------------------------------------------
+    def run(self, requests: list[Request]) -> dict[int, list[int]]:
+        """Continuous-batching loop until every request completes."""
+        t0 = time.perf_counter()
+        queue = list(requests)
+        results: dict[int, list[int]] = {}
+        self._pending_token = {}
+
+        def active() -> list[int]:
+            return [i for i, s in enumerate(self.slots) if not s.free]
+
+        while queue or active():
+            # fill free slots
+            for i, s in enumerate(self.slots):
+                if s.free and queue:
+                    self._admit(i, queue.pop(0))
+            act = active()
+            # one lock-step decode over all slots (idle slots step harmlessly at pos)
+            tokens = np.zeros((self.max_slots, 1), np.int32)
+            pos = np.zeros((self.max_slots,), np.int32)
+            for i in act:
+                s = self.slots[i]
+                tokens[i, 0] = self._pending_token.get(i, s.generated[-1] if s.generated else 0)
+                pos[i] = s.pos
+            self._key, sub = jax.random.split(self._key)
+            logits, self.state = self._decode(
+                self.params, self.state, jnp.asarray(tokens), jnp.asarray(pos))
+            toks = np.asarray(sample(logits, sub, temperature=self.temperature,
+                                     top_k=self.top_k))
+            self.stats["decode_steps"] += 1
+            for i in act:
+                s = self.slots[i]
+                self._pending_token.pop(i, None)
+                tok = int(toks[i])
+                s.generated.append(tok)
+                s.pos += 1
+                done = (tok == s.req.eos_id or len(s.generated) >= s.req.max_new_tokens
+                        or s.pos >= self.max_seq - 1)
+                if done:
+                    results[s.req.uid] = list(s.generated)
+                    self.stats["completed"] += 1
+                    self.slots[i] = _Slot()
+        self.stats["wall_s"] += time.perf_counter() - t0
+        return results
+
+    # -- convenience ---------------------------------------------------------
+    def generate(self, prompts: list[list[int]], max_new_tokens: int = 16) -> list[list[int]]:
+        reqs = [Request(uid=i, prompt=p, max_new_tokens=max_new_tokens)
+                for i, p in enumerate(prompts)]
+        out = self.run(reqs)
+        return [out[i] for i in range(len(prompts))]

@@ -1,0 +1,21 @@
+"""Token sampling: greedy / temperature / top-k (jit-friendly)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sample(logits: jax.Array, key: jax.Array | None = None, *,
+           temperature: float = 0.0, top_k: int = 0) -> jax.Array:
+    """logits (..., V) -> token ids (...,).  temperature==0 -> greedy."""
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    assert key is not None, "sampling with temperature needs a PRNG key"
+    logits = logits.astype(jnp.float32) / temperature
+    if top_k:
+        kth = jnp.sort(logits, axis=-1)[..., -top_k][..., None]
+        logits = jnp.where(logits < kth, -jnp.inf, logits)
+    flat = logits.reshape(-1, logits.shape[-1])
+    keys = jax.random.split(key, flat.shape[0])
+    toks = jax.vmap(jax.random.categorical)(keys, flat)
+    return toks.reshape(logits.shape[:-1]).astype(jnp.int32)

@@ -1,0 +1,114 @@
+"""Optimizers: AdamW + momentum SGD, with dtype-configurable moment states.
+
+State dtype matters at scale: fp32 m/v for a 400B-param MoE is 3.2 TB; the
+``state_dtype="bfloat16"`` mode halves optimizer HBM (ZeRO-style, sharded
+over ("pod","data") by dist.sharding) at negligible quality cost for short
+QAT cycles.  Pure-functional: init/apply, pytree in, pytree out.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    name: str = "adamw"          # adamw | sgd
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    momentum: float = 0.9        # sgd
+    grad_clip: float = 1.0
+    state_dtype: str = "float32"
+    warmup_steps: int = 100
+    decay_steps: int = 10_000
+
+
+def lr_schedule(cfg: OptimizerConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup + cosine decay."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(1.0, (step + 1) / max(cfg.warmup_steps, 1))
+    prog = jnp.clip((step - cfg.warmup_steps) / max(cfg.decay_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * (0.1 + 0.9 * cos)
+
+
+def init(cfg: OptimizerConfig, params: Any) -> dict:
+    dt = jnp.dtype(cfg.state_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    state = {"step": jnp.zeros((), jnp.int32)}
+    if cfg.name == "adamw":
+        state["m"] = jax.tree.map(zeros, params)
+        state["v"] = jax.tree.map(zeros, params)
+    elif cfg.name == "sgd":
+        state["m"] = jax.tree.map(zeros, params)
+    else:
+        raise ValueError(cfg.name)
+    return state
+
+
+def _global_norm(tree: Any) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def apply(cfg: OptimizerConfig, grads: Any, state: dict, params: Any
+          ) -> tuple[Any, dict, dict]:
+    """-> (new_params, new_state, metrics)."""
+    gnorm = _global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9)) \
+        if cfg.grad_clip else 1.0
+    step = state["step"]
+    lr = lr_schedule(cfg, step)
+    sdt = jnp.dtype(cfg.state_dtype)
+
+    if cfg.name == "adamw":
+        t = (step + 1).astype(jnp.float32)
+        bc1 = 1 - cfg.beta1**t
+        bc2 = 1 - cfg.beta2**t
+
+        def upd(p, g, m, v):
+            g32 = g.astype(jnp.float32) * clip
+            m32 = cfg.beta1 * m.astype(jnp.float32) + (1 - cfg.beta1) * g32
+            v32 = cfg.beta2 * v.astype(jnp.float32) + (1 - cfg.beta2) * g32 * g32
+            u = (m32 / bc1) / (jnp.sqrt(v32 / bc2) + cfg.eps)
+            decay = cfg.weight_decay * p.astype(jnp.float32) if p.ndim >= 2 else 0.0
+            new_p = p.astype(jnp.float32) - lr * (u + decay)
+            return new_p.astype(p.dtype), m32.astype(sdt), v32.astype(sdt)
+
+        out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+        new_params = jax.tree.map(lambda t3: t3[0], out,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda t3: t3[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree.map(lambda t3: t3[2], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_state = {"step": step + 1, "m": new_m, "v": new_v}
+    else:  # sgd + momentum
+        def upd(p, g, m):
+            g32 = g.astype(jnp.float32) * clip
+            m32 = cfg.momentum * m.astype(jnp.float32) + g32
+            new_p = p.astype(jnp.float32) - lr * m32
+            return new_p.astype(p.dtype), m32.astype(sdt)
+
+        out = jax.tree.map(upd, params, grads, state["m"])
+        new_params = jax.tree.map(lambda t2: t2[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda t2: t2[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_state = {"step": step + 1, "m": new_m}
+
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}
+
+
+def state_specs(opt_state: dict, param_specs: Any) -> dict:
+    """Optimizer-state PartitionSpecs mirror the param specs (m/v)."""
+    out = {"step": jax.tree.map(lambda _: None, opt_state["step"])}
+    from jax.sharding import PartitionSpec as P
+
+    out["step"] = P()
+    for k in ("m", "v"):
+        if k in opt_state:
+            out[k] = param_specs
+    return out

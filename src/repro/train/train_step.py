@@ -1,0 +1,60 @@
+"""The pjit-able training step: loss + grad (+ microbatch accumulation) +
+optimizer update.  QAT rides along via the ``bits`` pytree (closure static
+shape, traced values).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from . import optimizer as opt_mod
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    microbatches: int = 1
+    optimizer: opt_mod.OptimizerConfig = dataclasses.field(
+        default_factory=opt_mod.OptimizerConfig)
+    moe_aux_weight: float = 0.0
+
+
+def _slice_microbatch(batch: Any, i: jax.Array, n: int) -> Any:
+    def sl(x):
+        mb = x.shape[0] // n
+        return jax.lax.dynamic_slice_in_dim(x, i * mb, mb, axis=0)
+
+    return jax.tree.map(sl, batch)
+
+
+def make_train_step(cfg, tcfg: TrainConfig, loss_fn: Callable) -> Callable:
+    """loss_fn(params, batch, bits) -> scalar.  Returns step(params, opt, batch[, bits])."""
+
+    def compute_grads(params, batch, bits):
+        if tcfg.microbatches <= 1:
+            loss, grads = jax.value_and_grad(
+                lambda p: loss_fn(p, batch, bits))(params)
+            return loss, grads
+
+        def body(carry, i):
+            loss_acc, grad_acc = carry
+            mb = _slice_microbatch(batch, i, tcfg.microbatches)
+            loss, grads = jax.value_and_grad(lambda p: loss_fn(p, mb, bits))(params)
+            grad_acc = jax.tree.map(jnp.add, grad_acc, grads)
+            return (loss_acc + loss, grad_acc), None
+
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (loss_sum, grad_sum), _ = jax.lax.scan(
+            body, (jnp.zeros((), jnp.float32), zeros), jnp.arange(tcfg.microbatches))
+        scale = 1.0 / tcfg.microbatches
+        return loss_sum * scale, jax.tree.map(lambda g: (g * scale).astype(g.dtype), grad_sum)
+
+    def step(params, opt_state, batch, bits=None):
+        loss, grads = compute_grads(params, batch, bits)
+        params, opt_state, metrics = opt_mod.apply(tcfg.optimizer, grads, opt_state, params)
+        metrics = dict(metrics, loss=loss)
+        return params, opt_state, metrics
+
+    return step

@@ -1,0 +1,123 @@
+"""Per-architecture smoke tests (assignment requirement): reduced config of
+the same family, one forward/train step on CPU, output shapes + no NaNs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_MODULES, all_configs, get_config, smoke_shape
+from repro.core.policy import BitPolicy
+from repro.launch import specs
+from repro.models import registry
+from repro.quant import apply as qapply
+
+ARCHS = sorted(ARCH_MODULES)
+
+
+@pytest.fixture(scope="module")
+def built():
+    """init each reduced arch once per test session."""
+    cache = {}
+
+    def get(name):
+        if name not in cache:
+            cfg = get_config(name).reduced()
+            api = registry.get_api(cfg)
+            params = api.init(cfg, jax.random.key(0))
+            cache[name] = (cfg, api, params)
+        return cache[name]
+
+    return get
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_train_step_shapes_and_finite(arch, built):
+    cfg, api, params = built(arch)
+    batch = specs.train_batch(cfg, smoke_shape("train"), abstract=False,
+                              key=jax.random.key(1))
+    loss, grads = jax.value_and_grad(lambda p: api.loss(p, cfg, batch))(params)
+    assert np.isfinite(float(loss)), arch
+    for path, g in jax.tree_util.tree_flatten_with_path(grads)[0]:
+        assert bool(jnp.all(jnp.isfinite(g))), (arch, path)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_qat_step_with_mixed_policy(arch, built):
+    """QAT forward with a heterogeneous (2/4/6/8) policy must stay finite."""
+    cfg, api, params = built(arch)
+    infos = qapply.layer_specs(params, cfg)
+    assert len(infos) >= 3, arch
+    rng = np.random.RandomState(0)
+    bits_map = {l.name: int(rng.choice([2, 4, 6, 8])) for l in infos}
+    pol = BitPolicy.from_bits(infos, bits_map)
+    bits = qapply.bits_for_scan(pol, params, cfg)
+    batch = specs.train_batch(cfg, smoke_shape("train"), abstract=False,
+                              key=jax.random.key(2))
+    loss = api.loss(params, cfg, batch, bits=bits)
+    assert np.isfinite(float(loss)), arch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_step_shapes(arch, built):
+    cfg, api, params = built(arch)
+    sparams = api.unstack(params, cfg)
+    di = specs.decode_inputs(cfg, smoke_shape("decode"), abstract=False,
+                             key=jax.random.key(3))
+    logits, state = api.decode_step(sparams, cfg, di["state"], di["token"], di["pos"])
+    assert logits.shape == (2, 1, cfg.vocab_size), arch
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32)))), arch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_shapes(arch, built):
+    cfg, api, params = built(arch)
+    sparams = api.unstack(params, cfg)
+    pf = specs.prefill_inputs(cfg, smoke_shape("prefill"), abstract=False,
+                              key=jax.random.key(4))
+    logits, state = api.prefill(sparams, cfg, **pf)
+    assert logits.shape == (2, 1, cfg.vocab_size), arch
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32)))), arch
+
+
+def test_full_configs_match_assignment():
+    """The FULL configs carry the exact published hyperparameters."""
+    expect = {
+        "whisper-tiny": dict(n_layers=4, d_model=384, n_heads=6, n_kv_heads=6,
+                             d_ff=1536, vocab_size=51865),
+        "gemma-2b": dict(n_layers=18, d_model=2048, n_heads=8, n_kv_heads=1,
+                         d_ff=16384, vocab_size=256000, head_dim=256),
+        "phi3-medium-14b": dict(n_layers=40, d_model=5120, n_heads=40, n_kv_heads=10,
+                                d_ff=17920, vocab_size=100352),
+        "qwen3-8b": dict(n_layers=36, d_model=4096, n_heads=32, n_kv_heads=8,
+                         d_ff=12288, vocab_size=151936, qk_norm=True),
+        "yi-6b": dict(n_layers=32, d_model=4096, n_heads=32, n_kv_heads=4,
+                      d_ff=11008, vocab_size=64000),
+        "zamba2-2.7b": dict(n_layers=54, d_model=2560, n_heads=32, n_kv_heads=32,
+                            d_ff=10240, vocab_size=32000, ssm_state=64),
+        "deepseek-moe-16b": dict(n_layers=28, d_model=2048, n_heads=16, n_kv_heads=16,
+                                 d_ff=1408, vocab_size=102400, n_experts=64,
+                                 n_shared_experts=2, top_k=6),
+        "llama4-maverick-400b-a17b": dict(n_layers=48, d_model=5120, n_heads=40,
+                                          n_kv_heads=8, d_ff=8192, vocab_size=202048,
+                                          n_experts=128, top_k=1),
+        "mamba2-2.7b": dict(n_layers=64, d_model=2560, d_ff=0, vocab_size=50280,
+                            ssm_state=128),
+        "qwen2-vl-2b": dict(n_layers=28, d_model=1536, n_heads=12, n_kv_heads=2,
+                            d_ff=8960, vocab_size=151936, rope="mrope"),
+    }
+    for name, fields in expect.items():
+        cfg = get_config(name)
+        for f, v in fields.items():
+            assert getattr(cfg, f) == v, (name, f, getattr(cfg, f), v)
+
+
+def test_long_500k_skip_rule():
+    from repro.configs import applicable_shapes
+
+    for name, cfg in all_configs().items():
+        names = [s.name for s in applicable_shapes(cfg)]
+        if cfg.family in ("ssm", "hybrid"):
+            assert "long_500k" in names, name
+        else:
+            assert "long_500k" not in names, name
+        assert {"train_4k", "prefill_32k", "decode_32k"} <= set(names), name

@@ -1,0 +1,126 @@
+"""Attention correctness: flash-vs-direct, GQA grouping, RoPE, decode cache."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import layers
+
+
+def naive_attention(q, k, v, n_kv, causal=True, window=0):
+    """Brute-force float64 reference."""
+    b, sq, hq, hd = q.shape
+    skv = k.shape[1]
+    g = hq // n_kv
+    q64 = np.asarray(q, np.float64).reshape(b, sq, n_kv, g, hd)
+    k64, v64 = np.asarray(k, np.float64), np.asarray(v, np.float64)
+    out = np.zeros((b, sq, n_kv, g, hd))
+    off = skv - sq
+    for i in range(sq):
+        lo = max(0, i + off - window + 1) if window else 0
+        hi = (i + off + 1) if causal else skv
+        s = np.einsum("bkgh,btkh->bkgt", q64[:, i], k64[:, lo:hi]) / np.sqrt(hd)
+        p = np.exp(s - s.max(-1, keepdims=True))
+        p /= p.sum(-1, keepdims=True)
+        out[:, i] = np.einsum("bkgt,btkh->bkgh", p, v64[:, lo:hi])
+    return out.reshape(b, sq, hq, hd)
+
+
+@pytest.mark.parametrize("n_kv,hq", [(2, 4), (1, 4), (4, 4)])
+def test_direct_attention_vs_naive(n_kv, hq):
+    key = jax.random.key(0)
+    b, s, hd = 2, 24, 16
+    q = jax.random.normal(jax.random.fold_in(key, 1), (b, s, hq, hd))
+    k = jax.random.normal(jax.random.fold_in(key, 2), (b, s, n_kv, hd))
+    v = jax.random.normal(jax.random.fold_in(key, 3), (b, s, n_kv, hd))
+    out = layers._direct_attention(q, k, v, n_kv, causal=True)
+    ref = naive_attention(q, k, v, n_kv, causal=True)
+    np.testing.assert_allclose(np.asarray(out), ref, rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("window", [0, 8])
+def test_flash_matches_direct(causal, window):
+    key = jax.random.key(1)
+    b, s, hq, n_kv, hd = 2, 64, 4, 2, 16
+    q = jax.random.normal(jax.random.fold_in(key, 1), (b, s, hq, hd))
+    k = jax.random.normal(jax.random.fold_in(key, 2), (b, s, n_kv, hd))
+    v = jax.random.normal(jax.random.fold_in(key, 3), (b, s, n_kv, hd))
+    direct = layers._direct_attention(q, k, v, n_kv, causal=causal, window=window)
+    flash = layers._flash_attention(q, k, v, n_kv, causal=causal, window=window,
+                                    q_chunk=16, kv_chunk=16)
+    np.testing.assert_allclose(np.asarray(flash), np.asarray(direct), rtol=2e-4, atol=2e-5)
+
+
+def test_flash_uneven_chunks_and_gqa():
+    key = jax.random.key(2)
+    b, s, hq, n_kv, hd = 1, 128, 8, 1, 8  # MQA
+    q = jax.random.normal(jax.random.fold_in(key, 1), (b, s, hq, hd))
+    k = jax.random.normal(jax.random.fold_in(key, 2), (b, s, n_kv, hd))
+    v = jax.random.normal(jax.random.fold_in(key, 3), (b, s, n_kv, hd))
+    direct = layers._direct_attention(q, k, v, n_kv, causal=True)
+    flash = layers._flash_attention(q, k, v, n_kv, causal=True, q_chunk=32, kv_chunk=64)
+    np.testing.assert_allclose(np.asarray(flash), np.asarray(direct), rtol=2e-4, atol=2e-5)
+
+
+def test_rope_preserves_norm_and_relativity():
+    key = jax.random.key(3)
+    x = jax.random.normal(key, (1, 8, 2, 16))
+    pos = jnp.broadcast_to(jnp.arange(8), (1, 8)).astype(jnp.int32)
+    y = layers.apply_rope(x, pos)
+    np.testing.assert_allclose(  # rotation: per-position norms preserved
+        np.linalg.norm(np.asarray(y), axis=-1), np.linalg.norm(np.asarray(x), axis=-1),
+        rtol=1e-5)
+    # relative property: <rope(q,i), rope(k,j)> depends only on i-j
+    q = jax.random.normal(jax.random.fold_in(key, 1), (1, 1, 1, 16))
+    k = jax.random.normal(jax.random.fold_in(key, 2), (1, 1, 1, 16))
+    def dot_at(i, j):
+        qi = layers.apply_rope(q, jnp.full((1, 1), i, jnp.int32))
+        kj = layers.apply_rope(k, jnp.full((1, 1), j, jnp.int32))
+        return float(jnp.vdot(qi, kj))
+    assert dot_at(5, 3) == pytest.approx(dot_at(12, 10), rel=1e-4)
+    assert dot_at(5, 3) != pytest.approx(dot_at(5, 0), rel=1e-2)
+
+
+def test_mrope_text_equals_rope_when_positions_coincide():
+    cfg = get_config("qwen2-vl-2b").reduced()
+    hd = cfg.resolved_head_dim
+    x = jax.random.normal(jax.random.key(4), (2, 8, 2, hd))
+    pos = jnp.broadcast_to(jnp.arange(8), (2, 8)).astype(jnp.int32)
+    hd_half = hd // 2
+    sections = (hd_half - 2 * (hd_half // 3), hd_half // 3, hd_half // 3)
+    y_m = layers.apply_mrope(x, jnp.broadcast_to(pos, (3, 2, 8)), sections)
+    y_r = layers.apply_rope(x, pos)
+    np.testing.assert_allclose(np.asarray(y_m), np.asarray(y_r), rtol=1e-5, atol=1e-6)
+
+
+def test_decode_cache_matches_full_forward():
+    """Token-by-token decode must reproduce the full causal forward."""
+    cfg = dataclasses.replace(get_config("yi-6b").reduced(), dtype="float32")
+    key = jax.random.key(5)
+    p = layers.attention_init(key, cfg)
+    b, s = 2, 12
+    x = jax.random.normal(jax.random.fold_in(key, 1), (b, s, cfg.d_model)) * 0.3
+    positions = layers.position_ids(b, s, cfg.rope)
+    full = layers.attention(p, x, cfg, positions, causal=True)
+
+    hd = cfg.resolved_head_dim
+    ck = jnp.zeros((b, s, cfg.n_kv_heads, hd))
+    cv = jnp.zeros((b, s, cfg.n_kv_heads, hd))
+    outs = []
+    for t in range(s):
+        y, (ck, cv) = layers.attention_decode(p, x[:, t : t + 1], ck, cv,
+                                              jnp.asarray(t, jnp.int32), cfg)
+        outs.append(y[:, 0])
+    dec = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full), rtol=2e-3, atol=2e-3)
+
+
+def test_qk_norm_applied():
+    cfg = get_config("qwen3-8b").reduced()
+    assert cfg.qk_norm
+    p = layers.attention_init(jax.random.key(6), cfg)
+    assert "q_norm" in p and "k_norm" in p

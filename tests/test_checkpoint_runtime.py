@@ -1,0 +1,164 @@
+"""Checkpoint atomicity/retention + fault-tolerant loop (failure injection)."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import store as ck
+from repro.quant.tensor import quantize_tensor
+from repro.runtime import elastic
+from repro.runtime.loop import LoopConfig, TrainLoop
+from repro.runtime.resilience import FailureInjector, SimulatedFailure, StragglerMonitor
+
+
+def _tree(seed=0):
+    k = jax.random.key(seed)
+    return {"w": jax.random.normal(k, (8, 4)), "b": jnp.zeros((4,)),
+            "nested": {"m": jnp.ones((2, 2)) * seed}}
+
+
+class TestStore:
+    def test_roundtrip(self, tmp_path):
+        t = _tree(3)
+        ck.save(str(tmp_path), 7, t)
+        got, extra = ck.restore(str(tmp_path), _tree(0), step=7)
+        assert np.allclose(got["w"], t["w"])
+        assert np.allclose(got["nested"]["m"], 3.0)
+
+    def test_quantized_tensor_leaves_roundtrip(self, tmp_path):
+        qt = quantize_tensor(jax.random.normal(jax.random.key(0), (16, 8)), 4)
+        ck.save(str(tmp_path), 0, {"qt": qt})
+        got, _ = ck.restore(str(tmp_path), {"qt": qt}, step=0)
+        assert got["qt"].bits == 4 and got["qt"].shape == (16, 8)
+        assert np.array_equal(np.asarray(got["qt"].packed), np.asarray(qt.packed))
+
+    def test_latest_and_retention(self, tmp_path):
+        for s in (1, 5, 9, 13):
+            ck.save(str(tmp_path), s, _tree(), keep=2)
+        assert ck.latest_step(str(tmp_path)) == 13
+        assert ck.list_steps(str(tmp_path)) == [9, 13]
+
+    def test_shape_mismatch_raises(self, tmp_path):
+        ck.save(str(tmp_path), 0, {"w": jnp.zeros((4,))})
+        with pytest.raises(ValueError):
+            ck.restore(str(tmp_path), {"w": jnp.zeros((5,))}, step=0)
+
+    def test_no_halfwritten_step_visible(self, tmp_path):
+        """A crashed writer leaves only .tmp dirs — list_steps ignores them."""
+        os.makedirs(tmp_path / ".tmp.step_00000003.0/")
+        (tmp_path / ".tmp.step_00000003.0" / "garbage").write_text("x")
+        assert ck.list_steps(str(tmp_path)) == []
+
+    def test_async_store(self, tmp_path):
+        s = ck.CheckpointStore(str(tmp_path), keep=2)
+        s.save_async(0, _tree(1))
+        s.save_async(1, _tree(2))
+        s.wait()
+        got, _ = s.restore_latest(_tree(0))
+        assert np.allclose(got["nested"]["m"], 2.0)
+
+
+def _counting_step(state, batch):
+    """Deterministic toy step: state evolves as a function of (state, batch)."""
+    new = {"x": state["x"] + jnp.sum(batch), "n": state["n"] + 1}
+    return new, {"loss": jnp.sum(batch)}
+
+
+def _batch_fn(step):
+    return jnp.asarray([step, step + 1], jnp.float32)
+
+
+class TestTrainLoop:
+    def _mk(self, tmp_path, injector=None, total=20, save_every=5):
+        store = ck.CheckpointStore(str(tmp_path), keep=3)
+        return TrainLoop(_counting_step, {"x": jnp.zeros(()), "n": jnp.zeros((), jnp.int32)},
+                         _batch_fn, store, LoopConfig(total, save_every=save_every),
+                         injector=injector)
+
+    def test_clean_run(self, tmp_path):
+        loop = self._mk(tmp_path)
+        final = loop.run()
+        assert int(final["n"]) == 20
+
+    def test_failure_recovery_bitexact(self, tmp_path):
+        clean = self._mk(tmp_path / "clean").run()
+        faulty = self._mk(tmp_path / "faulty",
+                          FailureInjector(fail_at=(7, 13))).run()
+        assert int(faulty["n"]) == int(clean["n"]) == 20
+        assert float(faulty["x"]) == float(clean["x"])
+
+    def test_failure_during_save(self, tmp_path):
+        loop = self._mk(tmp_path, FailureInjector(fail_at=(9,), kind="save"))
+        final = loop.run()
+        assert int(final["n"]) == 20
+
+    def test_restart_budget(self, tmp_path):
+        inj = FailureInjector(fail_at=(0,))
+        inj._pending = {0}
+
+        class Always(FailureInjector):
+            def check(self, step, site="step"):
+                if site == "step":
+                    raise SimulatedFailure("always")
+
+        loop = self._mk(tmp_path, Always())
+        with pytest.raises(RuntimeError, match="restart budget"):
+            loop.run()
+
+    def test_resume_from_disk(self, tmp_path):
+        """Kill after 10 steps; a fresh loop object resumes, not restarts."""
+        loop1 = self._mk(tmp_path, total=10, save_every=5)
+        loop1.run()
+        loop2 = self._mk(tmp_path, total=20, save_every=5)
+        final = loop2.run()
+        assert int(final["n"]) == 20
+        # resumed (history starts past 0), not re-run from scratch
+        assert loop2.history[0]["step"] >= 9
+
+
+class TestStraggler:
+    def test_flags_slow_step(self):
+        m = StragglerMonitor(threshold=3.0, warmup=3)
+        for i in range(5):
+            assert not m.observe(i, 1.0)
+        assert m.observe(5, 10.0)
+        assert m.flagged[0][0] == 5
+        # flagged step does not poison the median
+        assert m.median() == 1.0
+
+
+class TestElastic:
+    def test_plan(self):
+        p = elastic.plan_mesh(256, model=16)
+        assert p.shape == (16, 16) and p.n_devices == 256
+
+    def test_multi_pod_plan(self):
+        p = elastic.plan_mesh(512, model=16, pods=2)
+        assert p.shape == (2, 16, 16)
+
+    def test_shrink_after_failure(self):
+        p = elastic.plan_mesh(256, model=16)
+        p2 = elastic.replan_after_failure(p, n_failed=16)
+        assert p2.shape == (15, 16)
+
+    def test_too_small_raises(self):
+        with pytest.raises(ValueError):
+            elastic.plan_mesh(8, model=16)
+
+    def test_batch_for_plan(self):
+        p = elastic.plan_mesh(240, model=16)  # data=15
+        assert elastic.batch_for_plan(256, p) == 255
+
+
+def test_bf16_roundtrip(tmp_path):
+    """ml_dtypes (bf16) leaves survive npz via the uint-view path, bit-exact."""
+    import jax.numpy as jnp
+
+    t = {"w": (jnp.arange(12).reshape(4, 3) * 0.37).astype(jnp.bfloat16)}
+    ck.save(str(tmp_path), 0, t)
+    got, _ = ck.restore(str(tmp_path), t, step=0)
+    assert got["w"].dtype == jnp.bfloat16
+    assert np.array_equal(np.asarray(got["w"]).view(np.uint16),
+                          np.asarray(t["w"]).view(np.uint16))

@@ -1,0 +1,205 @@
+"""Controller tests on synthetic QuantEnvs (no model needed).
+
+The synthetic env gives each layer a ground-truth sensitivity; accuracy is a
+deterministic function of the bit assignment, so the two-phase algorithm's
+behaviour (zones, buffers, refinement direction, abandon) is fully checkable.
+"""
+import numpy as np
+import pytest
+
+from repro.core import clustering
+from repro.core.controller import ControllerConfig, SigmaQuantController
+from repro.core.policy import BitPolicy, LayerInfo, Targets, Zone, classify_zone
+
+
+def make_layers(n=12, seed=0):
+    rng = np.random.RandomState(seed)
+    layers = []
+    for i in range(n):
+        size = int(rng.choice([16_000, 64_000, 256_000]))
+        layers.append(LayerInfo(f"layer{i:02d}", (size // 16, 16), macs=size * 10))
+    return tuple(layers)
+
+
+class SyntheticEnv:
+    """Accuracy = base - sum_l sens_l * noise(bits_l); sens ~ sigma ordering."""
+
+    def __init__(self, layers, seed=0, base_acc=0.80, noise_coef=4.0):
+        rng = np.random.RandomState(seed)
+        self.layers_ = layers
+        self.sig = np.sort(rng.uniform(0.005, 0.2, len(layers)))
+        rng.shuffle(self.sig)
+        self.base_acc = base_acc
+        self.noise_coef = noise_coef
+        self.qat_bonus = 0.0
+
+    def layer_infos(self):
+        return self.layers_
+
+    def sigmas(self):
+        return self.sig
+
+    def sensitivities(self, policy):
+        bits = policy.bit_vector().astype(float)
+        return self.sig * 2.0 ** (-(bits - 8) / 2)
+
+    def evaluate(self, policy):
+        bits = policy.bit_vector().astype(float)
+        noise = (2.0 ** (-bits)) * self.sig * self.noise_coef
+        return self.base_acc - float(noise.sum()) + self.qat_bonus
+
+    def calibrate_and_qat(self, policy, epochs):
+        self.qat_bonus = min(0.01, self.qat_bonus + 0.001 * epochs)
+
+    def resource(self, policy):
+        return policy.model_size_mib()
+
+    def oracle_policy(self):
+        """Known-feasible heterogeneous reference: bits by sigma quartile."""
+        qs = np.quantile(self.sig, [0.25, 0.5, 0.75])
+        bits = {l.name: int(2 + 2 * np.searchsorted(qs, s))
+                for l, s in zip(self.layers_, self.sig)}
+        return BitPolicy.from_bits(self.layers_, bits)
+
+    def feasible_targets(self, acc_slack=0.002, size_slack=1.02):
+        """Targets just inside what the oracle policy achieves."""
+        ref = self.oracle_policy()
+        return Targets(acc_t=self.evaluate(ref) - acc_slack,
+                       res_t=ref.model_size_mib() * size_slack)
+
+
+class TestZones:
+    def setup_method(self):
+        self.t = Targets(acc_t=0.75, res_t=10.0, acc_buffer=0.01, res_buffer=0.05)
+
+    def test_target_zone(self):
+        assert classify_zone(0.80, 9.0, self.t) is Zone.TARGET
+
+    def test_bit_increase(self):
+        assert classify_zone(0.60, 5.0, self.t) is Zone.BIT_INCREASE
+
+    def test_bit_decrease(self):
+        assert classify_zone(0.80, 14.0, self.t) is Zone.BIT_DECREASE
+
+    def test_iteration_when_one_in_buffer(self):
+        assert classify_zone(0.745, 14.0, self.t) is Zone.ITERATION
+
+    def test_abandon_when_both_hopeless(self):
+        assert classify_zone(0.10, 100.0, self.t) is Zone.ABANDON
+
+
+class TestController:
+    def test_reaches_target_zone(self):
+        layers = make_layers()
+        env = SyntheticEnv(layers)
+        t = env.feasible_targets()
+        res = SigmaQuantController(env, t, ControllerConfig(phase2_max_iters=60)).run()
+        assert res.success, f"acc={res.acc} res={res.resource} targets={t}"
+        assert res.acc >= t.acc_t
+        assert res.resource <= t.res_t
+        # heterogeneous: at least two distinct bitwidths in play
+        assert len(set(res.policy.bits.values())) >= 2
+
+    def test_trace_records_phases(self):
+        layers = make_layers()
+        env = SyntheticEnv(layers)
+        full8 = BitPolicy.uniform(layers, 8).model_size_mib()
+        t = Targets(acc_t=0.70, res_t=0.6 * full8)
+        res = SigmaQuantController(env, t).run()
+        phases = {e.phase for e in res.trace}
+        assert 0 in phases  # init entry
+        assert res.trace[0].note.startswith("init")
+
+    def test_abandons_impossible_targets(self):
+        layers = make_layers()
+        env = SyntheticEnv(layers)
+        # accuracy target above anything achievable AND tiny size budget
+        t = Targets(acc_t=0.99, res_t=0.05, acc_buffer=0.001, res_buffer=0.001)
+        res = SigmaQuantController(env, t, ControllerConfig(phase1_max_iters=2,
+                                                            phase2_max_iters=5)).run()
+        assert not res.success
+        assert res.abandoned
+
+    def test_sensitive_layers_get_more_bits(self):
+        layers = make_layers(n=16, seed=3)
+        env = SyntheticEnv(layers, seed=3)
+        t = env.feasible_targets()
+        res = SigmaQuantController(env, t, ControllerConfig(phase2_max_iters=80)).run()
+        bits = res.policy.bit_vector().astype(float)
+        corr = np.corrcoef(env.sig, bits)[0, 1]
+        assert corr > 0.3, f"sigma-bits correlation too weak: {corr}"
+
+    def test_phase1_recorded_separately(self):
+        layers = make_layers()
+        env = SyntheticEnv(layers)
+        full8 = BitPolicy.uniform(layers, 8).model_size_mib()
+        t = Targets(acc_t=0.70, res_t=0.6 * full8)
+        res = SigmaQuantController(env, t).run()
+        if res.phase1_policy is not None:
+            assert np.isfinite(res.phase1_acc)
+
+    def test_resource_objective_bops(self):
+        layers = make_layers()
+        env = SyntheticEnv(layers)
+
+        class BopsEnv(SyntheticEnv):
+            def resource(self, policy):
+                return policy.bops()
+
+        env = BopsEnv(layers)
+        full8 = BitPolicy.uniform(layers, 8).bops()
+        t = Targets(acc_t=0.70, res_t=0.7 * full8)
+        res = SigmaQuantController(env, t, ControllerConfig(objective="bops")).run()
+        assert res.resource <= t.res_t * 1.05 or not res.success
+
+
+class TestClusteringProperties:
+    def test_penalty_balances_clusters(self):
+        rng = np.random.RandomState(0)
+        # one tight blob + few outliers: plain k-means would starve clusters
+        x = np.concatenate([rng.normal(0.05, 0.002, 37), [0.5, 0.52, 0.9]])
+        l0, _ = clustering.adaptive_kmeans(x, 4, 0.0)
+        l1, _ = clustering.adaptive_kmeans(x, 4, 5.0)
+        spread0 = np.bincount(l0, minlength=4).std()
+        spread1 = np.bincount(l1, minlength=4).std()
+        assert spread1 <= spread0
+
+    def test_objective_decreases_vs_random_assignment(self):
+        rng = np.random.RandomState(1)
+        x = rng.uniform(0, 1, 40)
+        labels, _ = clustering.adaptive_kmeans(x, 4, 0.1)
+        obj = clustering.kmeans_objective(x, labels, 4, 0.1)
+        for _ in range(20):
+            rnd = rng.randint(0, 4, len(x))
+            assert obj <= clustering.kmeans_objective(x, rnd, 4, 0.1) + 1e-9
+
+    def test_bit_mapping_shift_clamps(self):
+        labels = np.asarray([0, 1, 2, 3])
+        up = clustering.assign_bits_to_clusters(labels, shift=1)
+        assert list(up) == [4, 6, 8, 8]
+        down = clustering.assign_bits_to_clusters(labels, shift=-1)
+        assert list(down) == [2, 2, 4, 6]
+
+
+class TestPolicyAccounting:
+    def test_uniform_sizes(self):
+        layers = (LayerInfo("a", (1024, 1024), macs=10), LayerInfo("b", (512, 512), macs=5))
+        p8 = BitPolicy.uniform(layers, 8)
+        p4 = BitPolicy.uniform(layers, 4)
+        assert p8.model_size_bytes() == 1024 * 1024 + 512 * 512
+        assert p4.model_size_bytes() == p8.model_size_bytes() / 2
+        assert p4.bops() == p8.bops() / 2
+
+    def test_bumped_clamps(self):
+        layers = (LayerInfo("a", (4, 4), macs=1),)
+        p = BitPolicy.uniform(layers, 8).bumped(["a"], +2)
+        assert p.bits["a"] == 8
+        p = BitPolicy.uniform(layers, 2).bumped(["a"], -2)
+        assert p.bits["a"] == 2
+
+    def test_json_roundtrip(self):
+        layers = (LayerInfo("a", (8, 4), macs=32, kind="dense"),)
+        p = BitPolicy.uniform(layers, 6)
+        q = BitPolicy.from_json(p.to_json())
+        assert q.bits == p.bits and q.act_bits == p.act_bits
+        assert q.layers[0].shape == (8, 4)

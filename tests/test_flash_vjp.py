@@ -1,0 +1,85 @@
+"""Flash attention custom VJP vs the direct-softmax oracle: forward and all
+three gradients, across causal / windowed / cross-attention / GQA shapes,
+plus a hypothesis sweep and the q_offset (sequence-parallel) path."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import layers
+
+
+def _rand(key, *shape):
+    return jax.random.normal(key, shape)
+
+
+def _check(b, sq, skv, nkv, g, hd, causal, window, qc=32, kc=32, atol=3e-5):
+    ks = jax.random.split(jax.random.key(sq * skv + nkv), 3)
+    q = _rand(ks[0], b, sq, nkv * g, hd)
+    k = _rand(ks[1], b, skv, nkv, hd)
+    v = _rand(ks[2], b, skv, nkv, hd)
+
+    out_f = layers._flash_attention(q, k, v, nkv, causal=causal, window=window,
+                                    q_chunk=qc, kv_chunk=kc)
+    out_r = layers._direct_attention(q, k, v, nkv, causal=causal, window=window)
+    np.testing.assert_allclose(out_f, out_r, atol=atol, rtol=atol)
+
+    f = lambda q, k, v: layers._flash_attention(
+        q, k, v, nkv, causal=causal, window=window, q_chunk=qc, kv_chunk=kc).sum() * 1e-2
+    r = lambda q, k, v: layers._direct_attention(
+        q, k, v, nkv, causal=causal, window=window).sum() * 1e-2
+    gf = jax.grad(f, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(r, argnums=(0, 1, 2))(q, k, v)
+    for a, b_ in zip(gf, gr):
+        np.testing.assert_allclose(a, b_, atol=3 * atol, rtol=3 * atol)
+
+
+class TestFlashVJP:
+    def test_causal(self):
+        _check(2, 64, 64, 2, 2, 16, True, 0)
+
+    def test_windowed(self):
+        _check(1, 96, 96, 3, 1, 8, True, 32)
+
+    def test_cross_attention(self):
+        _check(2, 32, 128, 2, 2, 16, False, 0)
+
+    def test_mqa(self):
+        _check(2, 64, 64, 1, 4, 16, True, 0)
+
+    def test_q_offset_matches_slice_of_full(self):
+        key = jax.random.key(7)
+        q = _rand(key, 1, 32, 4, 16)
+        k = _rand(jax.random.fold_in(key, 1), 1, 128, 2, 16)
+        v = _rand(jax.random.fold_in(key, 2), 1, 128, 2, 16)
+        full_q = jnp.zeros((1, 128, 4, 16)).at[:, 32:64].set(q)
+        ref = layers._direct_attention(full_q, k, v, 2, causal=True)[:, 32:64]
+        out = layers._flash_attention(q, k, v, 2, causal=True, q_chunk=16,
+                                      kv_chunk=32, q_offset=32)
+        np.testing.assert_allclose(out, ref, atol=2e-5)
+
+    @hypothesis.given(
+        sq=st.sampled_from([32, 48, 64]),
+        nkv=st.integers(1, 3),
+        g=st.integers(1, 3),
+        hd=st.sampled_from([8, 16]),
+        causal=st.booleans(),
+    )
+    @hypothesis.settings(max_examples=12, deadline=None)
+    def test_property_shapes(self, sq, nkv, g, hd, causal):
+        _check(1, sq, sq, nkv, g, hd, causal, 0, qc=16, kc=16)
+
+    def test_bf16_storage_close_to_f32(self):
+        """bf16 K/V with f32 accumulation stays within bf16 tolerance."""
+        ks = jax.random.split(jax.random.key(3), 3)
+        q = _rand(ks[0], 2, 64, 4, 16)
+        k = _rand(ks[1], 2, 64, 2, 16)
+        v = _rand(ks[2], 2, 64, 2, 16)
+        hi = layers._flash_attention(q, k, v, 2, causal=True, q_chunk=32, kv_chunk=32)
+        lo = layers._flash_attention(q.astype(jnp.bfloat16), k.astype(jnp.bfloat16),
+                                     v.astype(jnp.bfloat16), 2, causal=True,
+                                     q_chunk=32, kv_chunk=32)
+        np.testing.assert_allclose(np.asarray(lo, np.float32), np.asarray(hi),
+                                   atol=3e-2, rtol=3e-2)

@@ -1,0 +1,117 @@
+"""Pallas kernel validation (interpret mode on CPU) vs pure-jnp oracles.
+
+Per assignment: sweep shapes/dtypes and assert_allclose against ref.py.
+"""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import quantizer
+from repro.kernels.fake_quant.ops import fake_quant as fq_op
+from repro.kernels.fake_quant.ref import fake_quant_ref
+from repro.kernels.quant_matmul.kernel import quant_matmul_pallas
+from repro.kernels.quant_matmul.ref import quant_matmul_ref
+from repro.quant.tensor import quantize_tensor
+
+BITS = [2, 4, 6, 8]
+
+
+class TestQuantMatmul:
+    @pytest.mark.parametrize("bits", BITS)
+    @pytest.mark.parametrize("m,k,n", [(8, 256, 128), (48, 512, 256), (130, 1024, 128)])
+    def test_kernel_matches_ref(self, bits, m, k, n):
+        key = jax.random.key(bits * 1000 + m)
+        w = jax.random.normal(jax.random.fold_in(key, 0), (k, n)) * 0.05
+        x = jax.random.normal(jax.random.fold_in(key, 1), (m, k))
+        qt = quantize_tensor(w, bits)
+        ref = quant_matmul_ref(x, qt.packed, qt.scale.reshape(1, -1), bits, k)
+        out = quant_matmul_pallas(x, qt.packed, qt.scale.reshape(1, -1),
+                                  bits=bits, k=k, bk=256, interpret=True)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-4, atol=1e-4)
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_dtypes(self, dtype):
+        key = jax.random.key(7)
+        k, n, m = 256, 128, 16
+        w = jax.random.normal(jax.random.fold_in(key, 0), (k, n)) * 0.05
+        x = (jax.random.normal(jax.random.fold_in(key, 1), (m, k))).astype(dtype)
+        qt = quantize_tensor(w, 4)
+        ref = quant_matmul_ref(x, qt.packed, qt.scale.reshape(1, -1), 4, k)
+        out = quant_matmul_pallas(x, qt.packed, qt.scale.reshape(1, -1),
+                                  bits=4, k=k, interpret=True)
+        assert out.dtype == dtype
+        np.testing.assert_allclose(np.asarray(out, np.float32), np.asarray(ref, np.float32),
+                                   rtol=2e-2, atol=2e-2)
+
+    def test_ref_equals_dequant_matmul(self):
+        key = jax.random.key(8)
+        w = jax.random.normal(jax.random.fold_in(key, 0), (512, 256)) * 0.1
+        x = jax.random.normal(jax.random.fold_in(key, 1), (32, 512))
+        for bits in BITS:
+            qt = quantize_tensor(w, bits)
+            ref = quant_matmul_ref(x, qt.packed, qt.scale.reshape(1, -1), bits, 512)
+            np.testing.assert_allclose(np.asarray(ref), np.asarray(x @ qt.dequantize()),
+                                       rtol=1e-5, atol=1e-5)
+
+    @hypothesis.given(
+        bits=st.sampled_from(BITS),
+        m=st.integers(1, 40),
+        seed=st.integers(0, 1000),
+    )
+    @hypothesis.settings(max_examples=12, deadline=None)
+    def test_property_any_m(self, bits, m, seed):
+        """The kernel must mask/pad any M (decode batches are odd-sized)."""
+        key = jax.random.key(seed)
+        k, n = 256, 128
+        w = jax.random.normal(jax.random.fold_in(key, 0), (k, n)) * 0.1
+        x = jax.random.normal(jax.random.fold_in(key, 1), (m, k))
+        qt = quantize_tensor(w, bits)
+        ref = quant_matmul_ref(x, qt.packed, qt.scale.reshape(1, -1), bits, k)
+        out = quant_matmul_pallas(x, qt.packed, qt.scale.reshape(1, -1),
+                                  bits=bits, k=k, interpret=True)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-4, atol=1e-4)
+
+    def test_quantization_error_scales_with_bits(self):
+        """End-to-end: W2 matmul error >> W8 error (sanity of the whole path)."""
+        key = jax.random.key(9)
+        w = jax.random.normal(jax.random.fold_in(key, 0), (512, 256)) * 0.1
+        x = jax.random.normal(jax.random.fold_in(key, 1), (16, 512))
+        exact = x @ w
+        errs = []
+        for bits in BITS:
+            qt = quantize_tensor(w, bits)
+            out = quant_matmul_ref(x, qt.packed, qt.scale.reshape(1, -1), bits, 512)
+            errs.append(float(jnp.mean((out - exact) ** 2)))
+        assert errs == sorted(errs, reverse=True)
+        assert errs[0] > 30 * errs[-1]
+
+
+class TestFakeQuantKernel:
+    @pytest.mark.parametrize("bits", BITS)
+    @pytest.mark.parametrize("k,n", [(64, 64), (300, 200), (128, 1024)])
+    def test_kernel_matches_ref(self, bits, k, n):
+        w = jax.random.normal(jax.random.key(k + n + bits), (k, n)) * 0.2
+        scale = quantizer.weight_scale(w, bits, channel_axis=-1)
+        ref = fake_quant_ref(w, scale.reshape(1, -1), bits)
+        out = fq_op(w, bits, impl="interpret")
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-6, atol=1e-6)
+
+    def test_matches_core_quantizer(self):
+        w = jax.random.normal(jax.random.key(3), (100, 50))
+        for bits in BITS:
+            np.testing.assert_allclose(
+                np.asarray(fq_op(w, bits, impl="interpret")),
+                np.asarray(quantizer.quantize_dequantize(w, bits)),
+                rtol=1e-6, atol=1e-6)
+
+    @hypothesis.given(seed=st.integers(0, 100), bits=st.sampled_from(BITS))
+    @hypothesis.settings(max_examples=10, deadline=None)
+    def test_idempotent(self, seed, bits):
+        """fake_quant(fake_quant(w)) == fake_quant(w) (projection property)."""
+        w = jax.random.normal(jax.random.key(seed), (32, 16))
+        once = fq_op(w, bits, impl="interpret")
+        twice = fq_op(once, bits, impl="interpret")
+        np.testing.assert_allclose(np.asarray(twice), np.asarray(once), rtol=1e-5, atol=1e-6)

@@ -1,0 +1,86 @@
+"""Roofline extraction: HLO collective parsing + three-term model."""
+import pytest
+
+from repro import roofline
+from repro.configs import get_config
+from repro.configs.base import SHAPES
+from repro.roofline.extract import _shape_bytes, collective_bytes
+from repro.roofline.model import TPU_V5E, active_params, model_flops, roofline_terms
+
+HLO = """
+HloModule jit_step
+%fused (x: f32[16,128]) -> f32[16,128] { ... }
+%all-reduce.1 = f32[256,4096]{1,0} all-reduce(%add.3), channel_id=1
+%all-gather.2 = bf16[1024,512]{1,0} all-gather(%p0), channel_id=2, dimensions={0}
+%rs = f32[64,64]{1,0} reduce-scatter(%x), channel_id=3
+%t = (f32[8,128]{1,0}, f32[8,128]{1,0}) all-to-all(%a, %b), channel_id=4
+%cp = u8[100]{0} collective-permute(%y), channel_id=5
+%ag2-start = bf16[64,64]{1,0} all-gather-start(%p1), channel_id=6
+ROOT %done = bf16[64,64]{1,0} all-gather-done(%ag2-start)
+"""
+
+
+class TestCollectiveParse:
+    def test_kinds_and_bytes(self):
+        st = collective_bytes(HLO)
+        assert st.by_kind_bytes["all-reduce"] == 256 * 4096 * 4
+        assert st.by_kind_bytes["all-gather"] == 1024 * 512 * 2 + 64 * 64 * 2
+        assert st.by_kind_bytes["reduce-scatter"] == 64 * 64 * 4
+        assert st.by_kind_bytes["all-to-all"] == 2 * 8 * 128 * 4
+        assert st.by_kind_bytes["collective-permute"] == 100
+
+    def test_done_ops_not_double_counted(self):
+        st = collective_bytes(HLO)
+        assert st.by_kind_count["all-gather"] == 2  # .2 and -start, not -done
+
+    def test_wire_factor_all_reduce_2x(self):
+        st = collective_bytes("%ar = f32[10]{0} all-reduce(%x), channel_id=1")
+        assert st.total_wire_bytes == 2 * st.total_raw_bytes
+
+    def test_shape_bytes_scalar_and_tuple(self):
+        assert _shape_bytes("f32[]") == 4
+        assert _shape_bytes("(f32[2,2]{1,0}, bf16[4]{0})") == 16 + 8
+
+
+class TestRooflineModel:
+    def test_terms_and_dominant(self):
+        t = roofline_terms(197e12 * 0.010, 819e9 * 0.002, 50e9 * 0.001, 256)
+        assert t.compute_s == pytest.approx(0.010)
+        assert t.memory_s == pytest.approx(0.002)
+        assert t.collective_s == pytest.approx(0.001)
+        assert t.dominant == "compute"
+        assert t.bound_s == pytest.approx(0.010)
+        assert t.flops == pytest.approx(197e12 * 0.010 * 256)
+
+    def test_fraction_of_roofline_peaks_at_1(self):
+        # a step doing exactly peak-flops of useful work -> fraction 1
+        t = roofline_terms(197e12 * 1.0, 0.0, 0.0, 4)
+        assert t.fraction_of_roofline(4 * 197e12 * 1.0) == pytest.approx(1.0)
+
+
+class TestModelFlops:
+    def test_dense_counts(self):
+        cfg = get_config("yi-6b")
+        n = active_params(cfg)
+        assert 5.5e9 < n < 7.0e9  # ~6B
+
+    def test_moe_counts_active_only(self):
+        cfg = get_config("deepseek-moe-16b")
+        n = active_params(cfg)
+        # 16B total, ~2.8B active (2 shared + 6 routed fine-grained experts)
+        assert 2.0e9 < n < 4.5e9
+
+    def test_llama4_active(self):
+        cfg = get_config("llama4-maverick-400b-a17b")
+        n = active_params(cfg)
+        assert 10e9 < n < 25e9  # a17b ~ 17B active
+
+    def test_train_flops_6nd(self):
+        cfg = get_config("yi-6b")
+        f = model_flops(cfg, SHAPES["train_4k"], train=True)
+        assert f == pytest.approx(6 * active_params(cfg) * 256 * 4096)
+
+    def test_decode_flops_one_token(self):
+        cfg = get_config("yi-6b")
+        f = model_flops(cfg, SHAPES["decode_32k"], train=False)
+        assert f == pytest.approx(2 * active_params(cfg) * 128)

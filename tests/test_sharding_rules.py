@@ -1,0 +1,113 @@
+"""Sharding rule engine: head-gated TP, divisibility fallback, batch specs.
+
+Runs in-process on a fake 1-device mesh shape via Mesh construction over
+numpy device arrays is impossible — instead these tests build meshes from
+the single CPU device reshaped (1, 1) and assert the *rule* outputs (specs),
+which depend only on mesh axis sizes, using a mocked mesh object.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.dist import sharding
+
+
+@dataclasses.dataclass
+class FakeMesh:
+    """Only what the rule engine reads: axis_names + shape mapping."""
+    axis_sizes: dict
+
+    @property
+    def axis_names(self):
+        return tuple(self.axis_sizes)
+
+    @property
+    def shape(self):
+        return self.axis_sizes
+
+
+MESH = FakeMesh({"data": 16, "model": 16})
+POD_MESH = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+class TestHeadGating:
+    def test_divisible_heads_shard(self):
+        cfg = get_config("qwen3-8b")  # 32 q heads, 8 kv heads
+        assert sharding._tp_heads_ok("wq", cfg, 16)
+        assert not sharding._tp_heads_ok("wk", cfg, 16)  # 8 kv heads on 16
+
+    def test_indivisible_heads_replicate(self):
+        cfg = get_config("whisper-tiny")  # 6 heads
+        for leaf in ("wq", "wk", "wv", "wo"):
+            assert not sharding._tp_heads_ok(leaf, cfg, 16)
+
+    def test_wq_spec_whisper_vs_qwen(self):
+        whisper, qwen = get_config("whisper-tiny"), get_config("qwen3-8b")
+        sw = sharding._weight_spec("wq", (384, 384), MESH, stacked=False,
+                                   fsdp=True, fsdp_pod=False, cfg=whisper)
+        sq = sharding._weight_spec("wq", (4096, 4096), MESH, stacked=False,
+                                   fsdp=True, fsdp_pod=False, cfg=qwen)
+        assert sw == P(("data",), None)          # TP gated off
+        assert sq == P(("data",), ("model",))    # TP on
+
+    def test_no_cfg_falls_back_to_divisibility(self):
+        s = sharding._weight_spec("wq", (4096, 4096), MESH, stacked=False,
+                                  fsdp=True, fsdp_pod=False)
+        assert s == P(("data",), ("model",))
+
+
+class TestDivisibilityFallback:
+    def test_vocab_not_divisible_replicates(self):
+        # 51865 % 16 != 0 -> lm_head out dim replicated
+        s = sharding._weight_spec("lm_head", (384, 51865), MESH, stacked=False,
+                                  fsdp=True, fsdp_pod=False)
+        assert s == P(("data",), None)
+
+    def test_mlp_shards(self):
+        s = sharding._weight_spec("w_gate", (2048, 16384), MESH, stacked=False,
+                                  fsdp=True, fsdp_pod=False)
+        assert s == P(("data",), ("model",))
+
+    def test_in_proj_never_tp(self):
+        # composite [z|x|B|C|dt] out dim stays replicated even when divisible
+        s = sharding._weight_spec("in_proj", (2560, 10576), MESH, stacked=False,
+                                  fsdp=True, fsdp_pod=False)
+        assert s[1] is None
+
+    def test_experts_ep_over_model(self):
+        s = sharding._weight_spec("w_gate", (64, 2048, 1408), MESH, stacked=False,
+                                  fsdp=True, fsdp_pod=False)
+        assert s == P(("model",), ("data",), None)
+
+    def test_fsdp_pod_widens_fsdp_axes(self):
+        s = sharding._weight_spec("w_gate", (2048, 16384), POD_MESH, stacked=False,
+                                  fsdp=True, fsdp_pod=True)
+        assert s == P(("pod", "data"), ("model",))
+
+
+class TestBatchSpecs:
+    def test_batch_over_pod_data(self):
+        assert sharding.batch_spec(POD_MESH, (256, 4096)) == P(("pod", "data"), None)
+
+    def test_odd_batch_replicates(self):
+        assert sharding.batch_spec(MESH, (7, 128)) == P(None, None)
+
+    def test_kv_cache_heads_else_seq_never_head_dim(self):
+        # 8 kv heads % 16 != 0 -> shard the SEQUENCE dim (flash-decoding
+        # layout); a hd-sharded cache gets replicated by the partitioner
+        # (EXPERIMENTS.md §Perf iteration 0b)
+        s = sharding.kv_cache_spec(MESH, (128, 32768, 8, 128))
+        assert s == P(("data",), ("model",), None, None)
+        s2 = sharding.kv_cache_spec(MESH, (128, 32768, 16, 128))
+        assert s2 == P(("data",), None, ("model",), None)
+
+
+class TestStackedWeights:
+    def test_stacked_layer_dim_skipped(self):
+        s = sharding._weight_spec("wq", (18, 4096, 4096), MESH, stacked=True,
+                                  fsdp=True, fsdp_pod=False,
+                                  cfg=get_config("qwen3-8b"))
+        assert s == P(None, ("data",), ("model",))
