@@ -1,0 +1,110 @@
+"""Decode throughput through ServeEngine -> BENCH_decode.json (repo root).
+
+Measures end-to-end tokens/s of the continuous-batching engine on a
+CPU-friendly quantized config (reduced gemma, W4 packed weights, xla impl)
+so the decode-path perf trajectory is tracked from PR 1 onward:
+
+    PYTHONPATH=src python -m benchmarks.decode_throughput --label optimized
+    PYTHONPATH=src python -m benchmarks.decode_throughput --label baseline
+
+Labels accumulate into the same JSON (the seed engine was measured as
+"baseline" before the decode fast path landed); "speedup" is
+optimized/baseline when both are present.  Registered as the "decode"
+section of benchmarks/run.py.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+
+from repro.configs import gemma_2b
+from repro.core.policy import BitPolicy
+from repro.models import registry
+from repro.quant import apply as qapply
+from repro.serve.engine import ServeEngine
+
+OUT_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_decode.json")
+
+#: the measured cell — small enough for CI, big enough that a decode step
+#: does real matmul work per slot
+BENCH = dict(max_slots=8, max_seq=128, prefill_pad=16, n_requests=24,
+             max_new_tokens=32, bits=4, repeats=3)
+
+
+def _build(seed: int = 0):
+    cfg = gemma_2b.CONFIG.reduced()
+    api = registry.get_api(cfg)
+    params = api.init(cfg, jax.random.key(seed))
+    sp = api.unstack(params, cfg)
+    policy = BitPolicy.uniform(qapply.layer_specs(params, cfg), BENCH["bits"])
+    return cfg, qapply.quantize_for_serve(sp, policy, cfg)
+
+
+def _prompts(n: int):
+    """Deterministic mixed-length prompts (1..24 tokens, several pad shapes)."""
+    lens = [1 + (7 * i) % 24 for i in range(n)]
+    return [[(3 + i + j) % 500 for j in range(ln)] for i, ln in enumerate(lens)]
+
+
+def measure() -> dict:
+    cfg, qp = _build()
+    eng = ServeEngine(cfg, qp, max_slots=BENCH["max_slots"],
+                      max_seq=BENCH["max_seq"], prefill_pad=BENCH["prefill_pad"],
+                      qimpl="xla")
+    prompts = _prompts(BENCH["n_requests"])
+    eng.generate(prompts, max_new_tokens=BENCH["max_new_tokens"])  # compile warmup
+    best = None
+    for _ in range(BENCH["repeats"]):
+        steps0 = eng.stats["decode_steps"]
+        t0 = time.perf_counter()
+        outs = eng.generate(prompts, max_new_tokens=BENCH["max_new_tokens"])
+        dt = time.perf_counter() - t0
+        n_tokens = sum(len(o) for o in outs)
+        rec = {
+            "wall_s": round(dt, 4),
+            "generated_tokens": n_tokens,
+            "decode_steps": eng.stats["decode_steps"] - steps0,
+            "tokens_per_s": round(n_tokens / dt, 2),
+        }
+        if best is None or rec["tokens_per_s"] > best["tokens_per_s"]:
+            best = rec
+    best["steps_per_s"] = round(best["decode_steps"] / best["wall_s"], 2)
+    return best
+
+
+def run(fast: bool = True, label: str = "optimized") -> dict:
+    del fast  # one CI-sized cell; the trajectory comes from the JSON history
+    rec = measure()
+    doc = {"config": dict(BENCH, arch="gemma-2b.reduced", qimpl="xla",
+                          backend=jax.default_backend())}
+    if os.path.exists(OUT_PATH):
+        with open(OUT_PATH) as f:
+            doc.update(json.load(f))
+    doc.setdefault("runs", {})[label] = rec
+    if "baseline" in doc["runs"] and "optimized" in doc["runs"]:
+        doc["speedup"] = round(doc["runs"]["optimized"]["tokens_per_s"]
+                               / doc["runs"]["baseline"]["tokens_per_s"], 2)
+    with open(OUT_PATH, "w") as f:
+        json.dump(doc, f, indent=1)
+    print(f"[{label}] {rec['tokens_per_s']} tok/s "
+          f"({rec['decode_steps']} steps in {rec['wall_s']}s)"
+          + (f" | speedup vs baseline: {doc.get('speedup')}x"
+             if "speedup" in doc else ""))
+    return doc
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--label", default="optimized",
+                    choices=["baseline", "optimized"])
+    args = ap.parse_args(argv)
+    run(label=args.label)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -62,6 +62,23 @@ def pack(levels: jax.Array, bits: int) -> jax.Array:
     return out.astype(jnp.uint8).astype(jnp.int8)
 
 
+def concat_rows(packed_list: list[jax.Array], bits: int) -> jax.Array:
+    """Concatenate K-packed buffers along the output-channel (row) axis.
+
+    Valid only because lanes pack along K (the last axis): rows are whole
+    output channels, so stacking them never splits a container byte.  This
+    is the pack-time half of the decode-path projection fusion — one
+    contiguous packed buffer per Q/K/V or gate/up group, read by a single
+    kernel launch (DESIGN.md §2).
+    """
+    if bits not in LANES:
+        raise ValueError(f"bits must be one of {sorted(LANES)}, got {bits}")
+    kp = {p.shape[-1] for p in packed_list}
+    if len(kp) != 1:
+        raise ValueError(f"row-concat needs equal packed-K, got {sorted(kp)}")
+    return jnp.concatenate(packed_list, axis=-2)
+
+
 def unpack(packed: jax.Array, bits: int, k: int) -> jax.Array:
     """Inverse of :func:`pack`; ``k`` is the original last-axis length."""
     if bits not in LANES:

@@ -1,0 +1,207 @@
+"""Sharding rule engine: head-gated TP, divisibility fallback, batch specs.
+
+One PartitionSpec policy shared by the dry-run, training, and the elastic
+example (DESIGN.md §5):
+
+  * **FSDP** — the in-features dim of every quantizable weight is sharded
+    over the batch axes ("data", widened to ("pod", "data") when
+    ``fsdp_pod``) whenever divisible.
+  * **TP** — the out-features dim goes over "model", *gated*: attention
+    projections only shard when the relevant head count divides the model
+    axis (a head must never be split), composite-packed projections
+    (Mamba2 ``in_proj``) and embeddings never TP-shard, and anything
+    indivisible falls back to replicated rather than erroring.
+  * **Experts** — stacked (E, d_in, d_out) expert weights shard E over
+    "model" (expert parallelism) and d_in over the FSDP axes.
+  * **Batch/activations** — leading dim over ("pod", "data") when divisible,
+    otherwise fully replicated (odd smoke-test batches).
+  * **KV caches** — heads over "model" when divisible, else the *sequence*
+    dim (flash-decoding layout); never the head_dim
+    (EXPERIMENTS.md §Perf iteration 0b).
+
+Rules read only mesh axis names/sizes, so tests drive them with fake
+mesh objects.  ``shard_batch_act`` is the in-model hook: a no-op unless an
+``activation_axes(mesh)`` context is active (single-device tests never pay
+a constraint).
+"""
+from __future__ import annotations
+
+import contextlib
+import math
+from typing import Any
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+#: leaf -> cfg attribute whose head count gates tensor parallelism
+_HEAD_GATED = {"wq": "n_heads", "wo": "n_heads", "wk": "n_kv_heads", "wv": "n_kv_heads"}
+#: leaves whose out dim never TP-shards (composite packs / embeddings)
+_NO_TP = frozenset({"in_proj", "embed"})
+#: leaves the rule engine shards at all (mirrors quant.apply.QUANT_KEYS)
+_WEIGHT_LEAVES = frozenset({
+    "wq", "wk", "wv", "wo", "wqkv", "w_gate", "w_up", "w_gu", "w_down",
+    "in_proj", "out_proj", "embed", "lm_head",
+})
+#: stacked per-layer subtrees (train layout)
+_STACKED_KEYS = ("layers", "enc_layers", "dec_layers")
+
+
+def _axis_size(mesh, name: str) -> int:
+    return int(dict(mesh.shape).get(name, 0))
+
+
+def _fsdp_axes(mesh, fsdp_pod: bool) -> tuple[str, ...]:
+    wanted = ("pod", "data") if fsdp_pod else ("data",)
+    return tuple(a for a in wanted if a in mesh.axis_names)
+
+
+def _batch_axes(mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _axes_size(mesh, axes: tuple[str, ...]) -> int:
+    return math.prod(_axis_size(mesh, a) for a in axes) if axes else 1
+
+
+def _tp_heads_ok(leaf: str, cfg, model_size: int) -> bool:
+    """A head is the atomic TP unit: gate on head-count divisibility."""
+    attr = _HEAD_GATED.get(leaf)
+    if attr is None:
+        return True
+    return getattr(cfg, attr) % model_size == 0
+
+
+def _weight_spec(leaf: str, shape: tuple[int, ...], mesh, *, stacked: bool,
+                 fsdp: bool, fsdp_pod: bool, cfg=None) -> P:
+    """PartitionSpec for one (possibly layer-stacked) weight leaf."""
+    offset = 1 if stacked else 0
+    core = shape[offset:]
+    model = _axis_size(mesh, "model")
+    fsdp_axes = _fsdp_axes(mesh, fsdp_pod) if fsdp else ()
+    fsdp_size = _axes_size(mesh, fsdp_axes)
+
+    def fsdp_dim(d: int):
+        return fsdp_axes if fsdp_axes and d % fsdp_size == 0 else None
+
+    if len(core) == 3:  # stacked experts (E, d_in, d_out): EP over model
+        e, d_in, _ = core
+        ep = ("model",) if model and e % model == 0 else None
+        spec = [ep, fsdp_dim(d_in), None]
+    else:
+        d_in, d_out = core
+        tp_ok = (model and d_out % model == 0 and leaf not in _NO_TP
+                 and (cfg is None or _tp_heads_ok(leaf, cfg, model)))
+        spec = [fsdp_dim(d_in), ("model",) if tp_ok else None]
+    return P(*([None] * offset + spec))
+
+
+def batch_spec(mesh, shape: tuple[int, ...]) -> P:
+    """Batch-leading arrays: dim 0 over (pod, data) when divisible."""
+    axes = _batch_axes(mesh)
+    ok = axes and shape and shape[0] % _axes_size(mesh, axes) == 0
+    return P(*((axes if ok else None,) + (None,) * (len(shape) - 1)))
+
+
+def kv_cache_spec(mesh, shape: tuple[int, ...]) -> P:
+    """(B, S, n_kv, hd) cache: heads over model if divisible, else sequence."""
+    b, s, n_kv, _ = shape
+    axes = _batch_axes(mesh)
+    bspec = axes if axes and b % _axes_size(mesh, axes) == 0 else None
+    model = _axis_size(mesh, "model")
+    if model and n_kv % model == 0:
+        return P(bspec, None, ("model",), None)
+    if model and s % model == 0:
+        return P(bspec, ("model",), None, None)
+    return P(bspec, None, None, None)
+
+
+# ---------------------------------------------------------------------------
+# pytree -> spec-tree builders
+# ---------------------------------------------------------------------------
+
+
+def _leaf_name(path) -> str:
+    """Last dict-key/attr name along a jax keypath (skips list indices)."""
+    for entry in reversed(path):
+        if isinstance(entry, jax.tree_util.DictKey):
+            return str(entry.key)
+        if isinstance(entry, jax.tree_util.GetAttrKey):
+            return str(entry.name)
+    return ""
+
+
+def params_specs(params: Any, mesh, cfg=None, *, fsdp: bool = True,
+                 fsdp_pod: bool = False) -> Any:
+    """Spec tree mirroring ``params``.
+
+    Serve-layout packed weights (``fsdp=False``) are replicated — SigmaQuant
+    compression is what makes full replication affordable, and it is what
+    the zero-collective sequence-parallel prefill assumes (DESIGN.md §5).
+    """
+
+    def spec(path, leaf):
+        shape = getattr(leaf, "shape", ())
+        name = _leaf_name(path)
+        if not fsdp or name not in _WEIGHT_LEAVES or len(shape) < 2:
+            return P()
+        stacked = bool(path) and isinstance(path[0], jax.tree_util.DictKey) \
+            and str(path[0].key) in _STACKED_KEYS and len(shape) >= 3
+        return _weight_spec(name, tuple(shape), mesh, stacked=stacked,
+                            fsdp=fsdp, fsdp_pod=fsdp_pod, cfg=cfg)
+
+    return jax.tree_util.tree_map_with_path(spec, params)
+
+
+def batch_specs(batch: Any, mesh) -> Any:
+    """Spec tree for input batches: batch-dim sharding per leaf."""
+    return jax.tree.map(
+        lambda leaf: batch_spec(mesh, tuple(getattr(leaf, "shape", ()))), batch)
+
+
+def decode_state_specs(state: Any, mesh) -> Any:
+    """Decode states: KV caches get the flash-decoding layout, SSM/conv
+    states shard their batch dim only."""
+
+    def spec(path, leaf):
+        shape = tuple(getattr(leaf, "shape", ()))
+        if _leaf_name(path) in ("k", "v") and len(shape) == 4:
+            return kv_cache_spec(mesh, shape)
+        return batch_spec(mesh, shape)
+
+    return jax.tree_util.tree_map_with_path(spec, state)
+
+
+def to_named(spec_tree: Any, mesh) -> Any:
+    """PartitionSpec tree -> NamedSharding tree (jit in_shardings form)."""
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda s: isinstance(s, P))
+
+
+# ---------------------------------------------------------------------------
+# in-model activation constraints
+# ---------------------------------------------------------------------------
+
+_ACT_MESH: list[Any] = []
+
+
+@contextlib.contextmanager
+def activation_axes(mesh):
+    """Enable ``shard_batch_act`` constraints against ``mesh`` within scope."""
+    _ACT_MESH.append(mesh)
+    try:
+        yield mesh
+    finally:
+        _ACT_MESH.pop()
+
+
+def shard_batch_act(x: jax.Array) -> jax.Array:
+    """Pin an activation's batch sharding (scan-carry anchor).
+
+    Identity when no ``activation_axes`` scope is active, so single-device
+    tests and benches trace no constraint ops.
+    """
+    if not _ACT_MESH:
+        return x
+    mesh = _ACT_MESH[-1]
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, batch_spec(mesh, x.shape)))

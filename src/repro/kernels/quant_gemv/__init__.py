@@ -1,0 +1,5 @@
+from .ops import quant_gemv
+from .kernel import quant_gemv_pallas, GEMV_MAX_M
+from .ref import quant_gemv_ref
+
+__all__ = ["quant_gemv", "quant_gemv_pallas", "quant_gemv_ref", "GEMV_MAX_M"]

@@ -1,0 +1,118 @@
+"""Pallas TPU kernel: skinny-M packed low-bit GEMV for the decode fast path.
+
+    y[M, N] = x[M, K] @ dequant(W_packed[N, K/lanes], scale[N]).T,   M <= 8
+
+Decode is the memory-bound regime the paper's per-layer bitwidth targets
+(DESIGN.md §2): every generated token re-reads all packed weight bytes while
+M is the handful of active slots.  ``quant_matmul_pallas`` tiles M to the
+128-wide MXU dimension, so at M=4 >96% of each x-block and out-block is
+zero padding and the grid still iterates an M axis of size one.  This kernel
+instead:
+
+  * pads M once to the 8-row f32 sublane (the hardware minimum — no M grid
+    axis at all), so the full x row-block stays resident in VMEM for every
+    (N, K) step;
+  * runs grid (N/bn, K/bk), K innermost ("arbitrary") to accumulate the
+    (8, bn) output block in place — weight bytes stream through VMEM exactly
+    once, which is the whole HBM cost of a decode step;
+  * factors the per-output-channel scale out of the K loop: the inner step
+    accumulates x @ levels.T on integer levels, and the scale multiplies the
+    finished block once on the last K step (bn*8 multiplies instead of
+    bn*bk per step).
+
+Weight lanes are unpacked exactly as in quant_matmul (lane-interleaved along
+K), so both kernels share one packed HBM layout and ``quant_matmul`` can
+dispatch here for M <= GEMV_MAX_M with no repacking.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.packing import LANES
+from repro.kernels.quant_matmul.kernel import _CompilerParams, _unpack_block
+
+#: largest M served by the GEMV fast path (one f32 sublane)
+GEMV_MAX_M = 8
+
+
+def _kernel(x_ref, packed_ref, scale_ref, out_ref, *, bits: int, bk: int,
+            k_steps: int):
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    levels = _unpack_block(packed_ref[...], bits, bk)           # (bn, bk) int32
+    x = x_ref[...].astype(jnp.float32)                          # (8, bk)
+    out_ref[...] += jax.lax.dot_general(
+        x, levels.astype(jnp.float32), (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(pl.program_id(1) == k_steps - 1)
+    def _apply_scale():
+        out_ref[...] *= scale_ref[...]                          # (1, bn) bcast
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bits", "k", "bn", "bk", "interpret", "out_dtype")
+)
+def quant_gemv_pallas(
+    x: jax.Array,        # (M, K) float32/bfloat16, M <= GEMV_MAX_M
+    packed: jax.Array,   # (N, K/lanes) int8
+    scale: jax.Array,    # (1, N) f32
+    *,
+    bits: int,
+    k: int,
+    bn: int = 256,
+    bk: int = 512,
+    interpret: bool = False,
+    out_dtype=None,
+) -> jax.Array:
+    m, kx = x.shape
+    n = packed.shape[0]
+    lanes = LANES[bits]
+    assert kx == k, (kx, k)
+    if m > GEMV_MAX_M:
+        raise ValueError(f"GEMV fast path is for M <= {GEMV_MAX_M}, got M={m}")
+    out_dtype = out_dtype or x.dtype
+
+    bk = min(bk, k)
+    # never reject an N the GEMM path accepted: fall back to the largest
+    # divisor (worst case the full N in one block, or narrow blocks for
+    # odd fused widths)
+    bn = _largest_divisor_leq(n, bn)
+    if k % bk or bk % lanes:
+        raise ValueError(f"K={k} must be divisible by bk={bk} (and bk by lanes={lanes})")
+    if m != GEMV_MAX_M:
+        x = jnp.pad(x, ((0, GEMV_MAX_M - m), (0, 0)))
+
+    k_steps = k // bk
+    grid = (n // bn, k_steps)
+    out = pl.pallas_call(
+        functools.partial(_kernel, bits=bits, bk=bk, k_steps=k_steps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((GEMV_MAX_M, bk), lambda j, kk: (0, kk)),
+            pl.BlockSpec((bn, bk // lanes), lambda j, kk: (j, kk)),
+            pl.BlockSpec((1, bn), lambda j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((GEMV_MAX_M, bn), lambda j, kk: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((GEMV_MAX_M, n), jnp.float32),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")
+        ),
+        interpret=interpret,
+    )(x, packed, scale)
+    return out[:m].astype(out_dtype)
+
+
+def _largest_divisor_leq(n: int, target: int) -> int:
+    for d in range(min(target, n), 0, -1):
+        if n % d == 0:
+            return d
+    return 1

@@ -1,0 +1,50 @@
+"""Jit'd public wrapper for the quantized GEMV with impl dispatch.
+
+Mirrors ``quant_matmul``'s dispatch surface:
+
+  "xla"        unpack -> dequant -> jnp.matmul (ref path; SPMD-analyzable)
+  "pallas"     the skinny-M TPU kernel (kernel.py)
+  "interpret"  the Pallas kernel body interpreted on CPU (tests)
+  "auto"       pallas on TPU backends, xla elsewhere
+
+``quant_matmul(impl="auto")`` routes M <= GEMV_MAX_M here, so the decode
+path through quant/apply.py needs no call-site changes — this module exists
+for callers that want the GEMV contract (and its M <= 8 check) explicitly.
+"""
+from __future__ import annotations
+
+import jax
+
+from .kernel import GEMV_MAX_M, quant_gemv_pallas
+from .ref import quant_gemv_ref
+
+
+def _backend() -> str:
+    return jax.default_backend()
+
+
+def quant_gemv(
+    x: jax.Array,           # (..., M, K), prod(leading)*M <= GEMV_MAX_M
+    packed: jax.Array,      # (N, K/lanes) int8
+    scale: jax.Array,       # (1, N) f32
+    bits: int,
+    k: int,
+    *,
+    impl: str = "auto",
+    out_dtype=None,
+) -> jax.Array:
+    if impl == "auto":
+        impl = "pallas" if _backend() == "tpu" else "xla"
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    if impl == "xla":
+        y = quant_gemv_ref(x2, packed, scale, bits, k, out_dtype=out_dtype)
+    elif impl == "pallas":
+        y = quant_gemv_pallas(x2, packed, scale, bits=bits, k=k,
+                              out_dtype=out_dtype or x.dtype)
+    elif impl == "interpret":
+        y = quant_gemv_pallas(x2, packed, scale, bits=bits, k=k, interpret=True,
+                              out_dtype=out_dtype or x.dtype)
+    else:
+        raise ValueError(f"unknown impl {impl!r}")
+    return y.reshape(*lead, -1)

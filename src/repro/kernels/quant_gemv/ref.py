@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the skinny-M quantized GEMV.
+
+The GEMV kernel computes the identical contraction as the GEMM against the
+identical packed layout — only the blocking differs — so the oracle is the
+shared unpack->dequant->dot reference.  Kept as its own symbol (not an
+alias) so the test matrix and dispatch read unambiguously.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.quant_matmul.ref import quant_matmul_ref
+
+
+def quant_gemv_ref(
+    x: jax.Array,            # (M, K) float
+    packed: jax.Array,       # (N, ceil(K/lanes)) int8
+    scale: jax.Array,        # (1, N) or (N,) f32 per-output-channel
+    bits: int,
+    k: int,
+    *,
+    out_dtype=None,
+) -> jax.Array:
+    """y = x @ dequant(packed, scale);  returns (M, N)."""
+    return quant_matmul_ref(x, packed, scale, bits, k, out_dtype=out_dtype)

@@ -23,6 +23,9 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.packing import LANES
 
+# jax<=0.4.x names this TPUCompilerParams; newer releases renamed it
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
 
 def _unpack_block(packed: jax.Array, bits: int, bk: int) -> jax.Array:
     """int8 (bn, bk/lanes) -> int32 levels (bn, bk), sign-extended."""
@@ -97,7 +100,7 @@ def quant_matmul_pallas(
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m_pad, n), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")
         ),
         interpret=interpret,

@@ -3,8 +3,10 @@
 impl:
   "xla"     unpack -> dequant -> jnp.matmul (ref path; what the multi-pod
             dry-run lowers so the HLO stays SPMD-partitionable & analyzable)
-  "pallas"  the TPU kernel (kernel.py)
-  "interpret"  the Pallas kernel body interpreted on CPU (tests)
+  "pallas"  a TPU kernel: the skinny-M GEMV fast path (kernels/quant_gemv)
+            when M <= GEMV_MAX_M — the decode regime, DESIGN.md §2 — else
+            the MXU-blocked GEMM (kernel.py)
+  "interpret"  the selected Pallas kernel body interpreted on CPU (tests)
   "auto"    pallas on TPU backends, xla elsewhere
 """
 from __future__ import annotations
@@ -12,12 +14,26 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.quant_gemv.kernel import GEMV_MAX_M, quant_gemv_pallas
 from .kernel import quant_matmul_pallas
 from .ref import quant_matmul_ref
 
 
 def _backend() -> str:
     return jax.default_backend()
+
+
+def resolve_kernel(impl: str, m: int, backend: str | None = None) -> str:
+    """Resolved dispatch target: "xla" | "gemm" | "gemv" (+ pallas/interpret).
+
+    Split out of :func:`quant_matmul` so tests can assert the auto-dispatch
+    rule (M <= GEMV_MAX_M -> GEMV) without a TPU attached.
+    """
+    if impl == "auto":
+        impl = "pallas" if (backend or _backend()) == "tpu" else "xla"
+    if impl in ("pallas", "interpret") and m <= GEMV_MAX_M:
+        return "gemv"
+    return "gemm" if impl in ("pallas", "interpret") else impl
 
 
 def quant_matmul(
@@ -30,31 +46,52 @@ def quant_matmul(
     impl: str = "auto",
     out_dtype=None,
 ) -> jax.Array:
-    if impl == "auto":
-        impl = "pallas" if _backend() == "tpu" else "xla"
+    if impl not in ("auto", "xla", "pallas", "interpret"):
+        raise ValueError(f"unknown impl {impl!r}")
     lead = x.shape[:-1]
     x2 = x.reshape(-1, x.shape[-1])
-    if impl == "xla":
+    kernel = resolve_kernel(impl, x2.shape[0])
+    interpret = impl == "interpret"
+    if kernel == "xla":
         y = quant_matmul_ref(x2, packed, scale, bits, k, out_dtype=out_dtype)
-    elif impl == "pallas":
-        y = quant_matmul_pallas(x2, packed, scale, bits=bits, k=k, out_dtype=out_dtype or x.dtype)
-    elif impl == "interpret":
-        y = quant_matmul_pallas(
-            x2, packed, scale, bits=bits, k=k, interpret=True, out_dtype=out_dtype or x.dtype
-        )
+    elif kernel == "gemv":
+        y = quant_gemv_pallas(x2, packed, scale, bits=bits, k=k,
+                              interpret=interpret, out_dtype=out_dtype or x.dtype)
     else:
-        raise ValueError(f"unknown impl {impl!r}")
+        y = quant_matmul_pallas(x2, packed, scale, bits=bits, k=k,
+                                interpret=interpret, out_dtype=out_dtype or x.dtype)
     return y.reshape(*lead, -1)
 
 
 def qt_matmul(x: jax.Array, qt, *, impl: str = "auto", out_dtype=None) -> jax.Array:
-    """Matmul against a QuantizedTensor (repro.quant.tensor)."""
-    if qt.packed.ndim != 2:
-        # batched experts etc.: vmap over leading dims
-        f = lambda p, s: qt_matmul_arrays(x, p, s, qt.bits, qt.k, impl=impl, out_dtype=out_dtype)
-        raise NotImplementedError("use explicit vmap for batched QuantizedTensor")
-    return quant_matmul(x, qt.packed, qt.scale.reshape(1, -1), qt.bits, qt.k,
-                        impl=impl, out_dtype=out_dtype)
+    """Matmul against a QuantizedTensor (repro.quant.tensor).
+
+    2-D ``qt``: plain dispatch.  Stacked ``qt`` (leading expert/layer dims,
+    packed ``(..., N, K/lanes)``): vmapped over the leading dims against the
+    matching leading dims of ``x`` — the MoE expert GEMM
+    ``(E, C, d) x (E, d, f)`` without materializing dequantized weights.
+    """
+    if qt.packed.ndim == 2:
+        return quant_matmul(x, qt.packed, qt.scale.reshape(1, -1), qt.bits, qt.k,
+                            impl=impl, out_dtype=out_dtype)
+    n_batch = qt.packed.ndim - 2
+    if x.ndim < n_batch + 2 or x.shape[:n_batch] != qt.packed.shape[:n_batch]:
+        raise ValueError(
+            f"batched QuantizedTensor {qt.packed.shape[:n_batch]} needs x with "
+            f"matching leading dims, got x{x.shape}")
+    # per-channel scales reduce over the expert dims too ((1, 1, N) for an
+    # (E, d, f) stack) — broadcast them up so vmap can map the expert axis
+    scale = jnp.broadcast_to(
+        qt.scale, qt.packed.shape[:n_batch] + qt.scale.shape[n_batch:])
+
+    def one(xe, pe, se):
+        return quant_matmul(xe, pe, se.reshape(1, -1), qt.bits, qt.k,
+                            impl=impl, out_dtype=out_dtype)
+
+    fn = one
+    for _ in range(n_batch):
+        fn = jax.vmap(fn)
+    return fn(x, qt.packed, scale)
 
 
 def qt_matmul_arrays(x, packed, scale, bits, k, *, impl="auto", out_dtype=None):

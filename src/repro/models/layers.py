@@ -166,9 +166,47 @@ def _split_heads(x, n_heads, hd):
 
 def _qkv(p, x, cfg, positions, *, bits=None, qimpl="auto"):
     hd = cfg.resolved_head_dim
+    if "wqkv" in p:
+        # pack-time fused projection group (quant.apply.fuse_projections):
+        # one packed buffer, one kernel launch, split on the N-contiguous out
+        nq, nkv = cfg.n_heads * hd, cfg.n_kv_heads * hd
+        qkv = qdense(p["wqkv"], x, bits=_b(bits, "wqkv"), qimpl=qimpl)
+        qf, kf, vf = jnp.split(qkv, [nq, nq + nkv], axis=-1)
+        q, k, v = (_split_heads(qf, cfg.n_heads, hd),
+                   _split_heads(kf, cfg.n_kv_heads, hd),
+                   _split_heads(vf, cfg.n_kv_heads, hd))
+        return _qkv_post(p, q, k, v, cfg, positions)
     q = _split_heads(qdense(p["wq"], x, bits=_b(bits, "wq"), qimpl=qimpl), cfg.n_heads, hd)
     k = _split_heads(qdense(p["wk"], x, bits=_b(bits, "wk"), qimpl=qimpl), cfg.n_kv_heads, hd)
     v = _split_heads(qdense(p["wv"], x, bits=_b(bits, "wv"), qimpl=qimpl), cfg.n_kv_heads, hd)
+    return _qkv_post(p, q, k, v, cfg, positions)
+
+
+def _q_proj(p, x, cfg, *, bits=None, qimpl="auto"):
+    """Q projection only (cross-attention query path); fused-tree aware.
+
+    On a fused tree this computes the full wqkv product and slices — the
+    K/V columns are wasted, but cross-attention is off the decode hot path
+    and correctness on any fuse_projections output matters more."""
+    if "wqkv" in p:
+        nq = cfg.n_heads * cfg.resolved_head_dim
+        return qdense(p["wqkv"], x, bits=_b(bits, "wqkv"), qimpl=qimpl)[..., :nq]
+    return qdense(p["wq"], x, bits=_b(bits, "wq"), qimpl=qimpl)
+
+
+def _kv_proj(p, x, cfg, *, bits=None, qimpl="auto"):
+    """K/V projections only (cross-attention KV precompute); fused-aware."""
+    hd = cfg.resolved_head_dim
+    if "wqkv" in p:
+        nq, nkv = cfg.n_heads * hd, cfg.n_kv_heads * hd
+        kvf = qdense(p["wqkv"], x, bits=_b(bits, "wqkv"), qimpl=qimpl)[..., nq:]
+        return kvf[..., :nkv], kvf[..., nkv:]
+    return (qdense(p["wk"], x, bits=_b(bits, "wk"), qimpl=qimpl),
+            qdense(p["wv"], x, bits=_b(bits, "wv"), qimpl=qimpl))
+
+
+def _qkv_post(p, q, k, v, cfg, positions):
+    hd = cfg.resolved_head_dim
     if cfg.qk_norm:
         q = rmsnorm(p["q_norm"], q, cfg.norm_eps)
         k = rmsnorm(p["k_norm"], k, cfg.norm_eps)
@@ -395,7 +433,7 @@ def attention(
     if kv is None:
         q, k, v = _qkv(p, x, cfg, positions, bits=bits, qimpl=qimpl)
     else:
-        q = _split_heads(qdense(p["wq"], x, bits=_b(bits, "wq"), qimpl=qimpl), cfg.n_heads, hd)
+        q = _split_heads(_q_proj(p, x, cfg, bits=bits, qimpl=qimpl), cfg.n_heads, hd)
         if cfg.qk_norm:
             q = rmsnorm(p["q_norm"], q, cfg.norm_eps)
         if cfg.rope == "default":
@@ -413,8 +451,9 @@ def attention(
 def cross_kv(p: dict, ctx: jax.Array, cfg, *, bits=None, qimpl: str = "auto"):
     """Precompute cross-attention K/V from encoder output (whisper decode)."""
     hd = cfg.resolved_head_dim
-    k = _split_heads(qdense(p["wk"], ctx, bits=_b(bits, "wk"), qimpl=qimpl), cfg.n_kv_heads, hd)
-    v = _split_heads(qdense(p["wv"], ctx, bits=_b(bits, "wv"), qimpl=qimpl), cfg.n_kv_heads, hd)
+    kf, vf = _kv_proj(p, ctx, cfg, bits=bits, qimpl=qimpl)
+    k = _split_heads(kf, cfg.n_kv_heads, hd)
+    v = _split_heads(vf, cfg.n_kv_heads, hd)
     if cfg.qk_norm:
         k = rmsnorm(p["k_norm"], k, cfg.norm_eps)
     return k, v
@@ -482,8 +521,12 @@ def mlp_init(key, cfg, dtype=jnp.float32) -> dict:
 
 def mlp(p: dict, x: jax.Array, kind: str, *, bits=None, qimpl: str = "auto") -> jax.Array:
     if kind in ("swiglu", "geglu"):
-        g = qdense(p["w_gate"], x, bits=_b(bits, "w_gate"), qimpl=qimpl)
-        u = qdense(p["w_up"], x, bits=_b(bits, "w_up"), qimpl=qimpl)
+        if "w_gu" in p:  # pack-time fused gate|up group (one launch, halve)
+            gu = qdense(p["w_gu"], x, bits=_b(bits, "w_gu"), qimpl=qimpl)
+            g, u = jnp.split(gu, 2, axis=-1)
+        else:
+            g = qdense(p["w_gate"], x, bits=_b(bits, "w_gate"), qimpl=qimpl)
+            u = qdense(p["w_up"], x, bits=_b(bits, "w_up"), qimpl=qimpl)
         act = jax.nn.silu(g) if kind == "swiglu" else jax.nn.gelu(g, approximate=True)
         return qdense(p["w_down"], act * u, bits=_b(bits, "w_down"), qimpl=qimpl)
     h = jax.nn.gelu(qdense(p["w_up"], x, bits=_b(bits, "w_up"), qimpl=qimpl), approximate=True)

@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.fake_quant.ops import fake_quant_ste
+from repro.kernels.quant_matmul.ops import qt_matmul
 from repro.quant.tensor import QuantizedTensor
 from . import layers
 
@@ -88,14 +89,22 @@ def moe_mlp(p: dict, x: jax.Array, cfg, *, bits=None, qimpl: str = "auto") -> ja
     vals = jnp.where(keep[:, None], xf[t_s], 0)
     buf = buf.at[e_s, pos_c].add(vals)
 
-    # 4. batched expert GEMMs
-    wg = _expert_weight(p["w_gate"], None if bits is None else bits.get("w_gate"), x.dtype)
-    wu = _expert_weight(p["w_up"], None if bits is None else bits.get("w_up"), x.dtype)
-    wd = _expert_weight(p["w_down"], None if bits is None else bits.get("w_down"), x.dtype)
-    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, wg.astype(x.dtype))) * jnp.einsum(
-        "ecd,edf->ecf", buf, wu.astype(x.dtype)
-    )
-    y_e = jnp.einsum("ecf,efd->ecd", h, wd.astype(x.dtype))
+    # 4. batched expert GEMMs — packed serve weights go through the vmapped
+    # quantized matmul (dequant fused per expert, no (E, d, f) float
+    # materialization); QAT/float keeps the einsum
+    if isinstance(p["w_gate"], QuantizedTensor):
+        g = qt_matmul(buf, p["w_gate"], impl=qimpl, out_dtype=x.dtype)
+        u = qt_matmul(buf, p["w_up"], impl=qimpl, out_dtype=x.dtype)
+        h = jax.nn.silu(g) * u
+        y_e = qt_matmul(h, p["w_down"], impl=qimpl, out_dtype=x.dtype)
+    else:
+        wg = _expert_weight(p["w_gate"], None if bits is None else bits.get("w_gate"), x.dtype)
+        wu = _expert_weight(p["w_up"], None if bits is None else bits.get("w_up"), x.dtype)
+        wd = _expert_weight(p["w_down"], None if bits is None else bits.get("w_down"), x.dtype)
+        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, wg.astype(x.dtype))) * jnp.einsum(
+            "ecd,edf->ecf", buf, wu.astype(x.dtype)
+        )
+        y_e = jnp.einsum("ecf,efd->ecd", h, wd.astype(x.dtype))
 
     # 5. gather back + combine
     y_tok = y_e[e_s, pos_c] * (g_s * keep)[:, None].astype(x.dtype)

@@ -19,7 +19,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.policy import BitPolicy, LayerInfo
-from repro.quant.tensor import QuantizedTensor, quantize_tensor
+from repro.quant.tensor import QuantizedTensor, concat_quantized, quantize_tensor
 
 #: leaf names that are quantizable weights
 QUANT_KEYS = frozenset({
@@ -169,6 +169,54 @@ def quantize_for_serve(params: dict, policy: BitPolicy, cfg) -> dict:
         return tree
 
     return rec(params, ())
+
+
+#: decode-path kernel-launch fusion groups: members -> fused leaf name
+FUSE_GROUPS = ((("wq", "wk", "wv"), "wqkv"), (("w_gate", "w_up"), "w_gu"))
+
+
+def fuse_projections(params: dict) -> dict:
+    """Concatenate Q/K/V and gate/up packed weights per layer (pack-time).
+
+    At decode (M <= 8 rows) every projection launch is latency-bound, so the
+    serve engine replaces each group with ONE fused ``QuantizedTensor``
+    (``wqkv`` / ``w_gu``) that a single GEMV launch reads; layers.py splits
+    the output at the (cheap, N-contiguous) boundaries (DESIGN.md §2).
+
+    Fusion applies only where exact-output-preserving:
+      * all group members are 2-D ``QuantizedTensor`` at the *same* bitwidth
+        (heterogeneous policies keep per-member launches);
+      * float weights are left alone — they already lower to one XLA dot
+        each and fusing would perturb bitwise parity with the unfused
+        reference path.
+    Walks any params pytree (dense/moe/hybrid serve layouts); MoE expert
+    stacks (3-D) are skipped by the 2-D requirement.
+    """
+
+    def fuse_group(node: dict, names: tuple[str, ...], fused_name: str) -> dict:
+        if not all(n in node for n in names):
+            return node
+        members = [node[n] for n in names]
+        if not all(isinstance(w, QuantizedTensor) and w.packed.ndim == 2
+                   for w in members):
+            return node
+        if len({w.bits for w in members}) != 1 or len({w.k for w in members}) != 1:
+            return node
+        node = {k: v for k, v in node.items() if k not in names}
+        node[fused_name] = concat_quantized(members)
+        return node
+
+    def rec(node):
+        if isinstance(node, dict):
+            node = {k: rec(v) for k, v in node.items()}
+            for names, fused_name in FUSE_GROUPS:
+                node = fuse_group(node, names, fused_name)
+            return node
+        if isinstance(node, list):
+            return [rec(v) for v in node]
+        return node
+
+    return rec(params)
 
 
 def _serve_name(path: tuple[str, ...]) -> str:

@@ -73,6 +73,28 @@ def quantize_tensor(w: jax.Array, bits: int) -> QuantizedTensor:
     return QuantizedTensor(packed=packed, scale=scale, bits=int(bits), shape=tuple(w.shape))
 
 
+def concat_quantized(qts: list[QuantizedTensor]) -> QuantizedTensor:
+    """Fuse same-K, same-bits quantized weights along the output axis.
+
+    ``[(K, N_1), ..., (K, N_g)] -> (K, sum N_i)``: packed rows and per-channel
+    scales concatenate; no requantization happens, so slicing the fused
+    matmul output at the N offsets reproduces the per-member results exactly.
+    Used by quant.apply.fuse_projections for the decode fast path
+    (DESIGN.md §2).
+    """
+    if len({qt.bits for qt in qts}) != 1:
+        raise ValueError(f"cannot fuse mixed bitwidths {[qt.bits for qt in qts]}")
+    if len({qt.shape[:-1] for qt in qts}) != 1 or any(qt.packed.ndim != 2 for qt in qts):
+        raise ValueError("fusion needs 2-D members with identical K "
+                         f"(shapes {[qt.shape for qt in qts]})")
+    bits = qts[0].bits
+    packed = packing.concat_rows([qt.packed for qt in qts], bits)
+    scale = jnp.concatenate([qt.scale for qt in qts], axis=-1)
+    n = sum(qt.n for qt in qts)
+    return QuantizedTensor(packed=packed, scale=scale, bits=bits,
+                           shape=qts[0].shape[:-1] + (n,))
+
+
 def abstract_quantized(shape: tuple[int, ...], bits: int) -> QuantizedTensor:
     """ShapeDtypeStruct stand-in (dry-run: no allocation)."""
     *lead, k, n = shape

@@ -241,11 +241,13 @@ class HloCostAnalyzer:
             c.bytes += self._operand_bytes(op) + out_bytes
             return c
         if code in ("call", "async-start"):
+            # callee internals already price their own boundary traffic;
+            # adding the call-site operand/result bytes double-counts
+            # (XLA:CPU wraps parallel fusions in `call`)
             for key in ("to_apply", "calls"):
                 sub = self._called(op.attrs, key)
                 if sub:
                     c.add(self.comp_cost(sub))
-            c.bytes += self._operand_bytes(op) + out_bytes
             return c
         if code == "dot":
             c.flops += self._dot_flops(op)

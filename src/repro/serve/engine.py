@@ -4,22 +4,35 @@ Design (vLLM-style, adapted to JAX's static shapes):
 
   * A fixed pool of ``max_slots`` decode slots shares one (B, S, ...) decode
     state (KV caches / SSM states).  All compiled shapes are static.
-  * **Admission**: a new request's prompt (minus its last token) is prefilled
-    *individually*, right-padded to the next multiple of ``prefill_pad`` (a
-    handful of compiled prefill sizes, not one per length).  The resulting
-    state is tree-inserted into the free slot; then one decode step replays
-    the last prompt token at ``pos = len-1`` — that both yields the first
-    sampled token *and* overwrites the pad garbage at that position.  Pad
-    positions beyond ``pos`` are masked by the per-slot ``kv_valid``.
-  * **Decode**: all active slots advance in one decode step with a *vector*
-    of per-slot positions (layers.attention_decode vmaps the cache write).
+  * **Admission**: every queued request that fits a free slot is admitted in
+    ONE batch — the prompts (minus their last tokens) right-pad to the
+    group max rounded to ``prefill_pad`` and prefill in a single
+    ``(n_free, pad)`` call (a handful of compiled prefill shapes, not one
+    dispatch per request).  Each row tree-inserts into its slot; the next
+    decode step replays the last prompt token at ``pos = len-1`` — that both
+    yields the first sampled token *and* overwrites the pad garbage at that
+    position.  Pad positions beyond ``pos`` are masked by the per-slot
+    ``kv_valid``.
+  * **Decode (the fast path, DESIGN.md §2/§8)**: all active slots advance in
+    one jitted step with a *vector* of per-slot positions.  The step is
+    compiled with ``donate_argnums`` on the state, so the KV caches update
+    in place instead of being copied every token ("zero-copy").  Sampling
+    runs on-device inside the same jit (PRNG key carried through), so the
+    per-step host transfer is one int32 per slot — never the (B, V) logits.
   * **Completion**: a slot frees on EOS/max_tokens and is immediately
     refilled from the queue (continuous batching).
 
 Weights may be float or SigmaQuant-packed ``QuantizedTensor`` leaves
-(quant.apply.quantize_for_serve) — the engine is agnostic; decode becomes
-memory-bound on HBM weight bytes, which is exactly where per-layer bitwidth
-pays (DESIGN.md §2).
+(quant.apply.quantize_for_serve).  Packed Q/K/V and gate/up groups of equal
+bitwidth are fused at admission time into single packed buffers
+(quant.apply.fuse_projections) so each decode step launches one kernel per
+group; decode is memory-bound on HBM weight bytes, which is exactly where
+per-layer bitwidth pays (DESIGN.md §2).
+
+Known approximation inherited from the padded-prefill scheme: attention
+families mask pad positions exactly, but SSM/hybrid prefill integrates pad
+tokens into the recurrent state, so their decode state depends (weakly) on
+the pad length.
 """
 from __future__ import annotations
 
@@ -33,6 +46,7 @@ import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.models import registry
+from repro.quant import apply as qapply
 from .sampling import sample
 
 
@@ -63,19 +77,23 @@ class ServeEngine:
     def __init__(self, cfg: ArchConfig, params: dict, *, max_slots: int = 4,
                  max_seq: int = 256, prefill_pad: int = 32, qimpl: str = "auto",
                  temperature: float = 0.0, top_k: int = 0, seed: int = 0,
-                 state_dtype=jnp.float32):
+                 state_dtype=jnp.float32, batch_admission: bool = True,
+                 fuse_projections: bool = True):
         if cfg.family in ("audio", "encdec"):
             raise NotImplementedError(
                 "enc-dec serving goes through registry.prefill/decode_step directly "
                 "(cross-attention KV needs the frames input at admission)")
         self.cfg = cfg
-        self.params = params
+        # fuse packed Q/K/V + gate/up groups: one kernel launch per group on
+        # the decode fast path; exact-output-preserving (no requantization)
+        self.params = qapply.fuse_projections(params) if fuse_projections else params
         self.api = registry.get_api(cfg)
         self.max_slots = max_slots
         self.max_seq = max_seq
         self.prefill_pad = prefill_pad
         self.temperature = temperature
         self.top_k = top_k
+        self.batch_admission = batch_admission
         self._key = jax.random.key(seed)
         self.slots = [_Slot() for _ in range(max_slots)]
         self.state = self.api.init_decode_state(cfg, max_slots, max_seq, state_dtype)
@@ -84,44 +102,65 @@ class ServeEngine:
 
         api, cfg_ = self.api, cfg
 
-        def decode(params, state, tokens, pos):
+        def decode(params, state, tokens, pos, key, temperature, top_k):
             logits, state = api.decode_step(params, cfg_, state, tokens, pos, qimpl=qimpl)
-            return logits[:, -1], state
+            last = logits[:, -1]
+            if temperature > 0.0:  # static arg: greedy never touches the key
+                key, sub = jax.random.split(key)
+                toks = sample(last, sub, temperature=temperature, top_k=top_k)
+            else:
+                toks = sample(last)
+            return toks, state, key
 
         def prefill(params, tokens):
             _, st = api.prefill(params, cfg_, tokens=tokens, qimpl=qimpl)
             return st
 
-        self._decode = jax.jit(decode)
+        # donate the decode state: the KV caches / SSM states alias in place
+        # instead of being copied every token.  temperature/top_k ride as
+        # static args so mutating engine.temperature between runs retraces
+        # instead of silently keeping the init-time value.
+        self._decode = jax.jit(decode, donate_argnums=(1,), static_argnums=(5, 6))
         self._prefill = jax.jit(prefill)
 
     # -- state surgery ---------------------------------------------------
-    def _insert_state(self, slot: int, st_new: Any) -> None:
-        """Tree-insert a batch-1 prefill state into slot ``slot``."""
+    def _insert_rows(self, slot_ids: list[int], st_new: Any) -> None:
+        """Tree-insert rows of a batched prefill state into their slots."""
+
+        ids = jnp.asarray(slot_ids)
 
         def ins(cache, new):
-            new = new.astype(cache.dtype)
-            idx = (slot,) + (0,) * (cache.ndim - 1)
-            return jax.lax.dynamic_update_slice(cache, new, idx)
+            # one scatter per leaf: row i of the prefill batch lands in slot
+            # slot_ids[i] (leading prefix of the seq/state dims), without the
+            # per-row full-cache copies a dynamic_update_slice loop would make
+            idx = (ids,) + tuple(slice(0, d) for d in new.shape[1:])
+            return cache.at[idx].set(new.astype(cache.dtype))
 
         self.state = jax.tree.map(ins, self.state, st_new)
 
     # -- admission ---------------------------------------------------------
-    def _admit(self, slot_id: int, req: Request) -> None:
-        prompt = req.prompt
-        assert 1 <= len(prompt) < self.max_seq, (len(prompt), self.max_seq)
-        head, last = prompt[:-1], prompt[-1]
-        slot = self.slots[slot_id]
-        slot.req, slot.generated = req, []
-        if head:
-            pad = min(_round_up(len(head), self.prefill_pad), self.max_seq)
-            toks = np.zeros((1, pad), np.int32)
-            toks[0, : len(head)] = head
-            st = self._prefill(self.params, jnp.asarray(toks))
-            self._insert_state(slot_id, st)
-            self.stats["prefill_tokens"] += len(head)
-        slot.pos = len(prompt) - 1
-        self._pending_token[slot_id] = last  # replayed by the next decode step
+    def _admit(self, assignments: list[tuple[int, Request]]) -> None:
+        """Admit requests into free slots; one padded prefill for the batch."""
+        with_head: list[tuple[int, list[int]]] = []
+        for slot_id, req in assignments:
+            prompt = req.prompt
+            assert 1 <= len(prompt) < self.max_seq, (len(prompt), self.max_seq)
+            slot = self.slots[slot_id]
+            slot.req, slot.generated = req, []
+            slot.pos = len(prompt) - 1
+            self._pending_token[slot_id] = prompt[-1]  # replayed next step
+            if len(prompt) > 1:
+                with_head.append((slot_id, prompt[:-1]))
+        if not with_head:
+            return
+        pad = min(_round_up(max(len(h) for _, h in with_head), self.prefill_pad),
+                  self.max_seq)
+        toks = np.zeros((len(with_head), pad), np.int32)
+        for row, (_, head) in enumerate(with_head):
+            toks[row, : len(head)] = head
+        st = self._prefill(self.params, jnp.asarray(toks))
+        self._insert_rows([slot_id for slot_id, _ in with_head], st)
+        self.stats["prefill_tokens"] += sum(len(h) for _, h in with_head)
 
     # -- main loop -----------------------------------------------------------
     def run(self, requests: list[Request]) -> dict[int, list[int]]:
@@ -129,29 +168,34 @@ class ServeEngine:
         t0 = time.perf_counter()
         queue = list(requests)
         results: dict[int, list[int]] = {}
-        self._pending_token = {}
+        self._pending_token: dict[int, int] = {}
+        tokens_h = np.zeros((self.max_slots, 1), np.int32)
+        pos_h = np.zeros((self.max_slots,), np.int32)
 
         def active() -> list[int]:
             return [i for i, s in enumerate(self.slots) if not s.free]
 
         while queue or active():
-            # fill free slots
-            for i, s in enumerate(self.slots):
-                if s.free and queue:
-                    self._admit(i, queue.pop(0))
+            # fill free slots: one batched admission per loop turn
+            free = [i for i, s in enumerate(self.slots) if s.free]
+            if free and queue:
+                assignments = [(i, queue.pop(0)) for i in free[: len(queue)]]
+                if self.batch_admission:
+                    self._admit(assignments)
+                else:  # reference path: one padded prefill per request
+                    for pair in assignments:
+                        self._admit([pair])
             act = active()
-            # one lock-step decode over all slots (idle slots step harmlessly at pos)
-            tokens = np.zeros((self.max_slots, 1), np.int32)
-            pos = np.zeros((self.max_slots,), np.int32)
+            # one lock-step decode over all slots (idle slots step harmlessly)
             for i in act:
                 s = self.slots[i]
-                tokens[i, 0] = self._pending_token.get(i, s.generated[-1] if s.generated else 0)
-                pos[i] = s.pos
-            self._key, sub = jax.random.split(self._key)
-            logits, self.state = self._decode(
-                self.params, self.state, jnp.asarray(tokens), jnp.asarray(pos))
-            toks = np.asarray(sample(logits, sub, temperature=self.temperature,
-                                     top_k=self.top_k))
+                tokens_h[i, 0] = self._pending_token.get(
+                    i, s.generated[-1] if s.generated else 0)
+                pos_h[i] = s.pos
+            toks_dev, self.state, self._key = self._decode(
+                self.params, self.state, jnp.asarray(tokens_h),
+                jnp.asarray(pos_h), self._key, self.temperature, self.top_k)
+            toks = np.asarray(toks_dev)  # ONE (B,) int32 host transfer
             self.stats["decode_steps"] += 1
             for i in act:
                 s = self.slots[i]

@@ -163,15 +163,23 @@ class TestStats:
         assert vals == sorted(vals, reverse=True)
 
     def test_sigma_correlates_with_kl(self):
-        """Paper Table I: wider distributions hurt more at fixed low bits."""
+        """Paper Table I: higher-sigma (heavier-tailed) layers are more
+        quantization-sensitive.
+
+        The max-scale quantizer is scale-free and the histogram support
+        scales with max|w|, so a *pure rescale* is invisible to the KL —
+        the sweep must widen the tails instead (student-t vs gaussian).
+        Single draws are noisy at 256-bin resolution, so the claim is
+        asserted on seed-averaged extremes."""
         key = jax.random.key(10)
-        # heavy-tailed (high sigma relative to structure) vs tight gaussian
-        sigmas, kls = [], []
-        for i, s in enumerate([0.01, 0.05, 0.1, 0.5]):
-            w = jax.random.laplace(jax.random.fold_in(key, i), (256, 16)) * s
-            sigmas.append(float(stats.layer_sigma(w)))
-            kls.append(float(stats.quantization_kl(w, 2, channel_axis=None)))
-        assert sigmas == sorted(sigmas)
-        # KL at 2 bits should grow with sigma for same-shape distributions
-        # (scale-free quantizer makes this approximate; check the extremes)
-        assert kls[-1] >= kls[0]
+        sig_g, kl_g, sig_t, kl_t = [], [], [], []
+        for i in range(8):
+            k = jax.random.fold_in(key, i)
+            wg = jax.random.normal(k, (1024, 64)) * 0.05
+            wt = jax.random.t(jax.random.fold_in(k, 99), 3.0, (1024, 64)) * 0.05
+            sig_g.append(float(stats.layer_sigma(wg)))
+            kl_g.append(float(stats.quantization_kl(wg, 6, channel_axis=None)))
+            sig_t.append(float(stats.layer_sigma(wt)))
+            kl_t.append(float(stats.quantization_kl(wt, 6, channel_axis=None)))
+        assert np.mean(sig_t) > np.mean(sig_g)
+        assert np.mean(kl_t) > np.mean(kl_g) * 1.05

@@ -11,6 +11,11 @@ def _compile(f, *args):
     return jax.jit(f).lower(*args).compile()
 
 
+def _xla_cost(compiled) -> dict:
+    cost = compiled.cost_analysis()
+    return cost[0] if isinstance(cost, list) else cost  # older jax: [dict]
+
+
 class TestLoopFree:
     def test_matches_xla_on_matmul_chain(self):
         def g(a, b):
@@ -19,7 +24,7 @@ class TestLoopFree:
         c = _compile(g, jax.ShapeDtypeStruct((512, 1024), "float32"),
                      jax.ShapeDtypeStruct((1024, 2048), "float32"))
         mine = hlo_cost.analyze(c.as_text())
-        xla = c.cost_analysis()
+        xla = _xla_cost(c)
         assert mine.flops == pytest.approx(float(xla["flops"]), rel=0.02)
         assert mine.bytes == pytest.approx(float(xla["bytes accessed"]), rel=0.10)
 
@@ -37,7 +42,7 @@ class TestScan:
         assert mine.flops == pytest.approx(expected, rel=0.05)
         # XLA's own analysis undercounts by ~the trip count (the bug this
         # module exists to fix)
-        assert float(c.cost_analysis()["flops"]) < expected / 10
+        assert float(_xla_cost(c)["flops"]) < expected / 10
 
     def test_nested_scan(self):
         def f(xs):
