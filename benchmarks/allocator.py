@@ -1,0 +1,94 @@
+"""Allocator benchmark -> BENCH_allocator.json (repo root).
+
+Times the two-phase controller and measures constraint satisfaction across
+the two CostModel backends on the cached trained mini-CNN env:
+
+  * shift_add  — size-tight, and a joint size+latency budget (relative cycles)
+  * roofline   — latency-tight, and a joint size+energy budget (seconds/joules)
+
+Recorded per cell: wall time, success, normalized violations at the final
+policy, mean bits.  The headline is the constraint-satisfaction rate per
+backend — the "same search, swapped hardware condition" claim in numbers.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+from repro.core.controller import SigmaQuantController
+from repro.core.policy import BitPolicy, Budget, BudgetItem
+from repro.cost import RooflineCostModel, ShiftAddCostModel
+
+from . import common
+
+OUT_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_allocator.json")
+
+
+def _budgets_for(env, acc_t: float) -> list[tuple[str, Budget]]:
+    """Budgets relative to the uniform-8 report, so they bite but are feasible."""
+    ref = env.costs(BitPolicy.uniform(env.layer_infos(), 8))
+    backend = env.cost_model.name
+    if backend == "shift_add":
+        return [
+            ("size_tight", Budget(acc_t, (BudgetItem("size_mib", 0.55 * ref["size_mib"], 0.10),))),
+            ("size+latency", Budget(acc_t, (BudgetItem("size_mib", 0.70 * ref["size_mib"], 0.10),
+                                            BudgetItem("latency_s", 0.80 * ref["latency_s"], 0.10)))),
+        ]
+    return [
+        ("latency_tight", Budget(acc_t, (BudgetItem("latency_s", 0.60 * ref["latency_s"], 0.10),))),
+        ("size+energy", Budget(acc_t, (BudgetItem("size_mib", 0.70 * ref["size_mib"], 0.10),
+                                       BudgetItem("energy", 0.80 * ref["energy"], 0.10)))),
+    ]
+
+
+def run(fast: bool = True) -> dict:
+    cells = []
+    for backend_name, make_cm in (("shift_add", ShiftAddCostModel),
+                                  ("roofline", RooflineCostModel)):
+        for seed in (0,) if fast else (0, 1):
+            env = common.trained_cnn_env("mini", seed=seed)
+            env.cost_model = make_cm()
+            acc_t = env.float_accuracy() - 0.04
+            for tag, budget in _budgets_for(env, acc_t):
+                env_run = common.trained_cnn_env("mini", seed=seed)
+                env_run.cost_model = env.cost_model
+                t0 = time.perf_counter()
+                result = SigmaQuantController(
+                    env_run, budget, common.controller_config(fast)).run()
+                wall = time.perf_counter() - t0
+                final = env_run.costs(result.policy)
+                cells.append({
+                    "backend": backend_name, "budget": tag, "seed": seed,
+                    "wall_s": round(wall, 3),
+                    "success": bool(result.success),
+                    "abandoned": bool(result.abandoned),
+                    "acc": result.acc,
+                    "mean_bits": result.policy.mean_bits(),
+                    "violations": budget.violations(final),
+                    "limits": {it.metric: it.limit for it in budget.items},
+                    "final": {it.metric: final[it.metric] for it in budget.items},
+                })
+                v = ", ".join(f"{m}={x:.2%}" for m, x in cells[-1]["violations"].items())
+                print(f"{backend_name:<10}{tag:<14} wall={wall:6.1f}s "
+                      f"success={result.success!s:<5} mean_bits="
+                      f"{cells[-1]['mean_bits']:.2f} viol[{v}]")
+
+    by_backend = {}
+    for b in ("shift_add", "roofline"):
+        rows = [c for c in cells if c["backend"] == b]
+        by_backend[b] = {
+            "satisfaction_rate": sum(c["success"] for c in rows) / len(rows),
+            "mean_wall_s": round(sum(c["wall_s"] for c in rows) / len(rows), 3),
+        }
+    doc = {"cells": cells, "by_backend": by_backend}
+    with open(OUT_PATH, "w") as f:
+        json.dump(doc, f, indent=1)
+    print(f"\nsatisfaction rate: "
+          + ", ".join(f"{b}={s['satisfaction_rate']:.0%}" for b, s in by_backend.items())
+          + f"  -> {os.path.abspath(OUT_PATH)}")
+    return doc
+
+
+if __name__ == "__main__":
+    run()

@@ -13,8 +13,8 @@ from __future__ import annotations
 import json
 import os
 
-from repro.core import hardware
 from repro.core.policy import BitPolicy
+from repro.cost import shift_add as hardware
 
 from . import common
 

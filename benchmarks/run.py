@@ -11,12 +11,14 @@ import argparse
 import time
 import traceback
 
-from . import (decode_throughput, fig3_trajectory, fig5_hw, roofline,
+from . import (allocator, decode_throughput, fig3_trajectory, fig5_hw, roofline,
                table1_sigma_kl, table2_phases, table3_sota, table4_hparam,
                table5_bops, table6_mac)
 
 SECTIONS = {
     "decode": ("Decode throughput (BENCH_decode.json)", decode_throughput.run),
+    "allocator": ("Allocator: wall-time + budget satisfaction x backends "
+                  "(BENCH_allocator.json)", allocator.run),
     "table1": ("Table I: sigma vs KL vs final bits", table1_sigma_kl.run),
     "fig3": ("Fig. 3: two-phase trajectory", fig3_trajectory.run),
     "table2": ("Table II: phase-1 vs final across models", table2_phases.run),

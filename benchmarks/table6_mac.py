@@ -8,7 +8,7 @@ import os
 
 import numpy as np
 
-from repro.core import hardware
+from repro.cost import shift_add as hardware
 
 from . import common
 

@@ -1,6 +1,7 @@
 from .store import (  # noqa: F401
     CheckpointStore,
     latest_step,
+    load_policy_artifact,
     restore,
     save,
 )

@@ -30,6 +30,12 @@ from typing import Any
 import jax
 import numpy as np
 
+from repro.core.policy import PolicyArtifact
+
+#: manifest-extra key + sidecar filename for the searched quantization policy
+ARTIFACT_KEY = "policy_artifact"
+ARTIFACT_FILE = "policy_artifact.json"
+
 
 def _to_savable(arr: np.ndarray) -> np.ndarray:
     """npz can't round-trip ml_dtypes (bf16/f8 load back as void): store a
@@ -53,8 +59,14 @@ def _step_dir(root: str, step: int) -> str:
 
 
 def save(root: str, step: int, tree: Any, *, host_id: int = 0, n_hosts: int = 1,
-         extra: dict | None = None, keep: int = 3) -> str:
-    """Synchronous atomic save.  Returns the final step directory."""
+         extra: dict | None = None, keep: int = 3,
+         artifact: PolicyArtifact | None = None) -> str:
+    """Synchronous atomic save.  Returns the final step directory.
+
+    ``artifact`` persists the searched quantization policy with the weights:
+    embedded in the manifest extras (atomic with the step) and mirrored as a
+    human-readable ``policy_artifact.json`` sidecar.
+    """
     os.makedirs(root, exist_ok=True)
     tmp = os.path.join(root, f".tmp.step_{step:08d}.{host_id}")
     final = _step_dir(root, step)
@@ -64,11 +76,16 @@ def save(root: str, step: int, tree: Any, *, host_id: int = 0, n_hosts: int = 1,
     leaves, _ = _flatten_with_paths(tree)
     shard = os.path.join(tmp, f"shard-{host_id:05d}-of-{n_hosts:05d}.npz")
     np.savez(shard, **{k: v for k, v in leaves})
+    extra = dict(extra or {})
+    if artifact is not None:
+        extra[ARTIFACT_KEY] = json.loads(artifact.to_json())
+        with open(os.path.join(tmp, ARTIFACT_FILE), "w") as f:
+            f.write(artifact.to_json())
     manifest = {
         "step": step,
         "n_hosts": n_hosts,
         "leaves": [k for k, _ in leaves],
-        "extra": extra or {},
+        "extra": extra,
     }
     with open(os.path.join(tmp, "MANIFEST.json"), "w") as f:
         json.dump(manifest, f)
@@ -99,6 +116,19 @@ def list_steps(root: str) -> list[int]:
 def latest_step(root: str) -> int | None:
     steps = list_steps(root)
     return steps[-1] if steps else None
+
+
+def load_policy_artifact(root: str, *, step: int | None = None) -> PolicyArtifact | None:
+    """The policy artifact saved with a step, or None if the step has none."""
+    if step is None:
+        step = latest_step(root)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {root}")
+    with open(os.path.join(_step_dir(root, step), "MANIFEST.json")) as f:
+        extra = json.load(f).get("extra", {})
+    if ARTIFACT_KEY not in extra:
+        return None
+    return PolicyArtifact.from_json(json.dumps(extra[ARTIFACT_KEY]))
 
 
 def restore(root: str, like: Any, *, step: int | None = None, host_id: int = 0
@@ -147,14 +177,16 @@ class CheckpointStore:
         self._thread: threading.Thread | None = None
         self._error: BaseException | None = None
 
-    def save_async(self, step: int, tree: Any, extra: dict | None = None) -> None:
+    def save_async(self, step: int, tree: Any, extra: dict | None = None,
+                   artifact: PolicyArtifact | None = None) -> None:
         self.wait()  # one in-flight save at a time (bounded memory)
         snapshot = jax.device_get(tree)   # sync: O(bytes) host copy
 
         def work():
             try:
                 save(self.root, step, snapshot, host_id=self.host_id,
-                     n_hosts=self.n_hosts, extra=extra, keep=self.keep)
+                     n_hosts=self.n_hosts, extra=extra, keep=self.keep,
+                     artifact=artifact)
             except BaseException as e:  # surfaced on next wait()
                 self._error = e
 
@@ -175,3 +207,7 @@ class CheckpointStore:
     def restore_latest(self, like: Any) -> tuple[Any, dict]:
         self.wait()
         return restore(self.root, like, host_id=self.host_id)
+
+    def load_policy_artifact(self, step: int | None = None) -> PolicyArtifact | None:
+        self.wait()
+        return load_policy_artifact(self.root, step=step)

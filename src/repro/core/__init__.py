@@ -1,6 +1,16 @@
 # The paper's primary contribution: SigmaQuant — distribution-guided,
 # two-phase heterogeneous quantization under hard accuracy/resource targets.
-from .policy import BitPolicy, LayerInfo, Targets, Zone, classify_zone  # noqa: F401
+from .policy import (  # noqa: F401
+    BitPolicy,
+    Budget,
+    BudgetItem,
+    LayerInfo,
+    PolicyArtifact,
+    Targets,
+    Zone,
+    classify_zone,
+    layer_registry_hash,
+)
 from .controller import (  # noqa: F401
     ControllerConfig,
     QuantEnv,

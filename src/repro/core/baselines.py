@@ -17,9 +17,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .packing import VALID_BITS
 from .policy import BitPolicy, LayerInfo
-
-VALID_BITS = (2, 4, 6, 8)
 
 
 def uniform_policy(layers: Sequence[LayerInfo], w_bits: int, act_bits: int = 8) -> BitPolicy:

@@ -5,6 +5,12 @@ The controller is model-agnostic: it talks to the network through a small
 algorithm drives the paper-faithful CNN run, the LM QAT runs, and unit tests
 with synthetic environments.
 
+It searches under a multi-constraint ``Budget`` (any subset of
+memory/energy/latency/BOPs, priced by the env's injected ``CostModel``) or a
+legacy single-constraint ``Targets``; every decision operates on the
+budget-violation vector: the most-violated constraint drives the Fig. 2 zone
+direction, and Phase 2 early-stops only when *all* strict budget items hold.
+
 Phase 1 — adaptive clustering (§IV-B): size-penalized k-means over layer
 sigmas, clusters mapped (low sigma -> low bits) onto the bit-set, with the
 whole mapping shifted by the Fig. 2 zone direction; lambda grows 0.1/iter
@@ -12,17 +18,17 @@ until at least one boundary enters its buffer.
 
 Phase 2 — KL refinement (§IV-C): per round, bump ``m`` layers by +/-2 bits
 chosen by the sigma+normalized-KL sensitivity score, recalibrate + short QAT,
-early-stop/revert on stagnation, finish when both strict targets hold.
+early-stop/revert on stagnation, finish when every strict constraint holds.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Protocol
+from typing import Callable, Mapping, Protocol
 
 import numpy as np
 
 from . import clustering
-from .policy import BitPolicy, LayerInfo, Targets, Zone, classify_zone
+from .policy import Budget, BitPolicy, LayerInfo, Targets, Zone, classify_zone
 
 __all__ = ["ControllerConfig", "QuantEnv", "SigmaQuantResult", "SigmaQuantController", "TraceEntry"]
 
@@ -45,7 +51,12 @@ class QuantEnv(Protocol):
         """Recalibrate ranges and run a short QAT cycle under ``policy``."""
 
     def resource(self, policy: BitPolicy) -> float:
-        """Resource metric per the objective: model size (MiB) or BOPs."""
+        """Legacy scalar objective: model size (MiB) or BOPs."""
+
+    # Envs with an injected CostModel additionally expose
+    #   costs(policy) -> Mapping[str, float]   (CostReport.as_costs())
+    # which multi-constraint Budgets price against; the controller falls back
+    # to {"resource": resource(policy)} when absent (synthetic test envs).
 
 
 @dataclasses.dataclass(frozen=True)
@@ -71,95 +82,129 @@ class TraceEntry:
     phase: int
     step: int
     acc: float
-    resource: float
+    resource: float                # primary budget metric (back-compat scalar)
     zone: str
     bits: dict[str, int]
     note: str = ""
+    costs: dict[str, float] = dataclasses.field(default_factory=dict)
 
 
 @dataclasses.dataclass
 class SigmaQuantResult:
     policy: BitPolicy
     acc: float
-    resource: float
+    resource: float                # primary budget metric at the final policy
     success: bool
     abandoned: bool
     trace: list[TraceEntry]
     phase1_policy: BitPolicy | None = None
     phase1_acc: float = float("nan")
     phase1_resource: float = float("nan")
+    costs: dict[str, float] = dataclasses.field(default_factory=dict)
+    budget: Budget | None = None
 
 
 class SigmaQuantController:
-    def __init__(self, env: QuantEnv, targets: Targets, config: ControllerConfig | None = None,
+    def __init__(self, env: QuantEnv, targets: Targets | Budget,
+                 config: ControllerConfig | None = None,
                  log: Callable[[str], None] | None = None):
         self.env = env
         self.targets = targets
+        self.budget = targets.to_budget() if isinstance(targets, Targets) else targets
         self.cfg = config or ControllerConfig()
         self._log = log or (lambda s: None)
 
     # -- helpers -------------------------------------------------------------
-    def _record(self, trace, phase, step, acc, res, policy, note=""):
-        zone = classify_zone(acc, res, self.targets).value
-        trace.append(TraceEntry(phase, step, acc, res, zone, dict(policy.bits), note))
-        self._log(f"[phase{phase} step{step}] acc={acc:.4f} res={res:.3f} zone={zone} {note}")
+    def _measure(self, policy) -> tuple[float, dict[str, float]]:
+        acc = self.env.evaluate(policy)
+        costs_fn = getattr(self.env, "costs", None)
+        costs = dict(costs_fn(policy)) if costs_fn is not None else {}
+        if "resource" not in costs:
+            costs["resource"] = float(self.env.resource(policy))
+        return acc, costs
 
-    def _measure(self, policy):
-        return self.env.evaluate(policy), self.env.resource(policy)
+    def _primary(self, costs: Mapping[str, float]) -> float:
+        return float(costs[self.budget.primary_metric])
+
+    def _record(self, trace, phase, step, acc, costs, policy, note=""):
+        zone = classify_zone(acc, costs, self.budget).value
+        res = self._primary(costs)
+        trace.append(TraceEntry(phase, step, acc, res, zone, dict(policy.bits),
+                                note, dict(costs)))
+        worst_m, worst_v = self.budget.worst(costs)
+        extra = f" worst={worst_m}+{worst_v:.1%}" if worst_v > 0 else ""
+        self._log(f"[phase{phase} step{step}] acc={acc:.4f} res={res:.4g} "
+                  f"zone={zone}{extra} {note}")
+
+    def _result(self, policy, acc, costs, success, abandoned, trace, *,
+                phase1=None) -> SigmaQuantResult:
+        p1_policy, p1_acc, p1_costs = phase1 or (None, float("nan"), None)
+        return SigmaQuantResult(
+            policy, acc, self._primary(costs), success, abandoned, trace,
+            p1_policy, p1_acc,
+            self._primary(p1_costs) if p1_costs is not None else float("nan"),
+            dict(costs), self.budget)
 
     # -- phases ---------------------------------------------------------------
     def run(self) -> SigmaQuantResult:
-        cfg, t = self.cfg, self.targets
+        cfg, b = self.cfg, self.budget
         layers = self.env.layer_infos()
         trace: list[TraceEntry] = []
 
         # Alg. 1 lines 1-3: start from uniform 8-bit
         policy = BitPolicy.uniform(layers, max(cfg.bit_set))
-        acc, res = self._measure(policy)
-        self._record(trace, 0, 0, acc, res, policy, "init uniform-8bit")
+        acc, costs = self._measure(policy)
+        self._record(trace, 0, 0, acc, costs, policy, "init uniform-8bit")
 
         # ---- Phase 1: adaptive clustering (lines 4-20) ----
         lam, i = cfg.lam0, 0
-        while (not t.acc_ok(acc, buffered=True)) and (not t.res_ok(res, buffered=True)) \
+        while (not b.acc_ok(acc, buffered=True)) and (not b.res_ok(costs, buffered=True)) \
                 and i < cfg.phase1_max_iters:
             i += 1
             sig = self.env.sigmas()
             labels, _ = clustering.adaptive_kmeans(sig, cfg.k, lam)
-            zone = classify_zone(acc, res, t)
+            zone = classify_zone(acc, costs, b)
             if zone is Zone.ABANDON:
-                self._record(trace, 1, i, acc, res, policy, "abandon zone")
-                return SigmaQuantResult(policy, acc, res, False, True, trace)
+                self._record(trace, 1, i, acc, costs, policy, "abandon zone")
+                return self._result(policy, acc, costs, False, True, trace)
+            # the most-violated constraint drives the direction; every cost
+            # metric is monotone in bits, so over-budget always means "down"
             shift = 1 if zone is Zone.BIT_INCREASE else (-1 if zone is Zone.BIT_DECREASE else 0)
             bits_arr = clustering.assign_bits_to_clusters(labels, cfg.bit_set, shift=shift)
-            policy = BitPolicy.from_bits(layers, {l.name: int(b) for l, b in zip(layers, bits_arr)},
+            policy = BitPolicy.from_bits(layers, {l.name: int(bt) for l, bt in zip(layers, bits_arr)},
                                          policy.act_bits)
             self.env.calibrate_and_qat(policy, cfg.phase1_qat_epochs)
-            acc, res = self._measure(policy)
-            self._record(trace, 1, i, acc, res, policy, f"lambda={lam:.2f} shift={shift:+d}")
-            if t.acc_ok(acc, buffered=True) or t.res_ok(res, buffered=True):
+            acc, costs = self._measure(policy)
+            self._record(trace, 1, i, acc, costs, policy, f"lambda={lam:.2f} shift={shift:+d}")
+            if b.acc_ok(acc, buffered=True) or b.res_ok(costs, buffered=True):
                 break
             lam += cfg.lam_step
 
-        if (not t.acc_ok(acc, buffered=True)) and (not t.res_ok(res, buffered=True)):
+        if (not b.acc_ok(acc, buffered=True)) and (not b.res_ok(costs, buffered=True)):
             # lines 18-20: give up — infeasible
-            self._record(trace, 1, i, acc, res, policy, "infeasible — abandoned")
-            return SigmaQuantResult(policy, acc, res, False, True, trace)
+            self._record(trace, 1, i, acc, costs, policy, "infeasible — abandoned")
+            return self._result(policy, acc, costs, False, True, trace)
 
-        phase1_policy, phase1_acc, phase1_res = policy, acc, res
+        phase1 = (policy, acc, costs)
 
         # ---- Phase 2: iterative KL refinement (lines 21-31) ----
-        best = (policy, acc, res)
+        best = (policy, acc, costs)
         stagnant, j = 0, 0
         tabu: dict[str, int] = {}  # layer -> round until which it is frozen
         lo, hi = min(cfg.bit_set), max(cfg.bit_set)
         sizes = np.asarray([l.n_params for l in layers], dtype=np.float64)
-        while j < cfg.phase2_max_iters and not (t.acc_ok(acc) and t.res_ok(res)):
+
+        def done(acc_, costs_):
+            # early-stop only when accuracy AND all *strict* budgets hold
+            return b.acc_ok(acc_) and b.res_ok(costs_, strict_only=True)
+
+        while j < cfg.phase2_max_iters and not done(acc, costs):
             j += 1
             sens = np.asarray(self.env.sensitivities(policy), dtype=np.float64)
             bits_vec = policy.bit_vector()
             names = [l.name for l in layers]
             free = [k for k in range(len(names)) if tabu.get(names[k], 0) < j]
-            if not t.acc_ok(acc):
+            if not b.acc_ok(acc):
                 # raise bits on the most sensitive layers not already at max
                 cand = [k for k in sorted(free, key=lambda k: -sens[k]) if bits_vec[k] < hi]
                 delta = +cfg.bit_step
@@ -173,54 +218,47 @@ class SigmaQuantController:
                 delta = -cfg.bit_step
             chosen = cand[: cfg.layers_per_round]
             if not chosen:  # nowhere to move — bit ladder / tabu exhausted
-                self._record(trace, 2, j, acc, res, policy, "no movable layers")
+                self._record(trace, 2, j, acc, costs, policy, "no movable layers")
                 break
-            prev = (policy, acc, res)
+            prev = (policy, acc, costs)
             policy = policy.bumped([names[k] for k in chosen], delta)
             move = f"{delta:+d}b on {[names[k] for k in chosen]}"
             self.env.calibrate_and_qat(policy, cfg.phase2_qat_epochs)
-            acc, res = self._measure(policy)
+            acc, costs = self._measure(policy)
 
-            # §IV-C.4 revert-on-failure: a move that worsens the constraint
-            # violation is rejected and its layers are tabu for a few rounds
-            # (prevents increase/decrease oscillation on the same layers).
-            if self._badness(acc, res) > self._badness(prev[1], prev[2]) + 1e-12:
-                self._record(trace, 2, j, acc, res, policy, move + " — rejected")
+            # §IV-C.4 revert-on-failure: a move that worsens the total
+            # constraint violation is rejected and its layers are tabu for a
+            # few rounds (prevents increase/decrease oscillation).
+            if b.badness(acc, costs) > b.badness(prev[1], prev[2]) + 1e-12:
+                self._record(trace, 2, j, acc, costs, policy, move + " — rejected")
                 for k in chosen:
                     tabu[names[k]] = j + cfg.tabu_rounds
-                policy, acc, res = prev
+                policy, acc, costs = prev
                 stagnant += 1
             else:
-                self._record(trace, 2, j, acc, res, policy, move)
-                if self._better(acc, res, best[1], best[2]):
-                    best = (policy, acc, res)
+                self._record(trace, 2, j, acc, costs, policy, move)
+                if self._better(acc, costs, best[1], best[2]):
+                    best = (policy, acc, costs)
                     stagnant = 0
                 else:
                     stagnant += 1
             if stagnant >= cfg.stagnation_patience:
-                policy, acc, res = best
-                self._record(trace, 2, j, acc, res, policy, "stagnated — reverted to best")
+                policy, acc, costs = best
+                self._record(trace, 2, j, acc, costs, policy, "stagnated — reverted to best")
                 break
 
-        success = t.acc_ok(acc) and t.res_ok(res)
-        if not success and self._better(best[1], best[2], acc, res):
-            policy, acc, res = best
-        return SigmaQuantResult(policy, acc, res, success, False, trace,
-                                phase1_policy, phase1_acc, phase1_res)
+        success = done(acc, costs)
+        if not success and self._better(best[1], best[2], acc, costs):
+            policy, acc, costs = best
+        return self._result(policy, acc, costs, success, False, trace, phase1=phase1)
 
-    def _badness(self, acc: float, res: float) -> float:
-        """Total (normalized) constraint violation — 0 inside the target zone."""
-        t = self.targets
-        va = max(0.0, t.acc_t - acc)
-        vr = max(0.0, (res - t.res_t) / max(t.res_t, 1e-9))
-        return va + vr
-
-    def _better(self, acc_a, res_a, acc_b, res_b) -> bool:
+    def _better(self, acc_a, costs_a, acc_b, costs_b) -> bool:
         """Lexicographic-ish ordering: constraint violation first, then slack."""
-        ba, bb = self._badness(acc_a, res_a), self._badness(acc_b, res_b)
+        ba, bb = self.budget.badness(acc_a, costs_a), self.budget.badness(acc_b, costs_b)
         if abs(ba - bb) > 1e-12:
             return ba < bb
-        # tie-break: smaller resource wins, then higher accuracy
+        # tie-break: smaller primary resource wins, then higher accuracy
+        res_a, res_b = self._primary(costs_a), self._primary(costs_b)
         if abs(res_a - res_b) > 1e-12:
             return res_a < res_b
         return acc_a > acc_b

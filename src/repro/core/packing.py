@@ -19,13 +19,29 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+#: the paper's bit-set (Alg. 1) — the single source of truth for every layer
+#: of the stack (BitPolicy validation, packing, quantizer, baselines).
+VALID_BITS = (2, 4, 6, 8)
+
 #: values per int8 container byte for each supported bitwidth
 LANES = {2: 4, 4: 2, 6: 1, 8: 1}
+assert tuple(sorted(LANES)) == VALID_BITS
+
+
+def check_bits(bits: int) -> int:
+    """Validate a weight bitwidth against the shared bit-set.
+
+    One failure mode everywhere: BitPolicy mutation, pack/unpack, and the
+    fusion path all raise this exact ValueError.
+    """
+    if bits not in VALID_BITS:
+        raise ValueError(f"bits must be one of {VALID_BITS}, got {bits}")
+    return int(bits)
 
 
 def container_bytes(shape: tuple[int, ...], bits: int) -> int:
     """Bytes the packed buffer occupies in HBM (container accounting)."""
-    lanes = LANES[bits]
+    lanes = LANES[check_bits(bits)]
     *lead, k = shape
     k_pad = -(-k // lanes)
     n = 1
@@ -44,9 +60,7 @@ def logical_bytes(shape: tuple[int, ...], bits: int) -> float:
 
 def pack(levels: jax.Array, bits: int) -> jax.Array:
     """Pack signed b-bit integer levels (int32/int8 valued) into int8 lanes."""
-    if bits not in LANES:
-        raise ValueError(f"bits must be one of {sorted(LANES)}, got {bits}")
-    lanes = LANES[bits]
+    lanes = LANES[check_bits(bits)]
     lev = levels.astype(jnp.int32)
     if lanes == 1:
         return lev.astype(jnp.int8)
@@ -71,8 +85,7 @@ def concat_rows(packed_list: list[jax.Array], bits: int) -> jax.Array:
     contiguous packed buffer per Q/K/V or gate/up group, read by a single
     kernel launch (DESIGN.md §2).
     """
-    if bits not in LANES:
-        raise ValueError(f"bits must be one of {sorted(LANES)}, got {bits}")
+    check_bits(bits)
     kp = {p.shape[-1] for p in packed_list}
     if len(kp) != 1:
         raise ValueError(f"row-concat needs equal packed-K, got {sorted(kp)}")
@@ -81,9 +94,7 @@ def concat_rows(packed_list: list[jax.Array], bits: int) -> jax.Array:
 
 def unpack(packed: jax.Array, bits: int, k: int) -> jax.Array:
     """Inverse of :func:`pack`; ``k`` is the original last-axis length."""
-    if bits not in LANES:
-        raise ValueError(f"bits must be one of {sorted(LANES)}, got {bits}")
-    lanes = LANES[bits]
+    lanes = LANES[check_bits(bits)]
     if lanes == 1:
         return packed.astype(jnp.int32)[..., :k]
     u = packed.astype(jnp.uint8).astype(jnp.int32)

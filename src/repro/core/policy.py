@@ -14,14 +14,14 @@ from __future__ import annotations
 
 import dataclasses
 import enum
+import hashlib
 import json
 from typing import Iterable, Mapping
 
 import numpy as np
 
 from . import packing
-
-VALID_BITS = (2, 4, 6, 8)
+from .packing import VALID_BITS  # canonical bit-set (re-exported for callers)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -65,8 +65,7 @@ class BitPolicy:
 
     # -- mutation (functional) ----------------------------------------------
     def with_bits(self, name: str, bits: int) -> "BitPolicy":
-        if bits not in VALID_BITS:
-            raise ValueError(f"bits {bits} not in {VALID_BITS}")
+        packing.check_bits(bits)
         new = dict(self.bits)
         new[name] = bits
         return BitPolicy(self.layers, new, self.act_bits)
@@ -135,9 +134,125 @@ class Zone(enum.Enum):
     ABANDON = "abandon"          # both hopeless (far outside buffers)
 
 
+#: canonical cost-metric names a Budget may constrain (keys of
+#: ``CostReport.as_costs()``; "resource" is the legacy scalar objective).
+COST_METRICS = ("size_mib", "size_bytes", "container_bytes", "bops",
+                "energy", "latency_s", "resource")
+
+
+@dataclasses.dataclass(frozen=True)
+class BudgetItem:
+    """One upper-bound resource constraint: costs[metric] <= limit.
+
+    ``buffer`` is the Fig. 2 Delta M analogue as a fraction of the limit;
+    ``strict`` items gate Phase-2 early stopping, non-strict ones only steer.
+    """
+
+    metric: str
+    limit: float
+    buffer: float = 0.05
+    strict: bool = True
+
+    def value(self, costs: Mapping[str, float]) -> float:
+        if self.metric not in costs:
+            raise KeyError(f"cost report has no metric {self.metric!r} "
+                           f"(available: {sorted(costs)})")
+        return float(costs[self.metric])
+
+    def ok(self, costs: Mapping[str, float], *, buffered: bool = False) -> bool:
+        slack = self.buffer * self.limit if buffered else 0.0
+        return self.value(costs) <= self.limit + slack
+
+    def violation(self, costs: Mapping[str, float]) -> float:
+        """Normalized overshoot: max(0, (value - limit) / limit)."""
+        return max(0.0, (self.value(costs) - self.limit) / max(abs(self.limit), 1e-9))
+
+
+@dataclasses.dataclass(frozen=True)
+class Budget:
+    """Multi-constraint boundary conditions: accuracy >= acc_t AND every
+    resource item under its limit (any subset of memory/energy/latency/BOPs).
+
+    The single-constraint paper formulation is ``Targets`` (kept as the
+    compat surface); ``Targets.to_budget()`` produces the equivalent Budget.
+    """
+
+    acc_t: float
+    items: tuple[BudgetItem, ...]
+    acc_buffer: float = 0.01     # Delta A
+    abandon_factor: float = 4.0  # "anywhere near acceptable" multiplier
+
+    def __post_init__(self):
+        if not self.items:
+            raise ValueError("Budget needs at least one resource constraint")
+
+    @classmethod
+    def of(cls, acc_t: float, *, acc_buffer: float = 0.01, buffer: float = 0.05,
+           abandon_factor: float = 4.0, **limits: float) -> "Budget":
+        """Budget from metric=limit kwargs, e.g. Budget.of(0.9, size_mib=4, latency_s=2e-3)."""
+        items = []
+        for metric, limit in limits.items():
+            if metric not in COST_METRICS:
+                raise ValueError(f"unknown cost metric {metric!r} (valid: {COST_METRICS})")
+            items.append(BudgetItem(metric, float(limit), buffer))
+        return cls(acc_t, tuple(items), acc_buffer, abandon_factor)
+
+    # -- predicates ----------------------------------------------------------
+    def acc_ok(self, acc: float, *, buffered: bool = False) -> bool:
+        slack = self.acc_buffer if buffered else 0.0
+        return acc >= self.acc_t - slack
+
+    def res_ok(self, costs: Mapping[str, float], *, buffered: bool = False,
+               strict_only: bool = False) -> bool:
+        items = self.strict_items if strict_only else self.items
+        return all(it.ok(costs, buffered=buffered) for it in items)
+
+    @property
+    def strict_items(self) -> tuple[BudgetItem, ...]:
+        return tuple(it for it in self.items if it.strict)
+
+    @property
+    def primary_metric(self) -> str:
+        return self.items[0].metric
+
+    # -- violation vector ----------------------------------------------------
+    def violations(self, costs: Mapping[str, float]) -> dict[str, float]:
+        """Normalized violation per constraint (0 = satisfied)."""
+        return {it.metric: it.violation(costs) for it in self.items}
+
+    def worst(self, costs: Mapping[str, float]) -> tuple[str, float]:
+        """The most-violated constraint — it drives the Fig. 2 zone direction."""
+        v = self.violations(costs)
+        metric = max(v, key=v.get)
+        return metric, v[metric]
+
+    def badness(self, acc: float, costs: Mapping[str, float]) -> float:
+        """Total normalized constraint violation — 0 inside the target zone."""
+        va = max(0.0, self.acc_t - acc)
+        return va + sum(it.violation(costs) for it in self.items)
+
+    # -- io ------------------------------------------------------------------
+    def to_dict(self) -> dict:
+        return {"acc_t": self.acc_t, "acc_buffer": self.acc_buffer,
+                "abandon_factor": self.abandon_factor,
+                "items": [dataclasses.asdict(it) for it in self.items]}
+
+    @classmethod
+    def from_dict(cls, d: Mapping) -> "Budget":
+        items = tuple(BudgetItem(x["metric"], float(x["limit"]),
+                                 float(x.get("buffer", 0.05)), bool(x.get("strict", True)))
+                      for x in d["items"])
+        return cls(float(d["acc_t"]), items, float(d.get("acc_buffer", 0.01)),
+                   float(d.get("abandon_factor", 4.0)))
+
+
 @dataclasses.dataclass(frozen=True)
 class Targets:
-    """User boundary conditions (§I): accuracy >= acc_t, resource <= res_t."""
+    """User boundary conditions (§I): accuracy >= acc_t, resource <= res_t.
+
+    The single-constraint special case of ``Budget`` (the paper's setting);
+    the controller converts it via :meth:`to_budget`.
+    """
 
     acc_t: float
     res_t: float
@@ -153,23 +268,59 @@ class Targets:
         slack = self.res_buffer * self.res_t if buffered else 0.0
         return res <= self.res_t + slack
 
+    def to_budget(self, metric: str = "resource") -> Budget:
+        return Budget(self.acc_t,
+                      (BudgetItem(metric, self.res_t, self.res_buffer),),
+                      self.acc_buffer, self.abandon_factor)
 
-def classify_zone(acc: float, res: float, t: Targets) -> Zone:
-    """Fig. 2 decision zones from the current (accuracy, resource) point.
 
-    TARGET       both strict constraints hold.
-    ABANDON      both violated far beyond their buffers (hopeless).
-    BIT_INCREASE accuracy clearly low while size is strictly inside budget.
-    BIT_DECREASE size clearly over while accuracy is strictly satisfied.
-    ITERATION    exactly one metric inside its buffer (Phase-2 territory).
+def _as_budget_costs(res, t) -> tuple[Budget, dict[str, float]]:
+    """Normalize (res, targets) to (Budget, cost mapping)."""
+    if isinstance(t, Targets):
+        budget = t.to_budget()
+        if isinstance(res, Mapping):
+            if "resource" not in res:
+                # guessing a metric here would compare res_t against the
+                # wrong units; the caller must say what "resource" means
+                raise KeyError(
+                    "classify_zone with Targets needs a scalar res or a "
+                    f"mapping containing 'resource' (got {sorted(res)})")
+            costs = dict(res)
+        else:
+            costs = {"resource": float(res)}
+        return budget, costs
+    budget = t
+    costs = dict(res) if isinstance(res, Mapping) else {budget.primary_metric: float(res)}
+    return budget, costs
+
+
+def classify_zone(acc: float, res, t: "Targets | Budget") -> Zone:
+    """Fig. 2 decision zones from the (accuracy, cost-vector) point.
+
+    ``res`` is a scalar (legacy single-constraint) or a metric->value mapping;
+    ``t`` is a ``Targets`` or a multi-constraint ``Budget``.  Zones generalize
+    over the budget-violation vector: the *most-violated* constraint stands in
+    for "the" resource axis, so with one constraint this reduces exactly to
+    the paper's 2-D diagram.
+
+    TARGET       accuracy and every constraint strictly hold.
+    ABANDON      accuracy and the worst constraint both far beyond buffers.
+    BIT_INCREASE accuracy clearly low while every cost is strictly in budget.
+    BIT_DECREASE some cost clearly over while accuracy strictly satisfied.
+    ITERATION    exactly one side inside its buffer (Phase-2 territory).
     TRANSITION   everything else (keep the current Phase-1 trend).
     """
-    acc_strict, res_strict = t.acc_ok(acc), t.res_ok(res)
-    acc_buf, res_buf = t.acc_ok(acc, buffered=True), t.res_ok(res, buffered=True)
+    budget, costs = _as_budget_costs(res, t)
+    acc_strict = budget.acc_ok(acc)
+    acc_buf = budget.acc_ok(acc, buffered=True)
+    res_strict = budget.res_ok(costs)
+    res_buf = budget.res_ok(costs, buffered=True)
     if acc_strict and res_strict:
         return Zone.TARGET
-    far_acc = acc < t.acc_t - t.abandon_factor * max(t.acc_buffer, 1e-9)
-    far_res = res > t.res_t * (1.0 + t.abandon_factor * max(t.res_buffer, 1e-9))
+    far_acc = acc < budget.acc_t - budget.abandon_factor * max(budget.acc_buffer, 1e-9)
+    far_res = any(
+        it.violation(costs) > budget.abandon_factor * max(it.buffer, 1e-9)
+        for it in budget.items)
     if far_acc and far_res:
         return Zone.ABANDON
     if not acc_buf and res_strict:
@@ -179,3 +330,101 @@ def classify_zone(acc: float, res: float, t: Targets) -> Zone:
     if acc_buf != res_buf:
         return Zone.ITERATION
     return Zone.TRANSITION
+
+
+# ---------------------------------------------------------------------------
+# Policy artifacts — the versioned search->deployment handoff
+# ---------------------------------------------------------------------------
+
+#: bump when the artifact JSON layout changes incompatibly
+ARTIFACT_VERSION = 1
+
+
+def layer_registry_hash(layers: Iterable[LayerInfo]) -> str:
+    """Stable hash of the quantizable-layer registry (name/shape/kind).
+
+    Identifies *which model surface* a policy applies to: two models agree on
+    the hash iff they expose the same ordered (name, shape, kind) registry.
+    MACs are excluded — they depend on the reference batch, not applicability.
+    """
+    canon = [(l.name, list(l.shape), l.kind) for l in layers]
+    blob = json.dumps(canon, separators=(",", ":")).encode()
+    return hashlib.sha256(blob).hexdigest()[:16]
+
+
+@dataclasses.dataclass
+class PolicyArtifact:
+    """Everything deployment needs from one SigmaQuant search, serialized.
+
+    policy         the searched per-layer bitwidths
+    budget         the constraints the search ran under (None for hand-made)
+    report         the cost-model vector at the final policy (metric -> value)
+    backend        which CostModel priced it ("shift_add" / "roofline" / ...)
+    registry_hash  layer_registry_hash of the model the search saw — loading
+                   against a different registry is rejected
+    meta           free-form provenance (arch, controller stats, wall time)
+    """
+
+    policy: BitPolicy
+    registry_hash: str
+    backend: str = ""
+    report: dict = dataclasses.field(default_factory=dict)
+    budget: Budget | None = None
+    meta: dict = dataclasses.field(default_factory=dict)
+    version: int = ARTIFACT_VERSION
+
+    @classmethod
+    def build(cls, policy: BitPolicy, *, backend: str = "", report: Mapping | None = None,
+              budget: Budget | None = None, meta: Mapping | None = None) -> "PolicyArtifact":
+        return cls(policy=policy, registry_hash=layer_registry_hash(policy.layers),
+                   backend=backend, report=dict(report or {}), budget=budget,
+                   meta=dict(meta or {}))
+
+    # -- validation ----------------------------------------------------------
+    def verify_layers(self, layers: Iterable[LayerInfo]) -> None:
+        """Reject applying this artifact to a different layer registry."""
+        got = layer_registry_hash(layers)
+        if got != self.registry_hash:
+            raise ValueError(
+                f"policy artifact layer-registry hash mismatch: artifact was "
+                f"searched on {self.registry_hash}, model exposes {got}")
+
+    # -- io ------------------------------------------------------------------
+    def to_json(self) -> str:
+        return json.dumps(
+            {
+                "artifact_version": self.version,
+                "registry_hash": self.registry_hash,
+                "backend": self.backend,
+                "report": self.report,
+                "budget": self.budget.to_dict() if self.budget else None,
+                "meta": self.meta,
+                "policy": json.loads(self.policy.to_json()),
+            },
+            indent=2)
+
+    @classmethod
+    def from_json(cls, s: str) -> "PolicyArtifact":
+        d = json.loads(s)
+        version = int(d.get("artifact_version", -1))
+        if version != ARTIFACT_VERSION:
+            raise ValueError(f"unsupported policy-artifact version {version} "
+                             f"(this build reads {ARTIFACT_VERSION})")
+        return cls(
+            policy=BitPolicy.from_json(json.dumps(d["policy"])),
+            registry_hash=d["registry_hash"],
+            backend=d.get("backend", ""),
+            report=dict(d.get("report") or {}),
+            budget=Budget.from_dict(d["budget"]) if d.get("budget") else None,
+            meta=dict(d.get("meta") or {}),
+            version=version)
+
+    def save(self, path: str) -> str:
+        with open(path, "w") as f:
+            f.write(self.to_json())
+        return path
+
+    @classmethod
+    def load(cls, path: str) -> "PolicyArtifact":
+        with open(path) as f:
+            return cls.from_json(f.read())

@@ -18,10 +18,9 @@ from typing import Literal
 import jax
 import jax.numpy as jnp
 
-ScaleMode = Literal["max", "sigma"]
+from .packing import VALID_BITS  # noqa: F401  (canonical bit-set, re-exported)
 
-#: paper's bit-set (Alg. 1): valid weight bitwidths.
-VALID_BITS = (2, 4, 6, 8)
+ScaleMode = Literal["max", "sigma"]
 
 
 def qmax(bits: jax.Array | int) -> jax.Array:

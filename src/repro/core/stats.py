@@ -13,6 +13,7 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from . import quantizer
 
@@ -106,3 +107,23 @@ def sensitivity_score(
     dkl = normalized_kl(w, bits, bins=bins)
     sig = layer_sigma(w) / sigma_ref
     return (1.0 - sigma_weight) * dkl + sigma_weight * sig
+
+
+# ---------------------------------------------------------------------------
+# Registry-order vectors — the one implementation every QuantEnv (and the
+# cost backends' calibration paths) share; envs supply a weight iterator.
+# ---------------------------------------------------------------------------
+
+
+def sigma_vector(weights) -> np.ndarray:
+    """Per-layer weight std-devs (Phase-1 clustering features), host-side."""
+    return np.asarray([float(layer_sigma(w)) for w in weights])
+
+
+def sensitivity_vector(weights, bits, **kwargs) -> np.ndarray:
+    """Per-layer Phase-2 sensitivity scores at the given bits, host-side.
+
+    ``weights`` and ``bits`` iterate in layer-registry order (zip-aligned).
+    """
+    return np.asarray([float(sensitivity_score(w, b, **kwargs))
+                       for w, b in zip(weights, bits)])

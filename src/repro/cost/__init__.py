@@ -1,0 +1,12 @@
+# The multi-constraint cost-model seam: one CostReport vector, swappable
+# hardware backends (paper §VI-E adaptability claim).  Importing the package
+# registers both shipped backends.
+from .base import (  # noqa: F401
+    CostModel,
+    CostReport,
+    available_cost_models,
+    get_cost_model,
+    register_cost_model,
+)
+from .roofline import RooflineCostModel  # noqa: F401
+from .shift_add import ShiftAddCostModel  # noqa: F401

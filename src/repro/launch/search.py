@@ -1,0 +1,122 @@
+"""Policy-search driver: run the SigmaQuant controller under a hardware
+Budget and emit a versioned ``PolicyArtifact`` — the handoff every serving
+entry point consumes (launch/serve.py --policy).
+
+    PYTHONPATH=src python -m repro.launch.search --arch gemma-2b --reduced \
+        --backend shift_add --limit size_mib=0.5 --out policy.json
+
+    PYTHONPATH=src python -m repro.launch.search --arch gemma-2b --reduced \
+        --backend roofline --limit latency_s=3e-6 --limit energy=2e-5 \
+        --ckpt /tmp/ckpt --out policy.json
+
+Any subset of cost metrics may be constrained simultaneously (repeat
+``--limit metric=value``); metrics are priced by the chosen CostModel
+backend, in that backend's units (DESIGN.md §10).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+
+from repro.checkpoint import store as ck
+from repro.configs import ARCH_MODULES, get_config
+from repro.configs.base import ShapeSpec
+from repro.core.controller import ControllerConfig, SigmaQuantController, SigmaQuantResult
+from repro.core.policy import COST_METRICS, Budget, PolicyArtifact
+from repro.cost import available_cost_models, get_cost_model
+from repro.models import registry
+from repro.quant.env import LMQuantEnv
+
+
+def budget_from_limits(acc_t: float, limits: dict[str, float], *,
+                       acc_buffer: float = 0.03, buffer: float = 0.08) -> Budget:
+    return Budget.of(acc_t, acc_buffer=acc_buffer, buffer=buffer, **limits)
+
+
+def search_policy(env: LMQuantEnv, budget: Budget, *,
+                  config: ControllerConfig | None = None, log=None,
+                  meta: dict | None = None) -> tuple[PolicyArtifact, SigmaQuantResult]:
+    """Run the two-phase search and package the result as a PolicyArtifact."""
+    t0 = time.perf_counter()
+    result = SigmaQuantController(env, budget, config, log=log).run()
+    report = dict(env.costs(result.policy))
+    artifact = PolicyArtifact.build(
+        result.policy, backend=env.cost_model.name, report=report, budget=budget,
+        meta=dict(meta or {}, success=result.success, abandoned=result.abandoned,
+                  acc=result.acc, mean_bits=result.policy.mean_bits(),
+                  search_wall_s=round(time.perf_counter() - t0, 3)))
+    return artifact, result
+
+
+def _parse_limits(pairs: list[str]) -> dict[str, float]:
+    limits = {}
+    for p in pairs:
+        metric, _, value = p.partition("=")
+        if metric not in COST_METRICS or not value:
+            raise SystemExit(f"--limit wants metric=value with metric in "
+                             f"{COST_METRICS}, got {p!r}")
+        limits[metric] = float(value)
+    return limits
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", choices=sorted(ARCH_MODULES), default="gemma-2b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--backend", choices=available_cost_models(), default="shift_add")
+    ap.add_argument("--limit", action="append", default=[],
+                    help="metric=value upper bound; repeatable (e.g. size_mib=0.5)")
+    ap.add_argument("--loss-slack", type=float, default=0.10,
+                    help="quality target: val loss <= float loss + slack")
+    ap.add_argument("--pretrain-steps", type=int, default=60)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--decode-batch", type=int, default=1,
+                    help="roofline backend: sequences per decode step")
+    ap.add_argument("--phase2-iters", type=int, default=10)
+    ap.add_argument("--out", default="policy_artifact.json")
+    ap.add_argument("--ckpt", default=None,
+                    help="also save params + artifact as a checkpoint step here")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+    if not args.limit:
+        ap.error("pass at least one --limit metric=value")
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    api = registry.get_api(cfg)
+    params = api.init(cfg, jax.random.key(args.seed))
+    shape = ShapeSpec("search", "train", args.seq, args.batch)
+    cm_kwargs = {"batch": args.decode_batch} if args.backend == "roofline" else {}
+    env = LMQuantEnv(params, cfg, shape,
+                     cost_model=get_cost_model(args.backend, **cm_kwargs))
+
+    print(f"pre-training {cfg.name} for {args.pretrain_steps} steps ...")
+    env.pretrain(args.pretrain_steps)
+    float_loss = env.float_loss()
+    budget = budget_from_limits(-(float_loss + args.loss_slack), _parse_limits(args.limit))
+    print(f"float val loss {float_loss:.3f}; budget: "
+          + ", ".join(f"{it.metric}<={it.limit:g}" for it in budget.items))
+
+    artifact, result = search_policy(
+        env, budget, config=ControllerConfig(phase2_max_iters=args.phase2_iters,
+                                             phase1_qat_epochs=1, phase2_qat_epochs=1),
+        log=print, meta={"arch": cfg.name, "backend": args.backend})
+    artifact.save(args.out)
+    print(f"policy artifact -> {args.out}  (success={result.success} "
+          f"mean_bits={result.policy.mean_bits():.2f} backend={args.backend})")
+    for metric, value in artifact.report.items():
+        print(f"  {metric:>16} = {value:g}")
+
+    if args.ckpt:
+        ck.save(args.ckpt, args.pretrain_steps, env.params,
+                extra={"float_loss": float_loss}, artifact=artifact)
+        print(f"checkpoint (+artifact) -> {args.ckpt}")
+    return 0 if result.success else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -3,6 +3,11 @@ batched requests through the continuous-batching engine.
 
     PYTHONPATH=src python -m repro.launch.serve --arch gemma-2b --reduced \
         --requests 16 --wbits mixed
+
+    # deploy a searched PolicyArtifact (launch/search.py): packs exactly the
+    # searched per-layer bitwidths, rejecting a mismatched layer registry
+    PYTHONPATH=src python -m repro.launch.serve --arch gemma-2b --reduced \
+        --policy policy_artifact.json
 """
 from __future__ import annotations
 
@@ -14,7 +19,7 @@ import jax
 import numpy as np
 
 from repro.configs import ARCH_MODULES, get_config
-from repro.core.policy import BitPolicy
+from repro.core.policy import BitPolicy, PolicyArtifact
 from repro.models import registry
 from repro.quant import apply as qapply
 from repro.serve.engine import Request, ServeEngine
@@ -30,6 +35,9 @@ def main(argv=None) -> int:
     ap.add_argument("--max-seq", type=int, default=256)
     ap.add_argument("--wbits", default="float",
                     help="float | 2/4/6/8 | mixed | path/to/policy.json")
+    ap.add_argument("--policy", default=None, metavar="ARTIFACT",
+                    help="searched PolicyArtifact JSON (launch/search.py); "
+                         "overrides --wbits")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
@@ -41,7 +49,19 @@ def main(argv=None) -> int:
     params = api.init(cfg, jax.random.key(args.seed))
     sp = api.unstack(params, cfg)
 
-    if args.wbits != "float":
+    artifact = None
+    if args.policy is not None:
+        specs = qapply.layer_specs(params, cfg)
+        artifact = PolicyArtifact.load(args.policy)
+        artifact.verify_layers(specs)  # refuse a foreign layer registry
+        policy = artifact.policy
+        sp = qapply.quantize_for_serve(sp, artifact, cfg)
+        budget = ("; ".join(f"{it.metric}<={it.limit:g}" for it in artifact.budget.items)
+                  if artifact.budget else "none")
+        print(f"policy artifact {args.policy}: backend={artifact.backend} "
+              f"budget=[{budget}] mean_bits={policy.mean_bits():.2f} "
+              f"size={policy.model_size_mib():.2f} MiB")
+    elif args.wbits != "float":
         specs = qapply.layer_specs(params, cfg)
         if args.wbits.endswith(".json"):
             policy = BitPolicy.from_json(open(args.wbits).read())
@@ -61,7 +81,8 @@ def main(argv=None) -> int:
                     max_new_tokens=args.max_new)
             for i in range(args.requests)]
     eng = ServeEngine(cfg, sp, max_slots=args.slots, max_seq=args.max_seq,
-                      temperature=args.temperature, seed=args.seed)
+                      temperature=args.temperature, seed=args.seed,
+                      artifact=artifact)
     t0 = time.perf_counter()
     results = eng.run(reqs)
     dt = time.perf_counter() - t0

@@ -18,7 +18,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.policy import BitPolicy, LayerInfo
+from repro.core.policy import BitPolicy, LayerInfo, PolicyArtifact
 from repro.quant.tensor import QuantizedTensor, concat_quantized, quantize_tensor
 
 #: leaf names that are quantizable weights
@@ -147,11 +147,18 @@ def bits_for_scan(policy: BitPolicy, params: dict, cfg) -> dict:
     return out
 
 
-def quantize_for_serve(params: dict, policy: BitPolicy, cfg) -> dict:
+def quantize_for_serve(params: dict, policy: BitPolicy | PolicyArtifact, cfg) -> dict:
     """Unstacked (serve-layout) float params -> packed QuantizedTensor leaves.
+
+    Packs exactly the per-layer bitwidths the policy carries.  A searched
+    ``PolicyArtifact`` may be passed directly; its layer-registry hash is
+    verified against the policy's own registry at the call sites that hold
+    the model's specs (launch/serve.py, serve/engine.py).
 
     The embedding is stored in lm_head layout (d, V) — see decoder.embed_tokens.
     """
+    if isinstance(policy, PolicyArtifact):
+        policy = policy.policy
 
     def rec(tree, path):
         if isinstance(tree, dict):
@@ -219,6 +226,52 @@ def fuse_projections(params: dict) -> dict:
     return rec(params)
 
 
+#: fused decode-path leaves -> their pre-fusion members (same bitwidth by
+#: construction: fuse_projections only fuses equal-bit groups)
+FUSED_MEMBERS = {fused: names for names, fused in FUSE_GROUPS}
+
+
+def packed_policy_bits(serve_params: dict) -> dict[str, int]:
+    """Policy-name -> bits actually packed into a serve-layout tree.
+
+    The deployment-side inverse of ``quantize_for_serve``: enumerates every
+    ``QuantizedTensor`` leaf and reports its static bitwidth under the policy
+    naming convention.  Fused ``wqkv``/``w_gu`` leaves expand back to their
+    members, so the mapping is comparable against a ``PolicyArtifact`` before
+    or after ``fuse_projections``.
+    """
+    out: dict[str, int] = {}
+    for path, leaf in _walk(serve_params):
+        if not isinstance(leaf, QuantizedTensor):
+            continue
+        members = FUSED_MEMBERS.get(path[-1], (path[-1],))
+        for m in members:
+            out[_serve_name(path[:-1] + (m,))] = leaf.bits
+    return out
+
+
+def verify_packed_bits(serve_params: dict, artifact: PolicyArtifact) -> None:
+    """Assert a packed tree carries exactly the artifact's searched bitwidths.
+
+    Bidirectional: a layer packed at the wrong width fails, and so does a
+    searched layer that was never packed at all (float / partially-quantized
+    trees must not silently pass as the searched deployment).
+    """
+    packed = packed_policy_bits(serve_params)
+    wrong = {n: (b, artifact.policy.bits.get(n))
+             for n, b in packed.items() if artifact.policy.bits.get(n) != b}
+    if wrong:
+        sample = dict(list(wrong.items())[:4])
+        raise ValueError(
+            f"packed weights disagree with the policy artifact on "
+            f"{len(wrong)} layers (packed, artifact): {sample}")
+    missing = sorted(set(artifact.policy.bits) - set(packed))
+    if missing:
+        raise ValueError(
+            f"{len(missing)} searched layers are not packed in the serve tree "
+            f"(float or partially-quantized params?): {missing[:4]}")
+
+
 def _serve_name(path: tuple[str, ...]) -> str:
     """serve-layout path (lists of layers) -> policy name."""
     parts = list(path)
@@ -231,8 +284,9 @@ def _serve_name(path: tuple[str, ...]) -> str:
 
 def sigma_vector(params: dict, specs: tuple[LayerInfo, ...]) -> np.ndarray:
     """Per-layer weight std-devs in spec order (Phase-1 clustering features)."""
-    return np.asarray([float(jnp.std(get_weight(params, s.name).astype(jnp.float32)))
-                       for s in specs])
+    from repro.core import stats
+
+    return stats.sigma_vector(get_weight(params, s.name) for s in specs)
 
 
 def kl_vector(params: dict, specs: tuple[LayerInfo, ...], policy: BitPolicy,

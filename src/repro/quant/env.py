@@ -7,12 +7,13 @@
   (DESIGN.md §2: the accuracy constraint sign-flips into a loss constraint),
   AdamW QAT over the synthetic token task.
 
-Both report ``resource`` per the controller objective: model size (MiB,
-weights only, logical bits — the paper's accounting) or BOPs.
+Both share ``QuantEnvBase``: one implementation of the sigma/KL sensitivity
+vectors (core/stats.py) and of resource accounting, which delegates to an
+injected ``CostModel`` (repro.cost) — swap the backend to search the same
+model under different hardware conditions (DESIGN.md §10).
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Any
 
 import jax
@@ -21,6 +22,7 @@ import numpy as np
 
 from repro.core import stats
 from repro.core.policy import BitPolicy, LayerInfo
+from repro.cost import CostModel, ShiftAddCostModel
 from repro.data.images import ImageTask
 from repro.data.pipeline import TokenTask, global_batch
 from repro.models import cnn as cnn_mod
@@ -29,22 +31,62 @@ from . import apply as apply_mod
 from . import qat as qat_mod
 
 
-def _bops(policy: BitPolicy) -> float:
-    return policy.bops()
+class QuantEnvBase:
+    """Shared statistics + CostModel-backed resource accounting.
+
+    Subclasses set ``self._specs`` and implement ``_weight(name)``; everything
+    the controller reads off the *policy* (sigmas, sensitivities, costs) lives
+    here exactly once.
+    """
+
+    _specs: tuple[LayerInfo, ...]
+    objective: str = "size"
+    cost_model: CostModel
+
+    def _weight(self, name: str):
+        raise NotImplementedError
+
+    # -- QuantEnv protocol ---------------------------------------------------
+    def layer_infos(self) -> tuple[LayerInfo, ...]:
+        return self._specs
+
+    def sigmas(self) -> np.ndarray:
+        return stats.sigma_vector(self._weight(s.name) for s in self._specs)
+
+    def sensitivities(self, policy: BitPolicy) -> np.ndarray:
+        return stats.sensitivity_vector(
+            (self._weight(s.name) for s in self._specs),
+            (policy.bits[s.name] for s in self._specs))
+
+    def costs(self, policy: BitPolicy) -> dict[str, float]:
+        """Full cost vector from the injected backend (Budget metric keys).
+
+        Includes the legacy "resource" scalar so the controller prices each
+        policy with exactly one backend report per measurement.
+        """
+        costs = self.cost_model.report(policy).as_costs()
+        costs["resource"] = costs["bops"] if self.objective == "bops" else costs["size_mib"]
+        return costs
+
+    def resource(self, policy: BitPolicy) -> float:
+        """Legacy scalar objective, read off the same cost backend."""
+        return self.costs(policy)["resource"]
 
 
-class CNNQuantEnv:
+class CNNQuantEnv(QuantEnvBase):
     """QuantEnv over the reduced ResNet + teacher-labeled image task."""
 
     def __init__(self, params: dict, cfg: cnn_mod.CNNConfig, task: ImageTask,
                  *, batch: int = 128, steps_per_epoch: int = 20,
-                 objective: str = "size", seed: int = 0):
+                 objective: str = "size", seed: int = 0,
+                 cost_model: CostModel | None = None):
         self.params = params
         self.cfg = cfg
         self.task = task
         self.batch = batch
         self.steps_per_epoch = steps_per_epoch
         self.objective = objective
+        self.cost_model = cost_model or ShiftAddCostModel()
         self._specs = cnn_mod.quant_layer_specs(params, cfg)
         self._step_fn, ocfg = qat_mod.make_cnn_qat_step(cfg)
         self._opt_state = opt_mod.init(ocfg, params)
@@ -52,21 +94,8 @@ class CNNQuantEnv:
         self._eval_imgs, self._eval_labels = task.eval_set(512)
         self._data_step = seed * 1_000_003  # disjoint stream per env
 
-    # -- QuantEnv protocol ---------------------------------------------------
-    def layer_infos(self) -> tuple[LayerInfo, ...]:
-        return self._specs
-
-    def sigmas(self) -> np.ndarray:
-        return np.asarray([
-            float(jnp.std(cnn_mod.get_weight(self.params, s.name).astype(jnp.float32)))
-            for s in self._specs])
-
-    def sensitivities(self, policy: BitPolicy) -> np.ndarray:
-        out = []
-        for s in self._specs:
-            w = cnn_mod.get_weight(self.params, s.name)
-            out.append(float(stats.sensitivity_score(w, policy.bits[s.name])))
-        return np.asarray(out)
+    def _weight(self, name: str):
+        return cnn_mod.get_weight(self.params, name)
 
     def evaluate(self, policy: BitPolicy) -> float:
         bits = qat_mod.cnn_bits_pytree(policy)
@@ -79,9 +108,6 @@ class CNNQuantEnv:
             self._data_step += 1
             self.params, self._opt_state, _ = self._step_fn(
                 self.params, self._opt_state, batch, bits)
-
-    def resource(self, policy: BitPolicy) -> float:
-        return _bops(policy) if self.objective == "bops" else policy.model_size_mib()
 
     # -- extras used by benchmarks -------------------------------------------
     def float_accuracy(self) -> float:
@@ -99,20 +125,22 @@ class CNNQuantEnv:
         return float(loss)
 
 
-class LMQuantEnv:
+class LMQuantEnv(QuantEnvBase):
     """QuantEnv over an assigned LM architecture + synthetic token task.
 
-    quality = -val_loss; resource = logical model size (MiB) or BOPs.
+    quality = -val_loss; resource priced by the injected CostModel.
     """
 
     def __init__(self, params: dict, cfg: Any, shape, task: TokenTask | None = None,
-                 *, qat_steps_per_epoch: int = 4, objective: str = "size"):
+                 *, qat_steps_per_epoch: int = 4, objective: str = "size",
+                 cost_model: CostModel | None = None):
         self.params = params
         self.cfg = cfg
         self.shape = shape
         self.task = task or TokenTask(vocab_size=cfg.vocab_size)
         self.qat_steps_per_epoch = qat_steps_per_epoch
         self.objective = objective
+        self.cost_model = cost_model or ShiftAddCostModel()
         self._specs = apply_mod.layer_specs(params, cfg)
         self._step_fn, tcfg = qat_mod.make_lm_qat_step(cfg)
         self._opt_state = opt_mod.init(tcfg.optimizer, params)
@@ -120,18 +148,8 @@ class LMQuantEnv:
         self._val_batch = global_batch(self.task, cfg, shape, step=2**30)
         self._data_step = 0
 
-    def layer_infos(self) -> tuple[LayerInfo, ...]:
-        return self._specs
-
-    def sigmas(self) -> np.ndarray:
-        return apply_mod.sigma_vector(self.params, self._specs)
-
-    def sensitivities(self, policy: BitPolicy) -> np.ndarray:
-        out = []
-        for s in self._specs:
-            w = apply_mod.get_weight(self.params, s.name)
-            out.append(float(stats.sensitivity_score(w, policy.bits[s.name])))
-        return np.asarray(out)
+    def _weight(self, name: str):
+        return apply_mod.get_weight(self.params, name)
 
     def evaluate(self, policy: BitPolicy) -> float:
         bits = apply_mod.bits_for_scan(policy, self.params, self.cfg)
@@ -144,9 +162,6 @@ class LMQuantEnv:
             self._data_step += 1
             self.params, self._opt_state, _ = self._step_fn(
                 self.params, self._opt_state, batch, bits)
-
-    def resource(self, policy: BitPolicy) -> float:
-        return _bops(policy) if self.objective == "bops" else policy.model_size_mib()
 
     def float_loss(self) -> float:
         bits = apply_mod.bits_for_scan(

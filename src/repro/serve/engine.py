@@ -45,6 +45,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
+from repro.core.policy import PolicyArtifact
 from repro.models import registry
 from repro.quant import apply as qapply
 from .sampling import sample
@@ -78,12 +79,20 @@ class ServeEngine:
                  max_seq: int = 256, prefill_pad: int = 32, qimpl: str = "auto",
                  temperature: float = 0.0, top_k: int = 0, seed: int = 0,
                  state_dtype=jnp.float32, batch_admission: bool = True,
-                 fuse_projections: bool = True):
+                 fuse_projections: bool = True,
+                 artifact: PolicyArtifact | None = None):
         if cfg.family in ("audio", "encdec"):
             raise NotImplementedError(
                 "enc-dec serving goes through registry.prefill/decode_step directly "
                 "(cross-attention KV needs the frames input at admission)")
         self.cfg = cfg
+        # the searched policy this engine claims to serve: refuse to start if
+        # the packed leaf bitwidths disagree with the artifact (the end of the
+        # search -> artifact -> packed deployment pipeline, DESIGN.md §10)
+        self.artifact = artifact
+        self.packed_bits = qapply.packed_policy_bits(params)
+        if artifact is not None:
+            qapply.verify_packed_bits(params, artifact)
         # fuse packed Q/K/V + gate/up groups: one kernel launch per group on
         # the decode fast path; exact-output-preserving (no requantization)
         self.params = qapply.fuse_projections(params) if fuse_projections else params

@@ -1,0 +1,115 @@
+"""PolicyArtifact: JSON round-trip, registry-hash rejection, versioning,
+checkpoint persistence, and packed-serve consumption."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import store as ck
+from repro.core.policy import (ARTIFACT_VERSION, BitPolicy, Budget, BudgetItem,
+                               LayerInfo, PolicyArtifact, Targets,
+                               layer_registry_hash)
+from repro.cost import ShiftAddCostModel
+
+
+def layers():
+    return (LayerInfo("blk0.w", (64, 32), macs=2048, kind="dense"),
+            LayerInfo("blk1.w", (32, 32), macs=1024, kind="dense"),
+            LayerInfo("embed", (256, 64), macs=64, kind="embedding"))
+
+
+def make_artifact():
+    policy = BitPolicy.from_bits(layers(), {"blk0.w": 4, "blk1.w": 2, "embed": 8})
+    budget = Budget(acc_t=0.9,
+                    items=(BudgetItem("size_mib", 0.5, 0.08),
+                           BudgetItem("latency_s", 2.0, 0.05, strict=False)))
+    report = ShiftAddCostModel().report(policy).as_costs()
+    return PolicyArtifact.build(policy, backend="shift_add", report=report,
+                                budget=budget, meta={"arch": "toy"})
+
+
+class TestRoundTrip:
+    def test_full_roundtrip(self):
+        art = make_artifact()
+        back = PolicyArtifact.from_json(art.to_json())
+        assert back.policy.bits == art.policy.bits
+        assert back.policy.layers == art.policy.layers
+        assert back.policy.act_bits == art.policy.act_bits
+        assert back.budget == art.budget          # items, buffers, strict flags
+        assert back.report == art.report
+        assert back.backend == "shift_add"
+        assert back.meta["arch"] == "toy"
+        assert back.registry_hash == art.registry_hash
+
+    def test_save_load_file(self, tmp_path):
+        art = make_artifact()
+        path = art.save(str(tmp_path / "pol.json"))
+        assert PolicyArtifact.load(path).policy.bits == art.policy.bits
+
+    def test_budgetless_artifact(self):
+        art = PolicyArtifact.build(BitPolicy.uniform(layers(), 4))
+        assert PolicyArtifact.from_json(art.to_json()).budget is None
+
+
+class TestRegistryHash:
+    def test_stable_and_order_sensitive(self):
+        assert layer_registry_hash(layers()) == layer_registry_hash(layers())
+        assert layer_registry_hash(layers()) != layer_registry_hash(tuple(reversed(layers())))
+
+    def test_macs_excluded(self):
+        a = (LayerInfo("w", (8, 8), macs=1),)
+        b = (LayerInfo("w", (8, 8), macs=999),)
+        assert layer_registry_hash(a) == layer_registry_hash(b)
+
+    def test_mismatch_rejected_after_roundtrip(self):
+        art = PolicyArtifact.from_json(make_artifact().to_json())
+        art.verify_layers(layers())  # same registry accepted
+        other = (LayerInfo("blk0.w", (64, 16), macs=2048),) + layers()[1:]
+        with pytest.raises(ValueError, match="hash mismatch"):
+            art.verify_layers(other)
+
+    def test_unknown_version_rejected(self):
+        doc = json.loads(make_artifact().to_json())
+        doc["artifact_version"] = ARTIFACT_VERSION + 1
+        with pytest.raises(ValueError, match="artifact version"):
+            PolicyArtifact.from_json(json.dumps(doc))
+
+
+class TestCheckpointPersistence:
+    def test_artifact_rides_the_manifest(self, tmp_path):
+        art = make_artifact()
+        tree = {"w": np.ones((4, 4), np.float32)}
+        ck.save(str(tmp_path), 7, tree, extra={"note": "x"}, artifact=art)
+        back = ck.load_policy_artifact(str(tmp_path))
+        assert back is not None and back.policy.bits == art.policy.bits
+        assert back.budget == art.budget
+        # extras survive alongside, and restore() is undisturbed
+        _, extra = ck.restore(str(tmp_path), {"w": np.zeros((4, 4), np.float32)})
+        assert extra["note"] == "x"
+        step_dir = tmp_path / "step_00000007"
+        assert (step_dir / ck.ARTIFACT_FILE).exists()
+
+    def test_no_artifact_returns_none(self, tmp_path):
+        ck.save(str(tmp_path), 1, {"w": np.zeros(2, np.float32)})
+        assert ck.load_policy_artifact(str(tmp_path)) is None
+
+    def test_async_store_passthrough(self, tmp_path):
+        store = ck.CheckpointStore(str(tmp_path))
+        store.save_async(3, {"w": np.ones(2, np.float32)}, artifact=make_artifact())
+        store.wait()
+        assert store.load_policy_artifact().backend == "shift_add"
+
+
+class TestTargetsBudgetBridge:
+    def test_targets_to_budget_equivalence(self):
+        t = Targets(acc_t=0.8, res_t=5.0, acc_buffer=0.02, res_buffer=0.1)
+        b = t.to_budget()
+        assert b.acc_t == t.acc_t and b.acc_buffer == t.acc_buffer
+        (item,) = b.items
+        assert item.metric == "resource" and item.limit == 5.0 and item.buffer == 0.1
+        assert b.res_ok({"resource": 5.4}, buffered=True)
+        assert not b.res_ok({"resource": 5.6}, buffered=True)
+
+    def test_budget_of_rejects_unknown_metric(self):
+        with pytest.raises(ValueError, match="unknown cost metric"):
+            Budget.of(0.9, watts=3.0)

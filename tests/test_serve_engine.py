@@ -156,3 +156,57 @@ class TestSampling:
         for s in range(20):
             t = int(sample(logits, jax.random.key(s), temperature=2.0, top_k=2)[0])
             assert t in (0, 1)
+
+
+class TestPolicyArtifactServing:
+    """search -> artifact -> packed deployment: the engine serves exactly the
+    searched heterogeneous bitwidths or refuses to start."""
+
+    def _heterogeneous_artifact(self, cfg, params):
+        from repro.core.policy import PolicyArtifact
+
+        specs = qapply.layer_specs(params, cfg)
+        rng = np.random.default_rng(1)
+        policy = BitPolicy.from_bits(
+            specs, {s.name: int(rng.choice([2, 4, 6, 8])) for s in specs})
+        return PolicyArtifact.build(policy, backend="shift_add"), policy
+
+    def test_packed_leaf_bits_match_artifact(self, dense_setup):
+        cfg, api, sp = dense_setup
+        params = api.init(cfg, jax.random.key(0))
+        artifact, policy = self._heterogeneous_artifact(cfg, params)
+        assert len(set(policy.bits.values())) >= 2  # genuinely heterogeneous
+        qp = qapply.quantize_for_serve(sp, artifact, cfg)
+        eng = ServeEngine(cfg, qp, max_slots=2, max_seq=64, artifact=artifact)
+        # every searched layer packed at exactly its searched bitwidth
+        assert eng.packed_bits == policy.bits
+        outs = eng.generate([[5, 6, 7], [1, 2]], max_new_tokens=3)
+        assert all(len(o) == 3 for o in outs)
+
+    def test_mismatched_packing_refused(self, dense_setup):
+        cfg, api, sp = dense_setup
+        params = api.init(cfg, jax.random.key(0))
+        artifact, policy = self._heterogeneous_artifact(cfg, params)
+        specs = qapply.layer_specs(params, cfg)
+        wrong = BitPolicy.uniform(specs, 8)  # packed != searched
+        qp = qapply.quantize_for_serve(sp, wrong, cfg)
+        if wrong.bits == policy.bits:  # pragma: no cover - rng made them equal
+            pytest.skip("rng produced uniform-8 policy")
+        with pytest.raises(ValueError, match="disagree with the policy artifact"):
+            ServeEngine(cfg, qp, max_slots=2, max_seq=64, artifact=artifact)
+
+    def test_fused_leaves_expand_in_packed_bits(self, dense_setup):
+        cfg, api, sp = dense_setup
+        params = api.init(cfg, jax.random.key(0))
+        specs = qapply.layer_specs(params, cfg)
+        policy = BitPolicy.uniform(specs, 4)  # uniform -> QKV/gate-up fuse
+        qp = qapply.quantize_for_serve(sp, policy, cfg)
+        fused = qapply.fuse_projections(qp)
+        assert qapply.packed_policy_bits(fused) == policy.bits
+
+    def test_unpacked_float_tree_refused(self, dense_setup):
+        cfg, api, sp = dense_setup
+        params = api.init(cfg, jax.random.key(0))
+        artifact, _ = self._heterogeneous_artifact(cfg, params)
+        with pytest.raises(ValueError, match="not packed"):
+            ServeEngine(cfg, sp, max_slots=2, max_seq=64, artifact=artifact)
