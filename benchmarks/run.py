@@ -1,9 +1,11 @@
 """Benchmark harness entry point — one section per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--full] [--only table3]
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only table3] [--smoke]
 
 ``--full`` uses the paper-scale controller budgets (slower);
 the default fast mode keeps every section CPU-friendly.
+``--smoke`` runs every registered section in tiny mode and exits non-zero
+on any failure — the CI step that keeps the BENCH_*.json producers alive.
 """
 from __future__ import annotations
 
@@ -11,12 +13,14 @@ import argparse
 import time
 import traceback
 
-from . import (allocator, decode_throughput, fig3_trajectory, fig5_hw, roofline,
-               table1_sigma_kl, table2_phases, table3_sota, table4_hparam,
-               table5_bops, table6_mac)
+from . import (allocator, decode_throughput, fig3_trajectory, fig5_hw, kvcache,
+               roofline, table1_sigma_kl, table2_phases, table3_sota,
+               table4_hparam, table5_bops, table6_mac)
 
 SECTIONS = {
     "decode": ("Decode throughput (BENCH_decode.json)", decode_throughput.run),
+    "kvcache": ("Quantized KV cache: state bytes + decode tok/s vs fp cache "
+                "(BENCH_kvcache.json)", kvcache.run),
     "allocator": ("Allocator: wall-time + budget satisfaction x backends "
                   "(BENCH_allocator.json)", allocator.run),
     "table1": ("Table I: sigma vs KL vs final bits", table1_sigma_kl.run),
@@ -35,8 +39,15 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--full", action="store_true", help="paper-scale budgets")
     ap.add_argument("--only", default=None, choices=sorted(SECTIONS))
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny-mode pass over every registered section (CI)")
     args = ap.parse_args(argv)
+    if args.smoke and args.full:
+        ap.error("--smoke and --full are mutually exclusive")
 
+    # --smoke pins fast=True explicitly so the CI job keeps its tiny-mode
+    # guarantee even if the default mode ever changes
+    fast = True if args.smoke else not args.full
     failures = []
     for key, (title, fn) in SECTIONS.items():
         if args.only and key != args.only:
@@ -44,7 +55,7 @@ def main(argv=None) -> int:
         print(f"\n{'=' * 72}\n== {title}\n{'=' * 72}")
         t0 = time.time()
         try:
-            fn(fast=not args.full)
+            fn(fast=fast)
         except Exception:
             traceback.print_exc()
             failures.append(key)

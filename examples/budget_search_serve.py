@@ -1,12 +1,27 @@
-"""SigmaQuant's adaptability claim, end to end: search ONE model under two
-different hardware conditions — a memory-tight budget priced on the paper's
-shift-add edge accelerator and a latency-tight budget priced on the TPU
-serving roofline — write a versioned ``PolicyArtifact`` for each, then serve
-both through ``launch/serve.py --policy`` so the engine packs exactly the
-searched heterogeneous bitwidths.
+"""SigmaQuant's adaptability claim, end to end: search ONE model under
+different hardware conditions and deploy every searched artifact through the
+serving stack.
 
-    PYTHONPATH=src python examples/budget_search_serve.py
+  1. memory-tight edge deployment — weight-size budget priced on the paper's
+     shift-add accelerator;
+  2. latency-tight TPU serving — latency budget priced on the serving
+     roofline;
+  3. KV-budgeted long-context serving (DESIGN.md §11) — a joint weight-size
+     + ``state_bytes`` budget: the same two-phase controller additionally
+     allocates heterogeneous per-layer K/V *cache* bitwidths from sigma/KL
+     statistics over calibration decodes, and the engine serves with the
+     packed decode state.
+
+Each condition writes a versioned ``PolicyArtifact``; conditions 1-2 deploy
+via ``launch/serve.py --policy`` (the CLI path), condition 3 additionally
+verifies the engine's packed state against the artifact.
+
+    PYTHONPATH=src python examples/budget_search_serve.py [--tiny]
+
+``--tiny`` shrinks the pretraining/search budgets so the whole demo smoke-
+runs in CI (tests/test_examples.py).
 """
+import argparse
 import os
 import pathlib
 import sys
@@ -15,19 +30,23 @@ import tempfile
 sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
 
 import jax
+import numpy as np
 
 from repro.configs import get_config
 from repro.configs.base import ShapeSpec
 from repro.core.controller import ControllerConfig
 from repro.core.policy import BitPolicy, Budget
 from repro.cost import RooflineCostModel, ShiftAddCostModel
+from repro.kvcache.env import KVQuantEnv
 from repro.launch import serve as serve_mod
-from repro.launch.search import search_policy
+from repro.launch.search import search_policy, state_controller_config
 from repro.models import registry
+from repro.quant import apply as qapply
 from repro.quant.env import LMQuantEnv
+from repro.serve.engine import ServeEngine
 
 
-def make_env(cost_model, *, pretrain_steps=40, seed=0):
+def make_env(cost_model, *, pretrain_steps, seed=0):
     cfg = get_config("gemma-2b").reduced()
     api = registry.get_api(cfg)
     params = api.init(cfg, jax.random.key(seed))
@@ -36,13 +55,19 @@ def make_env(cost_model, *, pretrain_steps=40, seed=0):
     return cfg, env
 
 
-def main():
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI-sized budgets (smoke test mode)")
+    args = ap.parse_args(argv)
+    pretrain = 8 if args.tiny else 40
+    iters = 4 if args.tiny else 10
     out_dir = tempfile.mkdtemp(prefix="sigmaquant_artifacts_")
-    cc = ControllerConfig(phase1_max_iters=2, phase2_max_iters=10,
+    cc = ControllerConfig(phase1_max_iters=2, phase2_max_iters=iters,
                           phase1_qat_epochs=1, phase2_qat_epochs=1)
 
     # ---- condition 1: memory-tight edge deployment (shift-add backend) ----
-    cfg, env = make_env(ShiftAddCostModel())
+    cfg, env = make_env(ShiftAddCostModel(), pretrain_steps=pretrain)
     acc_t = -(env.float_loss() + 0.10)
     ref = env.costs(BitPolicy.uniform(env.layer_infos(), 8))
     mem_budget = Budget.of(acc_t, acc_buffer=0.05, buffer=0.08,
@@ -57,7 +82,7 @@ def main():
           f"(budget {mem_budget.items[0].limit:.3f}) -> {mem_path}")
 
     # ---- condition 2: latency-tight TPU serving (roofline backend) --------
-    cfg, env = make_env(RooflineCostModel(batch=4))
+    cfg, env = make_env(RooflineCostModel(batch=4), pretrain_steps=pretrain)
     acc_t = -(env.float_loss() + 0.10)
     ref = env.costs(BitPolicy.uniform(env.layer_infos(), 8))
     lat_budget = Budget.of(acc_t, acc_buffer=0.05, buffer=0.08,
@@ -71,11 +96,50 @@ def main():
           f"latency={art_lat.report['latency_s']:.3e} s "
           f"(budget {lat_budget.items[0].limit:.3e}) -> {lat_path}")
 
-    # ---- deploy both artifacts through the serving driver -----------------
+    # ---- condition 3: KV-budgeted long-context serving (DESIGN.md §11) ----
+    cfg, env = make_env(ShiftAddCostModel(), pretrain_steps=pretrain)
+    acc_t = -(env.float_loss() + 0.10)
+    ref = env.costs(BitPolicy.uniform(env.layer_infos(), 8))
+    slots, max_seq = 4, 64
+    serve_params = registry.get_api(cfg).unstack(env.params, cfg)
+    calib = np.random.default_rng(0).integers(1, cfg.vocab_size, (4, 16))
+    kv_env = KVQuantEnv(serve_params, cfg, calib, slots=slots, max_seq=max_seq,
+                        cost_model=ShiftAddCostModel())
+    ref_state = kv_env.costs(BitPolicy.uniform(kv_env.layer_infos(), 8))
+    joint_budget = Budget.of(acc_t, acc_buffer=0.05, buffer=0.08,
+                             size_mib=0.75 * ref["size_mib"])
+    state_budget = Budget.of(-0.20, acc_buffer=0.05, buffer=0.08,
+                             state_bytes=0.80 * ref_state["state_bytes"])
+    art_kv, res_kv = search_policy(
+        env, joint_budget, config=cc,
+        state_env=kv_env, state_budget=state_budget,
+        state_config=state_controller_config(len(kv_env.layer_infos())),
+        meta={"arch": cfg.name, "condition": "kv-budgeted"})
+    kv_path = os.path.join(out_dir, "policy_kv_budgeted.json")
+    art_kv.save(kv_path)
+    sp_bits = sorted(set(art_kv.state_policy.bits.values()))
+    print(f"[kv-budgeted/shift_add] success={res_kv.success} "
+          f"state_success={art_kv.meta['state_success']} "
+          f"state_bytes={art_kv.report['state_bytes']:g} "
+          f"(fp32 {art_kv.meta['fp_state_bytes']:g}, "
+          f"{art_kv.meta['fp_state_bytes'] / art_kv.report['state_bytes']:.1f}x "
+          f"smaller) kv_bits={sp_bits} -> {kv_path}")
+
+    # deploy condition 3 directly: packed weights + packed decode state,
+    # bidirectionally verified against the artifact
+    qp = qapply.quantize_for_serve(serve_params, art_kv, cfg)
+    eng = ServeEngine(cfg, qp, max_slots=slots, max_seq=max_seq, artifact=art_kv)
+    outs = eng.generate([[5, 6, 7, 8], [1, 2, 9], [4, 4, 4, 4, 4]],
+                        max_new_tokens=8)
+    print(f"  served {len(outs)} requests on the quantized KV cache; "
+          f"state_bits={eng.state_bits}")
+
+    # ---- deploy conditions 1-2 through the serving CLI --------------------
     for path in (mem_path, lat_path):
         print(f"\n--- launch.serve --policy {os.path.basename(path)} ---")
         serve_mod.main(["--arch", "gemma-2b", "--reduced", "--policy", path,
                         "--requests", "4", "--max-new", "8"])
+    return out_dir
 
 
 if __name__ == "__main__":

@@ -59,7 +59,12 @@ def logical_bytes(shape: tuple[int, ...], bits: int) -> float:
 
 
 def pack(levels: jax.Array, bits: int) -> jax.Array:
-    """Pack signed b-bit integer levels (int32/int8 valued) into int8 lanes."""
+    """Pack signed b-bit integer levels (int32/int8 valued) into int8 lanes.
+
+    Vectorized over lanes (pack sits on the decode hot path via the
+    quantized KV-cache append): the masked fields occupy disjoint bit
+    ranges, so a sum over the lane axis IS the lane-OR.
+    """
     lanes = LANES[check_bits(bits)]
     lev = levels.astype(jnp.int32)
     if lanes == 1:
@@ -70,9 +75,8 @@ def pack(levels: jax.Array, bits: int) -> jax.Array:
         lev = jnp.pad(lev, [(0, 0)] * (lev.ndim - 1) + [(0, pad)])
     grouped = lev.reshape(*lev.shape[:-1], -1, lanes)
     mask = (1 << bits) - 1
-    out = jnp.zeros(grouped.shape[:-1], dtype=jnp.int32)
-    for lane in range(lanes):
-        out = out | ((grouped[..., lane] & mask) << (bits * lane))
+    sh = bits * jnp.arange(lanes, dtype=jnp.int32)
+    out = ((grouped & mask) << sh).sum(axis=-1)
     return out.astype(jnp.uint8).astype(jnp.int8)
 
 
@@ -93,17 +97,17 @@ def concat_rows(packed_list: list[jax.Array], bits: int) -> jax.Array:
 
 
 def unpack(packed: jax.Array, bits: int, k: int) -> jax.Array:
-    """Inverse of :func:`pack`; ``k`` is the original last-axis length."""
+    """Inverse of :func:`pack`; ``k`` is the original last-axis length.
+
+    Vectorized over lanes (one broadcast shift-pair instead of a per-lane
+    extract/stack loop): left-align each lane's field in the int32 then
+    arithmetic-right-shift to sign extend — the unpack sits on the decode
+    hot path for both packed weights and the quantized KV cache.
+    """
     lanes = LANES[check_bits(bits)]
     if lanes == 1:
         return packed.astype(jnp.int32)[..., :k]
-    u = packed.astype(jnp.uint8).astype(jnp.int32)
-    mask = (1 << bits) - 1
-    sign = 1 << (bits - 1)
-    vals = []
-    for lane in range(lanes):
-        v = (u >> (bits * lane)) & mask
-        v = jnp.where(v >= sign, v - (1 << bits), v)  # sign extend
-        vals.append(v)
-    out = jnp.stack(vals, axis=-1).reshape(*u.shape[:-1], -1)
-    return out[..., :k]
+    u = packed.astype(jnp.uint8).astype(jnp.int32)[..., None]  # (..., kp, 1)
+    sh_left = 32 - bits * (jnp.arange(lanes, dtype=jnp.int32) + 1)
+    vals = ((u << sh_left) >> (32 - bits))                     # sign-extended
+    return vals.reshape(*packed.shape[:-1], -1)[..., :k]

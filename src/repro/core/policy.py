@@ -26,12 +26,19 @@ from .packing import VALID_BITS  # canonical bit-set (re-exported for callers)
 
 @dataclasses.dataclass(frozen=True)
 class LayerInfo:
-    """Static description of one quantizable layer."""
+    """Static description of one quantizable layer.
+
+    ``kind == "state"`` marks a *decode-state* surface (a KV cache tensor)
+    rather than a weight: state layers are priced into the separate
+    ``state_bytes`` cost metric and excluded from the weight metrics
+    (size/container/BOPs), so one registry can carry both and a Budget can
+    constrain them independently (DESIGN.md §11).
+    """
 
     name: str
     shape: tuple[int, ...]
     macs: int  # multiply-accumulates per forward pass of the reference batch
-    kind: str = "dense"  # dense | embedding | conv | expert
+    kind: str = "dense"  # dense | embedding | conv | expert | state
 
     @property
     def n_params(self) -> int:
@@ -79,17 +86,42 @@ class BitPolicy:
         return BitPolicy(self.layers, new, self.act_bits)
 
     # -- accounting ----------------------------------------------------------
+    # Weight metrics iterate weight layers only; decode-state ("state" kind)
+    # entries are accounted separately in state_bytes() so a joint
+    # weight+state policy prices each budget axis independently.
+    def weight_layers(self) -> tuple[LayerInfo, ...]:
+        return tuple(l for l in self.layers if l.kind != "state")
+
+    def state_layers(self) -> tuple[LayerInfo, ...]:
+        return tuple(l for l in self.layers if l.kind == "state")
+
     def model_size_bytes(self) -> float:
-        return sum(packing.logical_bytes(l.shape, self.bits[l.name]) for l in self.layers)
+        return sum(packing.logical_bytes(l.shape, self.bits[l.name])
+                   for l in self.weight_layers())
 
     def model_size_mib(self) -> float:
         return self.model_size_bytes() / 2**20
 
     def container_bytes(self) -> int:
-        return sum(packing.container_bytes(l.shape, self.bits[l.name]) for l in self.layers)
+        return sum(packing.container_bytes(l.shape, self.bits[l.name])
+                   for l in self.weight_layers())
+
+    def state_bytes(self) -> int:
+        """Packed container bytes of the decode state (kind == "state").
+
+        Counts the int lanes only: the per-block f32 scales (4 bytes per
+        ``kvcache`` scale block, <= a few percent at the default block
+        length) are a deployment-geometry detail a shape-only policy cannot
+        see.  ``QuantizedKVLayer.container_bytes()`` reports the full
+        allocation including scales — budgets bound the lanes, benchmarks
+        report the deployed total.
+        """
+        return sum(packing.container_bytes(l.shape, self.bits[l.name])
+                   for l in self.state_layers())
 
     def bops(self) -> float:
-        return float(sum(self.bits[l.name] * self.act_bits * l.macs for l in self.layers))
+        return float(sum(self.bits[l.name] * self.act_bits * l.macs
+                         for l in self.weight_layers()))
 
     def bit_vector(self) -> np.ndarray:
         return np.asarray([self.bits[l.name] for l in self.layers], dtype=np.int64)
@@ -136,8 +168,8 @@ class Zone(enum.Enum):
 
 #: canonical cost-metric names a Budget may constrain (keys of
 #: ``CostReport.as_costs()``; "resource" is the legacy scalar objective).
-COST_METRICS = ("size_mib", "size_bytes", "container_bytes", "bops",
-                "energy", "latency_s", "resource")
+COST_METRICS = ("size_mib", "size_bytes", "container_bytes", "state_bytes",
+                "bops", "energy", "latency_s", "resource")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -337,7 +369,10 @@ def classify_zone(acc: float, res, t: "Targets | Budget") -> Zone:
 # ---------------------------------------------------------------------------
 
 #: bump when the artifact JSON layout changes incompatibly
-ARTIFACT_VERSION = 1
+ARTIFACT_VERSION = 2
+
+#: versions this build can still read (v1 artifacts simply have no KV policy)
+READABLE_ARTIFACT_VERSIONS = (1, 2)
 
 
 def layer_registry_hash(layers: Iterable[LayerInfo]) -> str:
@@ -356,12 +391,15 @@ def layer_registry_hash(layers: Iterable[LayerInfo]) -> str:
 class PolicyArtifact:
     """Everything deployment needs from one SigmaQuant search, serialized.
 
-    policy         the searched per-layer bitwidths
+    policy         the searched per-layer *weight* bitwidths
     budget         the constraints the search ran under (None for hand-made)
     report         the cost-model vector at the final policy (metric -> value)
     backend        which CostModel priced it ("shift_add" / "roofline" / ...)
     registry_hash  layer_registry_hash of the model the search saw — loading
                    against a different registry is rejected
+    state_policy   per-layer K/V decode-state bitwidths (None: fp state) —
+                   versioned alongside the weight policy since v2, with its
+                   own registry hash over the state surface (DESIGN.md §11)
     meta           free-form provenance (arch, controller stats, wall time)
     """
 
@@ -370,14 +408,20 @@ class PolicyArtifact:
     backend: str = ""
     report: dict = dataclasses.field(default_factory=dict)
     budget: Budget | None = None
+    state_policy: BitPolicy | None = None
+    state_registry_hash: str = ""
     meta: dict = dataclasses.field(default_factory=dict)
     version: int = ARTIFACT_VERSION
 
     @classmethod
     def build(cls, policy: BitPolicy, *, backend: str = "", report: Mapping | None = None,
-              budget: Budget | None = None, meta: Mapping | None = None) -> "PolicyArtifact":
+              budget: Budget | None = None, state_policy: "BitPolicy | None" = None,
+              meta: Mapping | None = None) -> "PolicyArtifact":
         return cls(policy=policy, registry_hash=layer_registry_hash(policy.layers),
                    backend=backend, report=dict(report or {}), budget=budget,
+                   state_policy=state_policy,
+                   state_registry_hash=(layer_registry_hash(state_policy.layers)
+                                        if state_policy is not None else ""),
                    meta=dict(meta or {}))
 
     # -- validation ----------------------------------------------------------
@@ -389,6 +433,16 @@ class PolicyArtifact:
                 f"policy artifact layer-registry hash mismatch: artifact was "
                 f"searched on {self.registry_hash}, model exposes {got}")
 
+    def verify_state_layers(self, layers: Iterable[LayerInfo]) -> None:
+        """Reject applying the KV state policy to a different state surface."""
+        if self.state_policy is None:
+            raise ValueError("artifact carries no state policy")
+        got = layer_registry_hash(layers)
+        if got != self.state_registry_hash:
+            raise ValueError(
+                f"policy artifact state-registry hash mismatch: artifact was "
+                f"searched on {self.state_registry_hash}, model exposes {got}")
+
     # -- io ------------------------------------------------------------------
     def to_json(self) -> str:
         return json.dumps(
@@ -398,6 +452,9 @@ class PolicyArtifact:
                 "backend": self.backend,
                 "report": self.report,
                 "budget": self.budget.to_dict() if self.budget else None,
+                "state_policy": (json.loads(self.state_policy.to_json())
+                                 if self.state_policy is not None else None),
+                "state_registry_hash": self.state_registry_hash,
                 "meta": self.meta,
                 "policy": json.loads(self.policy.to_json()),
             },
@@ -407,15 +464,19 @@ class PolicyArtifact:
     def from_json(cls, s: str) -> "PolicyArtifact":
         d = json.loads(s)
         version = int(d.get("artifact_version", -1))
-        if version != ARTIFACT_VERSION:
+        if version not in READABLE_ARTIFACT_VERSIONS:
             raise ValueError(f"unsupported policy-artifact version {version} "
-                             f"(this build reads {ARTIFACT_VERSION})")
+                             f"(this build reads {READABLE_ARTIFACT_VERSIONS})")
+        state_policy = (BitPolicy.from_json(json.dumps(d["state_policy"]))
+                        if d.get("state_policy") else None)
         return cls(
             policy=BitPolicy.from_json(json.dumps(d["policy"])),
             registry_hash=d["registry_hash"],
             backend=d.get("backend", ""),
             report=dict(d.get("report") or {}),
             budget=Budget.from_dict(d["budget"]) if d.get("budget") else None,
+            state_policy=state_policy,
+            state_registry_hash=d.get("state_registry_hash", ""),
             meta=dict(d.get("meta") or {}),
             version=version)
 

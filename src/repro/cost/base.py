@@ -38,6 +38,7 @@ class CostReport:
     bops: float              # sum_l B_w(l) * B_a(l) * MACs(l)
     energy: float            # backend units (see class docstring)
     latency_s: float         # backend units (see class docstring)
+    state_bytes: float = 0.0  # packed decode-state bytes (kind=="state" layers)
     backend: str = ""
     detail: Mapping[str, float] = dataclasses.field(default_factory=dict)
 
@@ -51,6 +52,7 @@ class CostReport:
             "size_bytes": float(self.size_bytes),
             "size_mib": float(self.size_mib),
             "container_bytes": float(self.container_bytes),
+            "state_bytes": float(self.state_bytes),
             "bops": float(self.bops),
             "energy": float(self.energy),
             "latency_s": float(self.latency_s),

@@ -66,15 +66,26 @@ class RooflineCostModel:
     def report(self, policy: BitPolicy) -> CostReport:
         flops = 0.0
         hbm_bytes = 0.0
-        for l in policy.layers:
+        for l in policy.weight_layers():
             flops += 2.0 * l.macs * self.batch
             hbm_bytes += self._layer_bytes(l.shape, policy.bits[l.name])
+        # decode-state layers: the packed KV container is re-read (streamed
+        # HBM->VMEM) on EVERY decode step, so its container bytes price into
+        # latency/energy exactly like weight bytes — that is why sigma-driven
+        # state bitwidths pay at long context (DESIGN.md §11).  Attention
+        # MACs ride the FLOPs term.
+        state_bytes = 0.0
+        for l in policy.state_layers():
+            flops += 2.0 * l.macs
+            state_bytes += packing.container_bytes(l.shape, policy.bits[l.name])
+        hbm_bytes += state_bytes
         terms = roofline_terms(flops / self.n_chips, hbm_bytes / self.n_chips,
                                0.0, self.n_chips, self.hw)
         energy_j = (hbm_bytes * self.pj_per_byte + flops * self.pj_per_flop) * 1e-12
         return CostReport(
             size_bytes=policy.model_size_bytes(),
             container_bytes=policy.container_bytes(),
+            state_bytes=state_bytes,
             bops=policy.bops(),
             energy=energy_j,
             latency_s=terms.bound_s,

@@ -123,6 +123,11 @@ class ShiftAddCostModel:
     BOPs come straight from the policy's packing accountants, so budgets
     written against the old scalar ``resource()`` objectives price
     identically here.
+
+    Decode-state layers (kind=="state") price into the separate
+    ``state_bytes`` term; their MACs still ride the shift-add energy/latency
+    ladder (an n-bit KV operand costs the MAC exactly what an n-bit weight
+    does on this unit), while the weight metrics exclude them.
     """
 
     name = "shift_add"
@@ -137,6 +142,7 @@ class ShiftAddCostModel:
         return CostReport(
             size_bytes=policy.model_size_bytes(),
             container_bytes=policy.container_bytes(),
+            state_bytes=policy.state_bytes(),
             bops=rep.bops,
             energy=rep.energy,
             latency_s=rep.latency,

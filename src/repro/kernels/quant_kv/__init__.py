@@ -1,0 +1,1 @@
+from .ops import quant_kv_append, quant_kv_attention  # noqa: F401

@@ -1,0 +1,194 @@
+"""Pallas TPU kernels for the quantized decode state (DESIGN.md §11).
+
+Two kernels over the ``kvcache/cache.py`` packed layout (int8 lanes along
+head_dim, f32 scales per sequence block):
+
+* **fused dequant-attention** — one decode token per slot attends over the
+  packed cache.  Grid ``(B, n_kv)``: each program unpacks its head's
+  ``(S, hd/lanes)`` K and V lanes in VMEM, applies the per-block scales,
+  and runs the masked softmax for that head's query group.  The packed
+  bytes are the only state bytes that cross HBM->VMEM — the decode-state
+  analogue of the weight kernels' dequant-in-kernel contract (a W4 cache
+  moves half the bytes of W8, and decode is memory-bound on exactly those
+  bytes at long context).
+
+* **quantized append** — writes one new token at a per-slot position.
+  Scalar-prefetched positions drive the BlockSpec index maps, so each
+  program DMAs exactly ONE ``(H, block, hd/lanes)`` sequence block (not the
+  whole cache), dequantizes it, inserts the new row, masks positions beyond
+  the write point (container invariant: stale levels stay zero), and
+  requantizes under a fresh scale.  The kernel emits the new block + scale;
+  the thin jnp scatter that places them back is shared with the reference
+  path (ops.py).
+
+Shapes here are the skinny decode regime: one query token, S up to a few
+thousand — the whole per-head cache block fits VMEM comfortably
+(S=4096, hd=128, int8: 512 KiB K+V).  CPU tests run ``interpret=True``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.packing import LANES
+from repro.kernels.quant_matmul.kernel import _CompilerParams, _unpack_block
+
+
+def _pack_lanes(levels: jax.Array, bits: int) -> jax.Array:
+    """int32 levels ``(..., k)`` -> int8 lanes (k divisible by lanes).
+
+    The Pallas-safe inverse of ``_unpack_block`` (loop form — no iota /
+    lane-axis reduce in the kernel body); ``core/packing.pack`` is the
+    canonical layout and the append parity tests pin this bit-exact
+    against it.
+    """
+    lanes = LANES[bits]
+    if lanes == 1:
+        return levels.astype(jnp.int8)
+    grouped = levels.reshape(*levels.shape[:-1], -1, lanes)
+    mask = (1 << bits) - 1
+    out = jnp.zeros(grouped.shape[:-1], jnp.int32)
+    for lane in range(lanes):
+        out = out | ((grouped[..., lane] & mask) << (bits * lane))
+    return out.astype(jnp.uint8).astype(jnp.int8)
+
+
+def _dequant_block(packed, scale, bits, hd, block):
+    """(S, hd/lanes) int8 + (nb, 1) scale -> (S, hd) f32 inside the kernel."""
+    lev = _unpack_block(packed, bits, hd)            # (S, hd) int32
+    s = lev.shape[0]
+    nb = s // block
+    fp = lev.astype(jnp.float32).reshape(nb, block, hd) * scale.reshape(nb, 1, 1)
+    return fp.reshape(s, hd)
+
+
+# ---------------------------------------------------------------------------
+# fused dequant-attention
+# ---------------------------------------------------------------------------
+
+
+def _attn_kernel(q_ref, kp_ref, ks_ref, vp_ref, vs_ref, mask_ref, out_ref, *,
+                 k_bits: int, v_bits: int, hd: int, block: int):
+    q = q_ref[0, 0].astype(jnp.float32)                       # (g, hd)
+    k = _dequant_block(kp_ref[0, 0], ks_ref[0, 0], k_bits, hd, block)  # (S, hd)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    s = s * (hd ** -0.5) + mask_ref[...]                      # (g, S) + (1, S)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+    v = _dequant_block(vp_ref[0, 0], vs_ref[0, 0], v_bits, hd, block)
+    o = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    out_ref[0, 0] = o / l
+
+
+@functools.partial(jax.jit, static_argnames=("k_bits", "v_bits", "hd", "block",
+                                             "interpret"))
+def quant_kv_attention_pallas(
+    q: jax.Array,         # (B, n_kv, g, hd) float
+    k_packed: jax.Array,  # (B, n_kv, S, hd/lanes_k) int8
+    k_scale: jax.Array,   # (B, n_kv, S/block, 1) f32
+    v_packed: jax.Array,
+    v_scale: jax.Array,
+    mask: jax.Array,      # (B, S) f32 additive (0 valid / -1e30 invalid)
+    *,
+    k_bits: int,
+    v_bits: int,
+    hd: int,
+    block: int,
+    interpret: bool = False,
+) -> jax.Array:
+    b, n_kv, g, _ = q.shape
+    s = k_packed.shape[2]
+    nb = s // block
+    grid = (b, n_kv)
+    return pl.pallas_call(
+        functools.partial(_attn_kernel, k_bits=k_bits, v_bits=v_bits, hd=hd,
+                          block=block),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, g, hd), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, s, k_packed.shape[-1]), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, nb, 1), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, s, v_packed.shape[-1]), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, nb, 1), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, s), lambda i, j: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, hd), lambda i, j: (i, j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, n_kv, g, hd), jnp.float32),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel")),
+        interpret=interpret,
+    )(q, k_packed, k_scale, v_packed, v_scale, mask)
+
+
+# ---------------------------------------------------------------------------
+# quantized append (one sequence block touched per slot)
+# ---------------------------------------------------------------------------
+
+
+def _append_kernel(pos_ref, new_ref, packed_ref, scale_ref, blk_ref, sc_ref, *,
+                   bits: int, hd: int, block: int):
+    b = pl.program_id(0)
+    off = pos_ref[b] % block
+    lev = _unpack_block(packed_ref[0], bits, hd)              # (H, block, hd)
+    fp = lev.astype(jnp.float32) * scale_ref[0]               # * (H, 1, 1)
+    idx = jax.lax.broadcasted_iota(jnp.int32, (1, block, 1), 1)
+    fp = jnp.where(idx < off, fp, 0.0)
+    new = new_ref[0].astype(jnp.float32)                      # (H, hd)
+    fp = jnp.where(idx == off, new[:, None, :], fp)
+    q = float(2 ** (bits - 1) - 1)
+    amax = jnp.max(jnp.abs(fp), axis=(1, 2), keepdims=True)   # (H, 1, 1)
+    sc = jnp.maximum(amax, 1e-12) / q
+    levn = jnp.clip(jnp.round(fp / sc), -q, q).astype(jnp.int32)
+    blk_ref[0] = _pack_lanes(levn, bits)
+    sc_ref[0] = sc
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "hd", "block", "interpret"))
+def quant_kv_append_pallas(
+    pos: jax.Array,      # (B,) int32 per-slot write positions
+    new: jax.Array,      # (B, H, hd) float — the new token's K (or V)
+    packed: jax.Array,   # (B, H, S, hd/lanes) int8
+    scale: jax.Array,    # (B, H, S/block, 1) f32
+    *,
+    bits: int,
+    hd: int,
+    block: int,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Requantized ``(B, H, block, hd/lanes)`` block + ``(B, H, 1, 1)`` scale.
+
+    The scalar-prefetched ``pos`` selects which sequence block each program
+    DMAs — the only cache bytes the append ever touches.  The caller places
+    the block back (ops.place_block, shared with the jnp reference path).
+    """
+    b, h = new.shape[:2]
+    hdp = packed.shape[-1]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, h, hd), lambda i, pos_ref: (i, 0, 0)),
+            pl.BlockSpec((1, h, block, hdp),
+                         lambda i, pos_ref: (i, 0, pos_ref[i] // block, 0)),
+            pl.BlockSpec((1, h, 1, 1),
+                         lambda i, pos_ref: (i, 0, pos_ref[i] // block, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, h, block, hdp), lambda i, pos_ref: (i, 0, 0, 0)),
+            pl.BlockSpec((1, h, 1, 1), lambda i, pos_ref: (i, 0, 0, 0)),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_append_kernel, bits=bits, hd=hd, block=block),
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((b, h, block, hdp), jnp.int8),
+                   jax.ShapeDtypeStruct((b, h, 1, 1), jnp.float32)],
+        interpret=interpret,
+    )(jnp.asarray(pos, jnp.int32), new, packed, scale)

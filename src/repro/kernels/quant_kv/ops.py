@@ -1,0 +1,107 @@
+"""Public dispatch for the quantized-KV decode ops (mirrors quant_gemv):
+
+  "xla"        dequantize -> masked softmax attention / jnp block requant
+               (reference path; SPMD-analyzable, CPU-friendly)
+  "pallas"     the fused TPU kernels (kernel.py)
+  "interpret"  the Pallas kernel bodies interpreted on CPU (tests)
+  "auto"       pallas on TPU backends, xla elsewhere
+
+Both ops take/return the ``kvcache.cache.QuantizedKVLayer`` container, so
+``models/layers.attention_decode_quant`` is the only call site that needs
+to know the dispatch surface exists.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.kvcache.cache import QuantizedKVLayer
+
+from .kernel import quant_kv_append_pallas, quant_kv_attention_pallas
+from .ref import quant_kv_append_ref, quant_kv_attention_ref
+
+
+def _backend() -> str:
+    return jax.default_backend()
+
+
+def _resolve(impl: str) -> str:
+    if impl == "auto":
+        return "pallas" if _backend() == "tpu" else "xla"
+    return impl
+
+
+def quant_kv_attention(
+    q: jax.Array,                # (B, 1, hq, hd) or (B, hq, hd)
+    layer: QuantizedKVLayer,
+    kv_valid: jax.Array,         # (B, S) bool
+    *,
+    impl: str = "auto",
+    out_dtype=None,
+) -> jax.Array:
+    """One decode token per slot attends over the packed cache."""
+    impl = _resolve(impl)
+    lead4 = q.ndim == 4
+    q3 = q[:, 0] if lead4 else q                      # (B, hq, hd)
+    if impl == "xla":
+        o = quant_kv_attention_ref(q3, layer, kv_valid, out_dtype=out_dtype)
+    elif impl in ("pallas", "interpret"):
+        b, s, n_kv, hd = layer.shape
+        g = q3.shape[1] // n_kv
+        qg = q3.reshape(b, n_kv, g, hd)
+        mask = jnp.where(kv_valid, 0.0, -1e30).astype(jnp.float32)
+        o = quant_kv_attention_pallas(
+            qg, layer.k_packed, layer.k_scale, layer.v_packed, layer.v_scale,
+            mask, k_bits=layer.k_bits, v_bits=layer.v_bits, hd=hd,
+            block=layer.block, interpret=impl == "interpret")
+        o = o.reshape(b, n_kv * g, hd).astype(out_dtype or q.dtype)
+    else:
+        raise ValueError(f"unknown impl {impl!r}")
+    return o[:, None] if lead4 else o
+
+
+def place_block(packed: jax.Array, scale: jax.Array, blk: jax.Array,
+                sc: jax.Array, pos: jax.Array, block: int):
+    """Scatter a requantized ``(B, H, block, ·)`` block + scale back at ``pos``."""
+
+    def one(pk, s_, b_, sn, p):
+        bidx = p // block
+        pk2 = jax.lax.dynamic_update_slice_in_dim(pk, b_, bidx * block, axis=1)
+        s2 = jax.lax.dynamic_update_slice_in_dim(s_, sn, bidx, axis=1)
+        return pk2, s2
+
+    return jax.vmap(one)(packed, scale, blk, sc, jnp.asarray(pos, jnp.int32))
+
+
+def quant_kv_append(
+    layer: QuantizedKVLayer,
+    pos: jax.Array,              # (B,) or scalar int32
+    k_new: jax.Array,            # (B, 1, H, hd) float
+    v_new: jax.Array,
+    *,
+    impl: str = "auto",
+) -> QuantizedKVLayer:
+    """Write one decode token's K/V; requantizes only the touched block."""
+    impl = _resolve(impl)
+    if impl == "xla":
+        return quant_kv_append_ref(layer, pos, k_new, v_new)
+    if impl not in ("pallas", "interpret"):
+        raise ValueError(f"unknown impl {impl!r}")
+    interp = impl == "interpret"
+    b = k_new.shape[0]
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1), (b,))
+    kh = jnp.swapaxes(k_new, 1, 2)[:, :, 0]           # (B, H, hd)
+    vh = jnp.swapaxes(v_new, 1, 2)[:, :, 0]
+    hd = layer.head_dim
+    kb, ks = quant_kv_append_pallas(pos, kh, layer.k_packed, layer.k_scale,
+                                    bits=layer.k_bits, hd=hd,
+                                    block=layer.block, interpret=interp)
+    vb, vs = quant_kv_append_pallas(pos, vh, layer.v_packed, layer.v_scale,
+                                    bits=layer.v_bits, hd=hd,
+                                    block=layer.block, interpret=interp)
+    kp, ksc = place_block(layer.k_packed, layer.k_scale, kb, ks, pos, layer.block)
+    vp, vsc = place_block(layer.v_packed, layer.v_scale, vb, vs, pos, layer.block)
+    return dataclasses.replace(layer, k_packed=kp, k_scale=ksc,
+                               v_packed=vp, v_scale=vsc)

@@ -1,0 +1,58 @@
+"""Pure-jnp oracle for the quantized-KV decode attention.
+
+Unpacks the cache's int lanes (``kvcache/cache.py`` layout) and runs the
+masked softmax attention a single decode token needs.  This is both the
+CPU/SPMD-analyzable serving fallback (``impl="xla"``) and the parity
+oracle the Pallas kernel is tested against.
+
+The fallback stays close to the roofline the fused kernel hits: it keeps
+the head-major ``(B, H, S, ·)`` storage layout end to end (no transposed
+float copy of the cache) and folds the per-block scales into the small
+``(·, S)``-shaped scores/probabilities instead of materializing dequantized
+``(S, hd)`` K/V — the only full-size work on the cache is the integer
+unpack.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import packing
+from repro.kvcache.cache import QuantizedKVLayer, append_token
+
+
+def _scale_per_pos(scale: jax.Array, block: int) -> jax.Array:
+    """(B, H, S/block, 1) block scales -> (B, H, 1, S) per-position factors."""
+    return jnp.repeat(scale[..., 0], block, axis=-1)[:, :, None, :]
+
+
+def quant_kv_attention_ref(
+    q: jax.Array,                 # (B, hq, hd) float — one decode token/slot
+    layer: QuantizedKVLayer,
+    kv_valid: jax.Array,          # (B, S) bool — positions to attend over
+    *,
+    out_dtype=None,
+) -> jax.Array:
+    """softmax(q @ dequant(K).T / sqrt(hd), masked) @ dequant(V) -> (B, hq, hd)."""
+    b, s, n_kv, hd = layer.shape
+    hq = q.shape[1]
+    g = hq // n_kv
+    qg = q.astype(jnp.float32).reshape(b, n_kv, g, hd)
+    klev = packing.unpack(layer.k_packed, layer.k_bits, hd)   # (B, H, S, hd)
+    scores = jnp.einsum("bkgh,bkth->bkgt", qg, klev.astype(jnp.float32))
+    scores = scores * (_scale_per_pos(layer.k_scale, layer.block)
+                       * (1.0 / math.sqrt(hd)))
+    scores = jnp.where(kv_valid[:, None, None, :], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    p = p * _scale_per_pos(layer.v_scale, layer.block)        # fold V scales
+    vlev = packing.unpack(layer.v_packed, layer.v_bits, hd)
+    o = jnp.einsum("bkgt,bkth->bkgh", p, vlev.astype(jnp.float32))
+    return o.reshape(b, hq, hd).astype(out_dtype or q.dtype)
+
+
+def quant_kv_append_ref(layer: QuantizedKVLayer, pos: jax.Array,
+                        k_new: jax.Array, v_new: jax.Array) -> QuantizedKVLayer:
+    """One-token append: requantize exactly the block containing ``pos``."""
+    return append_token(layer, pos, k_new, v_new)

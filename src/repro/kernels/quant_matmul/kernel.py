@@ -28,7 +28,13 @@ _CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerPar
 
 
 def _unpack_block(packed: jax.Array, bits: int, bk: int) -> jax.Array:
-    """int8 (bn, bk/lanes) -> int32 levels (bn, bk), sign-extended."""
+    """int8 (..., bk/lanes) -> int32 levels (..., bk), sign-extended.
+
+    The Pallas-safe twin of ``core/packing.unpack`` (same lane layout, no
+    trailing-slice/pad handling) shared by the quant_matmul / quant_gemv /
+    quant_kv kernel bodies; the cross-impl parity tests pin it bit-exact
+    against the packing module.
+    """
     lanes = LANES[bits]
     if lanes == 1:
         return packed.astype(jnp.int32)
@@ -40,7 +46,7 @@ def _unpack_block(packed: jax.Array, bits: int, bk: int) -> jax.Array:
         v = (u >> (bits * lane)) & mask
         parts.append(jnp.where(v >= sign, v - (1 << bits), v))
     # lane-interleaved along K: value k sits at (byte k//lanes, lane k%lanes)
-    return jnp.stack(parts, axis=-1).reshape(packed.shape[0], bk)
+    return jnp.stack(parts, axis=-1).reshape(*packed.shape[:-1], bk)
 
 
 def _kernel(x_ref, packed_ref, scale_ref, out_ref, *, bits: int, bk: int):

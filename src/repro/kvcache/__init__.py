@@ -1,0 +1,24 @@
+# Heterogeneous quantized decode-state subsystem (DESIGN.md §11): packed
+# per-layer K/V caches with block-wise scales, sigma-driven state bitwidth
+# allocation, and the search/artifact/serve plumbing around them.
+from .cache import (  # noqa: F401
+    DEFAULT_BLOCK,
+    QuantizedKVLayer,
+    append_token,
+    init_kv_layer,
+    insert_rows,
+    insert_state_rows,
+    quantize_kv_rows,
+)
+from .policy import (  # noqa: F401
+    kv_entry_names,
+    packed_state_bits,
+    resolve_state_bits,
+    state_bits_by_name,
+    state_layer_infos,
+    state_surface_hash,
+    verify_state_bits,
+)
+
+# KVQuantEnv (kvcache/env.py) is intentionally NOT imported here: it pulls
+# in the training stack, which serve/model modules must stay free of.

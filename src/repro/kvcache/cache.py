@@ -1,0 +1,268 @@
+"""Packed quantized KV-cache container for the decode state (DESIGN.md §11).
+
+At long contexts and many slots the decode state, not the weights, dominates
+edge memory: an fp32 cache spends ``4 * B * S * H * hd`` bytes per layer per
+side.  ``QuantizedKVLayer`` stores the same state as SigmaQuant-packed int
+lanes (``core/packing``) plus per-block scales:
+
+  * ``*_packed``  int8 ``(B, H, S, hd/lanes)`` — head-major, packed along
+    ``hd`` (the attention contraction axis), so a row unpacks into the
+    contiguous head_dim the QK/PV dots consume — the same lane layout the
+    weight kernels use.
+  * ``*_scale``   f32 ``(B, H, S/block, 1)`` — one symmetric scale per
+    (slot, head, sequence-block) group.  Blocking along the *sequence* axis
+    means a decode append touches exactly one block: the current block is
+    dequantized, the new token inserted, and the block requantized under a
+    fresh scale — every other block's bytes and scales are untouched.
+
+Invariant: packed levels at positions >= the slot's write position are zero
+(appends mask them, prefill insertion zero-fills beyond the valid length),
+so a freshly entered block never inherits a stale occupant's amax and the
+dequantized cache is exactly zero wherever ``kv_valid`` masks anyway.
+
+K and V carry independent bitwidths (``k_bits`` / ``v_bits``): V has no
+RoPE structure and is routinely more robust, which is exactly the kind of
+asymmetry the sigma/KL statistics surface and the ``StateBitPolicy``
+exploits (kvcache/policy.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import packing, quantizer
+
+#: sequence-axis scale-block length (one append requantizes one block)
+DEFAULT_BLOCK = 16
+
+
+@dataclasses.dataclass
+class QuantizedKVLayer:
+    """One attention layer's packed decode state (pytree; bits/shape static)."""
+
+    k_packed: jax.Array   # int8 (B, H, S, hd/lanes_k)
+    k_scale: jax.Array    # f32  (B, H, S/block, 1)
+    v_packed: jax.Array   # int8 (B, H, S, hd/lanes_v)
+    v_scale: jax.Array    # f32  (B, H, S/block, 1)
+    k_bits: int           # static
+    v_bits: int           # static
+    block: int            # static
+    shape: tuple[int, ...]  # static logical (B, S, H, hd)
+
+    @property
+    def seq(self) -> int:
+        return self.shape[1]
+
+    @property
+    def head_dim(self) -> int:
+        return self.shape[3]
+
+    def container_bytes(self) -> int:
+        """Packed + scale bytes this layer's state occupies in HBM."""
+        b, s, h, hd = self.shape
+        packed = sum(packing.container_bytes((b, h, s, hd), bits)
+                     for bits in (self.k_bits, self.v_bits))
+        return packed + 4 * (self.k_scale.size + self.v_scale.size)
+
+    def dequantize(self, dtype=jnp.float32) -> tuple[jax.Array, jax.Array]:
+        """Back to float ``(k, v)`` each ``(B, S, H, hd)`` (reference path)."""
+        k = _dequant_side(self.k_packed, self.k_scale, self.k_bits,
+                          self.head_dim, self.block)
+        v = _dequant_side(self.v_packed, self.v_scale, self.v_bits,
+                          self.head_dim, self.block)
+        swap = lambda x: jnp.swapaxes(x, 1, 2).astype(dtype)  # (B,H,S,hd)->(B,S,H,hd)
+        return swap(k), swap(v)
+
+
+jax.tree_util.register_dataclass(
+    QuantizedKVLayer,
+    data_fields=["k_packed", "k_scale", "v_packed", "v_scale"],
+    meta_fields=["k_bits", "v_bits", "block", "shape"],
+)
+
+
+def resolve_block(seq: int, block: int = DEFAULT_BLOCK) -> int:
+    """Largest divisor of ``seq`` that is <= the requested block length."""
+    for d in range(min(block, seq), 0, -1):
+        if seq % d == 0:
+            return d
+    return 1
+
+
+def init_kv_layer(batch: int, seq: int, n_kv: int, hd: int, *, k_bits: int,
+                  v_bits: int, block: int = DEFAULT_BLOCK) -> QuantizedKVLayer:
+    """All-zero packed cache for ``batch`` slots of ``seq`` positions."""
+    packing.check_bits(k_bits)
+    packing.check_bits(v_bits)
+    block = resolve_block(seq, block)
+    nb = seq // block
+    mk = lambda bits: jnp.zeros((batch, n_kv, seq, -(-hd // packing.LANES[bits])),
+                                jnp.int8)
+    # distinct scale buffers: K and V may be donated side by side in one step
+    sc = lambda: jnp.full((batch, n_kv, nb, 1), 1e-12, jnp.float32)
+    return QuantizedKVLayer(k_packed=mk(k_bits), k_scale=sc(), v_packed=mk(v_bits),
+                            v_scale=sc(), k_bits=int(k_bits), v_bits=int(v_bits),
+                            block=block, shape=(batch, seq, n_kv, hd))
+
+
+# ---------------------------------------------------------------------------
+# block quantization primitives (pure jnp: jit/vmap/donation friendly)
+# ---------------------------------------------------------------------------
+
+
+def _block_quantize(x: jax.Array, bits: int, block: int):
+    """fp ``(..., S, hd)`` -> packed ``(..., S, hd/lanes)`` + scale ``(..., S/block, 1)``.
+
+    Symmetric per-(block x hd) group: scale = amax / qmax (core/quantizer
+    scheme), levels clipped to the signed b-bit grid and lane-packed along hd.
+    """
+    *lead, s, hd = x.shape
+    nb = s // block
+    xb = x.astype(jnp.float32).reshape(*lead, nb, block, hd)
+    amax = jnp.max(jnp.abs(xb), axis=(-1, -2), keepdims=True)  # (..., nb, 1, 1)
+    scale = jnp.maximum(amax, 1e-12) / quantizer.qmax(bits)
+    q = quantizer.qmax(bits)
+    lev = jnp.clip(jnp.round(xb / scale), -q, q).astype(jnp.int32)
+    packed = packing.pack(lev.reshape(*lead, s, hd), bits)
+    return packed, scale[..., 0, :]  # (..., nb, 1)
+
+
+def _dequant_side(packed: jax.Array, scale: jax.Array, bits: int, hd: int,
+                  block: int) -> jax.Array:
+    """Inverse of :func:`_block_quantize` on the (B, H, S, ·) layout."""
+    lev = packing.unpack(packed, bits, hd)                     # (B, H, S, hd)
+    *lead, s, _ = lev.shape
+    nb = s // block
+    fp = lev.astype(jnp.float32).reshape(*lead, nb, block, hd) * scale[..., None]
+    return fp.reshape(*lead, s, hd)
+
+
+def quantize_kv_rows(k: jax.Array, v: jax.Array, layer: QuantizedKVLayer,
+                     valid_len: jax.Array | None = None):
+    """Quantize fp prefill rows ``(N, P, H, hd)`` into this layer's format.
+
+    ``valid_len`` (N,) zeroes positions >= each row's true prompt length
+    before scales are computed (the container invariant: invalid positions
+    hold zero levels and never inflate a block's amax).  ``P`` must be a
+    multiple of ``layer.block`` (callers round the prefill pad up).
+    """
+    kh = jnp.swapaxes(k, 1, 2).astype(jnp.float32)  # (N, H, P, hd)
+    vh = jnp.swapaxes(v, 1, 2).astype(jnp.float32)
+    if valid_len is not None:
+        keep = (jnp.arange(k.shape[1]) < valid_len[:, None])[:, None, :, None]
+        kh = jnp.where(keep, kh, 0.0)
+        vh = jnp.where(keep, vh, 0.0)
+    kp, ks = _block_quantize(kh, layer.k_bits, layer.block)
+    vp, vs = _block_quantize(vh, layer.v_bits, layer.block)
+    return kp, ks, vp, vs
+
+
+def insert_rows(layer: QuantizedKVLayer, ids: jax.Array, k_new: jax.Array,
+                v_new: jax.Array, valid_len: jax.Array | None = None) -> QuantizedKVLayer:
+    """Scatter quantized prefill rows into slots ``ids`` (engine admission).
+
+    ``k_new``/``v_new``: fp ``(N, P, H, hd)`` from the batched prefill; ``P``
+    is rounded up to a block multiple here (extra positions zero-filled).
+    """
+    n, p, h, hd = k_new.shape
+    pad = (-p) % layer.block
+    if pad:
+        zeros = ((0, 0), (0, pad), (0, 0), (0, 0))
+        k_new = jnp.pad(k_new.astype(jnp.float32), zeros)
+        v_new = jnp.pad(v_new.astype(jnp.float32), zeros)
+        p += pad
+    if p > layer.seq:
+        raise ValueError(f"prefill rows ({p}) exceed cache seq ({layer.seq})")
+    kp, ks, vp, vs = quantize_kv_rows(k_new, v_new, layer, valid_len)
+
+    def scatter(buf, new):
+        idx = (ids,) + tuple(slice(0, d) for d in new.shape[1:])
+        return buf.at[idx].set(new.astype(buf.dtype))
+
+    return dataclasses.replace(
+        layer,
+        k_packed=scatter(layer.k_packed, kp), k_scale=scatter(layer.k_scale, ks),
+        v_packed=scatter(layer.v_packed, vp), v_scale=scatter(layer.v_scale, vs))
+
+
+def insert_state_rows(state, ids: jax.Array, st_new, valid_len: jax.Array):
+    """Tree-insert rows of a batched prefill state into a decode state.
+
+    The ONE walker both the serve engine's admission and the calibration
+    env share: ``QuantizedKVLayer`` nodes quantize the fp prefill rows
+    block-wise on the way in (``valid_len`` zeroes positions beyond each
+    row's true prompt length), fp leaves scatter directly — one scatter per
+    leaf, row ``i`` of the prefill batch landing in slot ``ids[i]``.
+    """
+
+    def walk(st, new):
+        if isinstance(st, QuantizedKVLayer):
+            return insert_rows(st, ids, new["k"], new["v"], valid_len=valid_len)
+        if isinstance(st, dict):
+            return {k: walk(st[k], new[k]) for k in st}
+        if isinstance(st, (list, tuple)):
+            return [walk(s, n) for s, n in zip(st, new)]
+        idx = (ids,) + tuple(slice(0, d) for d in jnp.shape(new)[1:])
+        return st.at[idx].set(new.astype(st.dtype))
+
+    return walk(state, st_new)
+
+
+def _append_side(packed: jax.Array, scale: jax.Array, new: jax.Array,
+                 pos: jax.Array, bits: int, hd: int, block: int):
+    """Requantize only the block containing ``pos`` with the new row inserted.
+
+    ``new``: fp (B, H, hd); ``pos``: (B,) int32 per-slot write positions.
+    Positions > pos inside the block are zeroed (container invariant), so a
+    stale previous occupant can neither leak into attention nor inflate the
+    fresh scale.
+
+    Written as one gather (take_along_axis on the block axis) + dense math +
+    one full-array select per buffer: per-slot dynamic-slice/scatter chains
+    lower to gathers over tiny operands that dominate the decode step on the
+    XLA fallback path, while the select fuses.
+    """
+    q = quantizer.qmax(bits)
+    b, h, s, hdp = packed.shape
+    nb = s // block
+    bidx = pos // block                                        # (B,)
+    off = pos % block
+    view = packed.reshape(b, h, nb, block, hdp)
+    blk = jnp.take_along_axis(view, bidx[:, None, None, None, None], axis=2)
+    lev = packing.unpack(blk, bits, hd)                        # (B, H, 1, block, hd)
+    sc_b = jnp.take_along_axis(scale, bidx[:, None, None, None], axis=2)
+    fp = lev.astype(jnp.float32) * sc_b[..., None]             # (B, H, 1, 1, 1) bc
+    idx = jnp.arange(block)[None, None, None, :, None]
+    offb = off[:, None, None, None, None]
+    fp = jnp.where(idx < offb, fp, 0.0)
+    fp = jnp.where(idx == offb, new.astype(jnp.float32)[:, :, None, None, :], fp)
+    amax = jnp.max(jnp.abs(fp), axis=(3, 4), keepdims=True)    # (B, H, 1, 1, 1)
+    sc_new = jnp.maximum(amax, 1e-12) / q
+    blk_new = packing.pack(jnp.clip(jnp.round(fp / sc_new), -q, q).astype(jnp.int32),
+                           bits)                               # (B, H, 1, block, hdp)
+    at_block = (jnp.arange(nb) == bidx[:, None])[:, None, :, None, None]
+    packed2 = jnp.where(at_block, blk_new, view).reshape(b, h, s, hdp)
+    scale2 = jnp.where(at_block[..., 0], sc_new[..., 0], scale)
+    return packed2, scale2
+
+
+def append_token(layer: QuantizedKVLayer, pos: jax.Array, k_new: jax.Array,
+                 v_new: jax.Array) -> QuantizedKVLayer:
+    """Write one decode token's K/V at per-slot ``pos`` (jnp reference path).
+
+    ``k_new``/``v_new``: fp ``(B, 1, H, hd)`` (the _qkv output).  The Pallas
+    variant lives in ``kernels/quant_kv`` behind the same ops dispatch.
+    """
+    kh = jnp.swapaxes(k_new, 1, 2)[:, :, 0]  # (B, H, hd)
+    vh = jnp.swapaxes(v_new, 1, 2)[:, :, 0]
+    # scalar pos (lockstep batch) broadcasts to the per-slot vector form
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1),
+                           (k_new.shape[0],))
+    kp, ks = _append_side(layer.k_packed, layer.k_scale, kh, pos,
+                          layer.k_bits, layer.head_dim, layer.block)
+    vp, vs = _append_side(layer.v_packed, layer.v_scale, vh, pos,
+                          layer.v_bits, layer.head_dim, layer.block)
+    return dataclasses.replace(layer, k_packed=kp, k_scale=ks,
+                               v_packed=vp, v_scale=vs)

@@ -1,0 +1,98 @@
+"""KVQuantEnv — the calibration environment for state-bitwidth search.
+
+Prefills a calibration batch once, captures the fp K/V tensors every state
+entry sees, and scores a candidate state policy (a ``BitPolicy`` over the
+``kind="state"`` registry from kvcache/policy.py) by the logit divergence
+of ONE quantized-state decode step against the fp-state step — a real
+end-to-end fidelity measure that stays cheap enough for the controller's
+inner loop.  Post-training path: ``calibrate_and_qat`` is a no-op.
+
+Kept out of ``kvcache/__init__`` on purpose: it pulls in the training stack
+(``quant.env``), which the serve/model modules that merely dispatch on
+``QuantizedKVLayer`` must not import.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.policy import BitPolicy
+from repro.quant.env import QuantEnvBase
+
+from .cache import DEFAULT_BLOCK, insert_state_rows
+from .policy import KV_FAMILIES, extract_kv_entries, resolve_state_bits, state_layer_infos
+
+
+class KVQuantEnv(QuantEnvBase):
+    """QuantEnv over the decode state of one served model.
+
+    quality(policy) = -(mean |logits_quant - logits_fp| / mean |logits_fp|)
+    of one decode step on calibration prompts: 0 is perfect state fidelity,
+    and the budget's ``acc_t`` is minus the tolerated relative logit error.
+    """
+
+    def __init__(self, serve_params: dict, cfg, calib_tokens, *, slots: int,
+                 max_seq: int, block: int = DEFAULT_BLOCK, cost_model=None,
+                 qimpl: str = "auto"):
+        from repro.cost import ShiftAddCostModel
+        from repro.models import registry
+
+        if cfg.family not in KV_FAMILIES:
+            raise ValueError(f"family {cfg.family!r} has no quantizable KV state")
+        self.params = serve_params
+        self.cfg = cfg
+        self.block = block
+        self.qimpl = qimpl
+        self.cost_model = cost_model or ShiftAddCostModel()
+        self._api = registry.get_api(cfg)
+        self._specs = state_layer_infos(cfg, slots, max_seq)
+
+        # one calibration prefill: capture the fp K/V every entry sees
+        toks = jnp.asarray(calib_tokens, jnp.int32)
+        bc, sc = toks.shape
+        self._calib_batch, self._calib_len = bc, sc
+        self._max_seq = max_seq
+        _, caches = self._api.prefill(serve_params, cfg, tokens=toks, qimpl=qimpl)
+        self._caches = caches
+        self._capture = {}
+        for nm, node in extract_kv_entries(caches):
+            self._capture[f"{nm}.state.k"] = node["k"]
+            self._capture[f"{nm}.state.v"] = node["v"]
+
+        # fp-state reference step: replay the last calibration token at the
+        # next position (exactly what the engine's decode step does)
+        self._next_tok = toks[:, -1:]
+        self._pos = jnp.full((bc,), sc, jnp.int32)
+        self._fp_logits = self._decode_logits(state_policy=None)
+        self._fp_scale = float(jnp.mean(jnp.abs(self._fp_logits))) or 1.0
+
+    # -- state construction --------------------------------------------------
+    def _build_state(self, state_policy: BitPolicy | None):
+        bc, seq = self._calib_batch, self._max_seq
+        bits = resolve_state_bits(state_policy, self.cfg)
+        state = self._api.init_decode_state(self.cfg, bc, seq, jnp.float32,
+                                            state_bits=bits, block=self.block)
+        lens = jnp.full((bc,), self._calib_len, jnp.int32)
+        return insert_state_rows(state, jnp.arange(bc), self._caches, lens)
+
+    def _decode_logits(self, state_policy: BitPolicy | None):
+        state = self._build_state(state_policy)
+        logits, _ = self._api.decode_step(self.params, self.cfg, state,
+                                          self._next_tok, self._pos,
+                                          qimpl=self.qimpl)
+        return logits[:, -1]
+
+    # -- QuantEnv protocol ---------------------------------------------------
+    def _weight(self, name: str):
+        return self._capture[name]
+
+    def evaluate(self, policy: BitPolicy) -> float:
+        lq = self._decode_logits(policy)
+        return -float(jnp.mean(jnp.abs(lq - self._fp_logits))) / self._fp_scale
+
+    def calibrate_and_qat(self, policy: BitPolicy, epochs: int) -> None:
+        pass  # post-training: the packed state needs no retraining
+
+    def fp_state_bytes(self) -> int:
+        """fp32 cache bytes of the same geometry (the baseline the budget cuts)."""
+        return int(sum(4 * np.prod(l.shape) for l in self._specs))

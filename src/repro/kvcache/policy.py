@@ -1,0 +1,180 @@
+"""Sigma-driven state bitwidth allocation (DESIGN.md §11).
+
+The decode state gets the same treatment the weights got: enumerate its
+quantizable surface as ``LayerInfo`` entries (``kind="state"``), collect
+sigma/KL robustness statistics over *calibration decodes*, and let the
+existing two-phase controller (core/controller.py) allocate heterogeneous
+per-layer K/V bitwidths under a ``state_bytes`` budget.
+
+Naming convention (mirrors quant/apply's weight names):
+
+  * decoder families (dense/moe/vlm):  ``layer{i:03d}.state.k`` / ``.v``
+  * hybrid shared-attention caches:    ``shared_attn.app{j:03d}.state.k`` / ``.v``
+
+K and V are independent entries — V (no RoPE structure) is routinely more
+robust than K, and the statistics surface exactly that asymmetry.
+
+The calibration environment the controller drives (``KVQuantEnv``) lives in
+``kvcache/env.py`` — imported on demand so this module (and the models that
+dispatch on ``QuantizedKVLayer``) stays free of the training-stack imports.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+from repro.core.policy import BitPolicy, LayerInfo, PolicyArtifact, layer_registry_hash
+
+from .cache import QuantizedKVLayer
+
+#: families whose decode state has quantizable KV entries
+KV_FAMILIES = ("dense", "moe", "vlm", "hybrid")
+
+
+def kv_entry_names(cfg) -> list[str]:
+    """Ordered names of the KV entries the family's decode state carries."""
+    if cfg.family in ("dense", "moe", "vlm"):
+        return [f"layer{i:03d}" for i in range(cfg.n_layers)]
+    if cfg.family == "hybrid":
+        from repro.models.hybrid import n_attn_applications
+        return [f"shared_attn.app{j:03d}" for j in range(n_attn_applications(cfg))]
+    return []
+
+
+def state_layer_infos(cfg, batch: int, seq: int) -> tuple[LayerInfo, ...]:
+    """The quantizable decode-state surface for a serving geometry.
+
+    Shape is the full multi-slot cache ``(batch, seq, n_kv, hd)`` so that
+    ``BitPolicy.state_bytes()`` prices exactly what the engine allocates;
+    macs are the per-decode-step attention MACs that read the entry
+    (QK for .k, PV for .v), which is what the roofline FLOPs term wants.
+    """
+    hd = cfg.resolved_head_dim
+    shape = (batch, seq, cfg.n_kv_heads, hd)
+    macs = batch * cfg.n_heads * seq * hd
+    infos = [LayerInfo(f"{nm}.state.{side}", shape, macs=macs, kind="state")
+             for nm in kv_entry_names(cfg) for side in ("k", "v")]
+    return tuple(sorted(infos, key=lambda l: l.name))
+
+
+def state_surface_hash(layers) -> str:
+    """Geometry-independent identity of a state registry.
+
+    Strips batch/seq (deployment choices — an engine may legitimately serve
+    with different slots/max_seq than the search priced) from each entry's
+    shape, keeping ``(name, (n_kv, hd), kind)``: two deployments agree iff
+    they expose the same KV entries with the same head geometry.  This is
+    the check the engine enforces; ``PolicyArtifact.verify_state_layers``
+    remains the strict geometry-inclusive variant.
+    """
+    canon = tuple(LayerInfo(l.name, tuple(l.shape[-2:]), 0, l.kind)
+                  for l in layers)
+    return layer_registry_hash(canon)
+
+
+def state_bits_by_name(policy: BitPolicy) -> dict[str, tuple[int, int]]:
+    """Policy -> entry-name -> (k_bits, v_bits)."""
+    out: dict[str, tuple[int, int]] = {}
+    for l in policy.state_layers():
+        nm, _, side = l.name.rpartition(".state.")
+        kb, vb = out.get(nm, (0, 0))
+        out[nm] = (policy.bits[l.name], vb) if side == "k" else (kb, policy.bits[l.name])
+    return out
+
+
+def resolve_state_bits(spec, cfg) -> list[tuple[int, int]] | None:
+    """Engine-facing: spec -> per-entry (k_bits, v_bits) list in entry order.
+
+    ``spec`` may be None (fp state), an int (uniform), a BitPolicy over
+    state entries, or a PolicyArtifact (its state_policy is used).
+    """
+    if spec is None:
+        return None
+    names = kv_entry_names(cfg)
+    if not names:
+        raise ValueError(f"family {cfg.family!r} has no quantizable KV state")
+    if isinstance(spec, PolicyArtifact):
+        spec = spec.state_policy
+        if spec is None:
+            return None
+    if isinstance(spec, int):
+        return [(spec, spec)] * len(names)
+    if isinstance(spec, BitPolicy):
+        by_name = state_bits_by_name(spec)
+        missing = [nm for nm in names if nm not in by_name]
+        if missing:
+            raise ValueError(f"state policy missing KV entries: {missing[:4]}")
+        return [by_name[nm] for nm in names]
+    raise TypeError(f"cannot resolve state bits from {type(spec).__name__}")
+
+
+# ---------------------------------------------------------------------------
+# deployment-side verification (the state analogue of quant/apply's
+# packed_policy_bits / verify_packed_bits)
+# ---------------------------------------------------------------------------
+
+
+def extract_kv_entries(state) -> list[tuple[str, Any]]:
+    """Ordered (entry-name, node) pairs of a decode-state pytree's KV slots.
+
+    Works on both fp states (nodes are ``{"k", "v"}`` dicts) and quantized
+    states (nodes are ``QuantizedKVLayer``); SSM entries are skipped.
+    """
+    if isinstance(state, dict) and "attn" in state:  # hybrid
+        return [(f"shared_attn.app{j:03d}", e) for j, e in enumerate(state["attn"])]
+    if isinstance(state, (list, tuple)):
+        out = []
+        for i, e in enumerate(state):
+            if isinstance(e, QuantizedKVLayer) or (
+                    isinstance(e, dict) and set(e) == {"k", "v"}):
+                out.append((f"layer{i:03d}", e))
+        return out
+    return []
+
+
+def packed_state_bits(state) -> dict[str, int]:
+    """State-entry name -> bits actually packed into a decode-state pytree."""
+    out: dict[str, int] = {}
+    for nm, node in extract_kv_entries(state):
+        if isinstance(node, QuantizedKVLayer):
+            out[f"{nm}.state.k"] = node.k_bits
+            out[f"{nm}.state.v"] = node.v_bits
+    return out
+
+
+def verify_state_bits(state, artifact: PolicyArtifact, *,
+                      surface=None) -> None:
+    """Assert a decode state carries exactly the artifact's state bitwidths.
+
+    Bidirectional like the weight check: a cache packed at the wrong width
+    fails, and so does a searched state entry that was left fp.  Pass the
+    deployment's ``state_layer_infos`` as ``surface`` to additionally
+    reject an artifact searched on a different state surface (same bits,
+    different head geometry) via the geometry-independent hash.
+    """
+    packed = packed_state_bits(state)
+    if artifact.state_policy is not None and surface is not None:
+        want = state_surface_hash(artifact.state_policy.layers)
+        got = state_surface_hash(surface)
+        if want != got:
+            raise ValueError(
+                f"policy artifact state-surface mismatch: artifact was "
+                f"searched on {want}, this deployment exposes {got} "
+                f"(different KV entries or head geometry)")
+    if artifact.state_policy is None:
+        if packed:
+            raise ValueError(
+                f"decode state is quantized ({len(packed)} entries) but the "
+                f"policy artifact carries no state policy")
+        return
+    want = artifact.state_policy.bits
+    wrong = {n: (b, want.get(n)) for n, b in packed.items() if want.get(n) != b}
+    if wrong:
+        sample = dict(list(wrong.items())[:4])
+        raise ValueError(
+            f"decode-state bitwidths disagree with the policy artifact on "
+            f"{len(wrong)} entries (packed, artifact): {sample}")
+    missing = sorted(set(want) - set(packed))
+    if missing:
+        raise ValueError(
+            f"{len(missing)} searched state entries are not quantized in the "
+            f"decode state (fp cache?): {missing[:4]}")

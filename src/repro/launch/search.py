@@ -9,9 +9,17 @@ entry point consumes (launch/serve.py --policy).
         --backend roofline --limit latency_s=3e-6 --limit energy=2e-5 \
         --ckpt /tmp/ckpt --out policy.json
 
+    # joint weight + decode-state budget: the same two-phase controller
+    # additionally allocates per-layer K/V cache bitwidths from sigma/KL
+    # statistics over calibration decodes (DESIGN.md §11)
+    PYTHONPATH=src python -m repro.launch.search --arch gemma-2b --reduced \
+        --limit size_mib=0.5 --limit state_bytes=40000 --out policy.json
+
 Any subset of cost metrics may be constrained simultaneously (repeat
 ``--limit metric=value``); metrics are priced by the chosen CostModel
-backend, in that backend's units (DESIGN.md §10).
+backend, in that backend's units (DESIGN.md §10).  A ``state_bytes`` limit
+runs the state-bitwidth phase after the weight phase and versions the KV
+policy in the same artifact.
 """
 from __future__ import annotations
 
@@ -19,6 +27,7 @@ import argparse
 import time
 
 import jax
+import numpy as np
 
 from repro.checkpoint import store as ck
 from repro.configs import ARCH_MODULES, get_config
@@ -37,17 +46,49 @@ def budget_from_limits(acc_t: float, limits: dict[str, float], *,
 
 def search_policy(env: LMQuantEnv, budget: Budget, *,
                   config: ControllerConfig | None = None, log=None,
-                  meta: dict | None = None) -> tuple[PolicyArtifact, SigmaQuantResult]:
-    """Run the two-phase search and package the result as a PolicyArtifact."""
+                  meta: dict | None = None, state_env=None,
+                  state_budget: Budget | None = None,
+                  state_config: ControllerConfig | None = None,
+                  ) -> tuple[PolicyArtifact, SigmaQuantResult]:
+    """Run the two-phase search and package the result as a PolicyArtifact.
+
+    With ``state_env``/``state_budget`` (a ``kvcache.env.KVQuantEnv`` and a
+    ``state_bytes`` budget) a second controller pass allocates the decode-
+    state bitwidths; the KV policy is versioned in the same artifact.
+    """
     t0 = time.perf_counter()
     result = SigmaQuantController(env, budget, config, log=log).run()
     report = dict(env.costs(result.policy))
+    meta = dict(meta or {}, success=result.success, abandoned=result.abandoned,
+                acc=result.acc, mean_bits=result.policy.mean_bits())
+    state_policy = None
+    if state_env is not None:
+        assert state_budget is not None, "state search needs a state_bytes budget"
+        sres = SigmaQuantController(state_env, state_budget,
+                                    state_config or config, log=log).run()
+        state_policy = sres.policy
+        report["state_bytes"] = float(state_env.costs(state_policy)["state_bytes"])
+        meta.update(state_success=sres.success, state_acc=sres.acc,
+                    state_mean_bits=state_policy.mean_bits(),
+                    fp_state_bytes=state_env.fp_state_bytes())
+    meta["search_wall_s"] = round(time.perf_counter() - t0, 3)
     artifact = PolicyArtifact.build(
         result.policy, backend=env.cost_model.name, report=report, budget=budget,
-        meta=dict(meta or {}, success=result.success, abandoned=result.abandoned,
-                  acc=result.acc, mean_bits=result.policy.mean_bits(),
-                  search_wall_s=round(time.perf_counter() - t0, 3)))
+        state_policy=state_policy, meta=meta)
     return artifact, result
+
+
+def state_controller_config(n_entries: int) -> ControllerConfig:
+    """Controller budgets for the post-training state phase.
+
+    6-bit packs into the same container as 8-bit, so the first shrink wave
+    (8 -> 6) cannot reduce ``state_bytes``; patience scales with the entry
+    count so the search survives that plateau and reaches the 4/2-bit moves
+    that do pay.
+    """
+    return ControllerConfig(phase2_max_iters=max(16, 4 * n_entries),
+                            stagnation_patience=max(8, n_entries),
+                            phase1_qat_epochs=0, phase2_qat_epochs=0)
 
 
 def _parse_limits(pairs: list[str]) -> dict[str, float]:
@@ -80,6 +121,16 @@ def main(argv=None) -> int:
     ap.add_argument("--ckpt", default=None,
                     help="also save params + artifact as a checkpoint step here")
     ap.add_argument("--seed", type=int, default=0)
+    # decode-state (KV) phase geometry — used when --limit state_bytes=... is given
+    ap.add_argument("--slots", type=int, default=4,
+                    help="serving slots the state budget prices (engine max_slots)")
+    ap.add_argument("--kv-max-seq", type=int, default=64,
+                    help="cache length the state budget prices (engine max_seq)")
+    ap.add_argument("--kv-calib", type=int, default=4,
+                    help="calibration prompts for the state statistics")
+    ap.add_argument("--kv-calib-len", type=int, default=16)
+    ap.add_argument("--state-tol", type=float, default=0.15,
+                    help="tolerated relative logit error of the quantized state")
     args = ap.parse_args(argv)
     if not args.limit:
         ap.error("pass at least one --limit metric=value")
@@ -91,23 +142,56 @@ def main(argv=None) -> int:
     params = api.init(cfg, jax.random.key(args.seed))
     shape = ShapeSpec("search", "train", args.seq, args.batch)
     cm_kwargs = {"batch": args.decode_batch} if args.backend == "roofline" else {}
-    env = LMQuantEnv(params, cfg, shape,
-                     cost_model=get_cost_model(args.backend, **cm_kwargs))
+    cost_model = get_cost_model(args.backend, **cm_kwargs)
+    env = LMQuantEnv(params, cfg, shape, cost_model=cost_model)
+
+    limits = _parse_limits(args.limit)
+    state_limit = limits.pop("state_bytes", None)
+    if not limits:
+        ap.error("pass at least one weight-side --limit (e.g. size_mib=...) — "
+                 "state_bytes only constrains the decode state")
 
     print(f"pre-training {cfg.name} for {args.pretrain_steps} steps ...")
     env.pretrain(args.pretrain_steps)
     float_loss = env.float_loss()
-    budget = budget_from_limits(-(float_loss + args.loss_slack), _parse_limits(args.limit))
+    budget = budget_from_limits(-(float_loss + args.loss_slack), limits)
     print(f"float val loss {float_loss:.3f}; budget: "
           + ", ".join(f"{it.metric}<={it.limit:g}" for it in budget.items))
+
+    state_env = state_budget = state_cc = None
+    if state_limit is not None:
+        from repro.kvcache.env import KVQuantEnv
+        from repro.quant import apply as qapply
+
+        # the state phase calibrates on the model AS IT WILL BE SERVED: the
+        # weight phase has not run yet, so calibrate on the float weights —
+        # weight and state errors are measured independently (the joint
+        # artifact still deploys both).
+        serve_params = api.unstack(env.params, cfg)
+        rng = np.random.default_rng(args.seed)
+        calib = rng.integers(1, cfg.vocab_size,
+                             (args.kv_calib, args.kv_calib_len))
+        state_env = KVQuantEnv(serve_params, cfg, calib, slots=args.slots,
+                               max_seq=args.kv_max_seq, cost_model=cost_model)
+        state_budget = Budget.of(-args.state_tol, acc_buffer=0.05, buffer=0.08,
+                                 state_bytes=state_limit)
+        state_cc = state_controller_config(len(state_env.layer_infos()))
+        print(f"state budget: state_bytes<={state_limit:g} "
+              f"(fp32 cache {state_env.fp_state_bytes():g} B, "
+              f"{len(state_env.layer_infos())} KV entries)")
 
     artifact, result = search_policy(
         env, budget, config=ControllerConfig(phase2_max_iters=args.phase2_iters,
                                              phase1_qat_epochs=1, phase2_qat_epochs=1),
-        log=print, meta={"arch": cfg.name, "backend": args.backend})
+        log=print, meta={"arch": cfg.name, "backend": args.backend},
+        state_env=state_env, state_budget=state_budget, state_config=state_cc)
     artifact.save(args.out)
     print(f"policy artifact -> {args.out}  (success={result.success} "
           f"mean_bits={result.policy.mean_bits():.2f} backend={args.backend})")
+    if artifact.state_policy is not None:
+        print(f"  state policy: mean_bits={artifact.state_policy.mean_bits():.2f} "
+              f"state_bytes={artifact.report['state_bytes']:g} "
+              f"(success={artifact.meta.get('state_success')})")
     for metric, value in artifact.report.items():
         print(f"  {metric:>16} = {value:g}")
 

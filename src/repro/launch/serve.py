@@ -61,6 +61,10 @@ def main(argv=None) -> int:
         print(f"policy artifact {args.policy}: backend={artifact.backend} "
               f"budget=[{budget}] mean_bits={policy.mean_bits():.2f} "
               f"size={policy.model_size_mib():.2f} MiB")
+        if artifact.state_policy is not None:
+            print(f"  quantized KV state: mean_bits="
+                  f"{artifact.state_policy.mean_bits():.2f} "
+                  f"({len(artifact.state_policy.layers)} entries)")
     elif args.wbits != "float":
         specs = qapply.layer_specs(params, cfg)
         if args.wbits.endswith(".json"):

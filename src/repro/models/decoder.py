@@ -165,8 +165,23 @@ def unstack_layers(params, cfg) -> dict:
     return out
 
 
-def init_cache(cfg, batch: int, seq: int, dtype=jnp.bfloat16) -> list[dict]:
+def init_cache(cfg, batch: int, seq: int, dtype=jnp.bfloat16, *,
+               state_bits=None, block: int | None = None) -> list[dict]:
+    """Decode KV cache: fp ``{"k","v"}`` dicts, or packed ``QuantizedKVLayer``
+    containers when ``state_bits`` (per-layer ``[(k_bits, v_bits), ...]``)
+    is given (DESIGN.md §11)."""
     hd = cfg.resolved_head_dim
+    if state_bits is not None:
+        from repro.kvcache.cache import DEFAULT_BLOCK, init_kv_layer
+
+        if len(state_bits) != cfg.n_layers:
+            raise ValueError(f"state_bits has {len(state_bits)} entries for "
+                             f"{cfg.n_layers} layers")
+        return [
+            init_kv_layer(batch, seq, cfg.n_kv_heads, hd, k_bits=kb, v_bits=vb,
+                          block=block or DEFAULT_BLOCK)
+            for kb, vb in state_bits
+        ]
     return [
         {
             "k": jnp.zeros((batch, seq, cfg.n_kv_heads, hd), dtype),
@@ -182,11 +197,16 @@ def abstract_cache(cfg, batch: int, seq: int, dtype=jnp.bfloat16) -> list[dict]:
     return [{"k": kv, "v": kv} for _ in range(cfg.n_layers)]
 
 
-def prefill(params, cfg, tokens=None, embeds=None, *, qimpl="auto"):
+def prefill(params, cfg, tokens=None, embeds=None, *, qimpl="auto", lengths=None):
     """Full-sequence forward that also returns the KV cache (serve prefill).
 
     Layers run unrolled (params may be per-layer heterogeneous quantized).
+    ``lengths`` (per-row valid prompt lengths) is accepted for API symmetry
+    with the SSM/hybrid prefills and ignored: causal attention already makes
+    valid positions independent of right-padding, and pad-position cache
+    rows are masked at decode by the per-slot ``kv_valid``.
     """
+    del lengths
     if embeds is None:
         x = embed_tokens(params, tokens, cfg)
     else:
@@ -282,7 +302,14 @@ def prefill_sp(params, cfg, tokens, *, mesh, qimpl="auto"):
 
 
 def decode_step(params, cfg, caches, token, pos, *, embeds=None, qimpl="auto"):
-    """One token through unrolled layers with cache update at ``pos``."""
+    """One token through unrolled layers with cache update at ``pos``.
+
+    Each layer's cache is either an fp ``{"k","v"}`` dict or a packed
+    ``QuantizedKVLayer`` (heterogeneous per-layer state bitwidths) — the
+    two forms may mix freely within one model.
+    """
+    from repro.kvcache.cache import QuantizedKVLayer
+
     if embeds is None:
         x = embed_tokens(params, token, cfg)  # (B, 1, d)
     else:
@@ -290,9 +317,14 @@ def decode_step(params, cfg, caches, token, pos, *, embeds=None, qimpl="auto"):
     new_caches = []
     for lp, cache in zip(params["layers"], caches):
         xn = layers.norm(lp["ln1"], x, cfg.norm, cfg.norm_eps)
-        att, (ck, cv) = layers.attention_decode(
-            lp["attn"], xn, cache["k"], cache["v"], pos, cfg, qimpl=qimpl)
-        new_caches.append({"k": ck, "v": cv})
+        if isinstance(cache, QuantizedKVLayer):
+            att, ncache = layers.attention_decode_quant(
+                lp["attn"], xn, cache, pos, cfg, qimpl=qimpl)
+        else:
+            att, (ck, cv) = layers.attention_decode(
+                lp["attn"], xn, cache["k"], cache["v"], pos, cfg, qimpl=qimpl)
+            ncache = {"k": ck, "v": cv}
+        new_caches.append(ncache)
         h = x + att
         hn = layers.norm(lp["ln2"], h, cfg.norm, cfg.norm_eps)
         if cfg.family == "moe":

@@ -106,26 +106,53 @@ def unstack_layers(params, cfg) -> dict:
     return out
 
 
-def init_decode_state(cfg, batch: int, seq: int, dtype=jnp.bfloat16, abstract=False):
+def init_decode_state(cfg, batch: int, seq: int, dtype=jnp.bfloat16, abstract=False,
+                      *, state_bits=None, block: int | None = None):
+    """Mamba states + shared-attention KV caches.  ``state_bits`` (per-
+    application ``[(k_bits, v_bits), ...]``) packs the attention caches as
+    ``QuantizedKVLayer``; the SSM recurrence states stay fp (quantizing
+    recurrence *dynamics* is out of scope, DESIGN.md §4)."""
     hd = cfg.resolved_head_dim
+    n_app = n_attn_applications(cfg)
     mk = (lambda s, dt: jax.ShapeDtypeStruct(s, dt)) if abstract else (lambda s, dt: jnp.zeros(s, dt))
-    kv = lambda: {"k": mk((batch, seq, cfg.n_kv_heads, hd), dtype),
-                  "v": mk((batch, seq, cfg.n_kv_heads, hd), dtype)}
+    if state_bits is not None:
+        if abstract:
+            raise NotImplementedError("abstract quantized decode state")
+        from repro.kvcache.cache import DEFAULT_BLOCK, init_kv_layer
+
+        if len(state_bits) != n_app:
+            raise ValueError(f"state_bits has {len(state_bits)} entries for "
+                             f"{n_app} shared-attention applications")
+        attn = [init_kv_layer(batch, seq, cfg.n_kv_heads, hd, k_bits=kb,
+                              v_bits=vb, block=block or DEFAULT_BLOCK)
+                for kb, vb in state_bits]
+    else:
+        attn = [{"k": mk((batch, seq, cfg.n_kv_heads, hd), dtype),
+                 "v": mk((batch, seq, cfg.n_kv_heads, hd), dtype)}
+                for _ in range(n_app)]
     mamba_state = (mamba2.abstract_state if abstract else mamba2.init_state)
     return {
         "mamba": [mamba_state(cfg, batch) for _ in range(cfg.n_layers)],
-        "attn": [kv() for _ in range(n_attn_applications(cfg))],
+        "attn": attn,
     }
 
 
 def _apply_shared_decode(sp, x, cfg, cache, pos, *, qimpl="auto"):
-    att, (ck, cv) = layers.attention_decode(
-        sp["attn"], layers.norm(sp["ln1"], x, cfg.norm, cfg.norm_eps),
-        cache["k"], cache["v"], pos, cfg, window=cfg.attn_window, qimpl=qimpl)
+    from repro.kvcache.cache import QuantizedKVLayer
+
+    xn = layers.norm(sp["ln1"], x, cfg.norm, cfg.norm_eps)
+    if isinstance(cache, QuantizedKVLayer):
+        att, ncache = layers.attention_decode_quant(
+            sp["attn"], xn, cache, pos, cfg, window=cfg.attn_window, qimpl=qimpl)
+    else:
+        att, (ck, cv) = layers.attention_decode(
+            sp["attn"], xn, cache["k"], cache["v"], pos, cfg,
+            window=cfg.attn_window, qimpl=qimpl)
+        ncache = {"k": ck, "v": cv}
     h = x + att
     h = h + layers.mlp(sp["mlp"], layers.norm(sp["ln2"], h, cfg.norm, cfg.norm_eps),
                        cfg.mlp, qimpl=qimpl)
-    return h, {"k": ck, "v": cv}
+    return h, ncache
 
 
 def decode_step(params, cfg, state, token, pos, *, qimpl="auto"):
@@ -149,8 +176,14 @@ def decode_step(params, cfg, state, token, pos, *, qimpl="auto"):
     return logits, {"mamba": new_mamba, "attn": new_attn}
 
 
-def prefill(params, cfg, tokens=None, embeds=None, *, qimpl="auto"):
-    """Unrolled full-sequence pass returning logits + decode state."""
+def prefill(params, cfg, tokens=None, embeds=None, *, qimpl="auto", lengths=None):
+    """Unrolled full-sequence pass returning logits + decode state.
+
+    ``lengths`` masks right-pad tokens out of the Mamba recurrent states
+    (mamba2.block_forward); the shared attention needs no masking — pads
+    sit to the right of every valid causal query, and pad KV rows are
+    masked at decode by the per-slot ``kv_valid``.
+    """
     from repro.dist.sharding import shard_batch_act
     from . import decoder
 
@@ -177,7 +210,7 @@ def prefill(params, cfg, tokens=None, embeds=None, *, qimpl="auto"):
             x = h + layers.mlp(sp["mlp"], layers.norm(sp["ln2"], h, cfg.norm, cfg.norm_eps),
                                cfg.mlp, qimpl=qimpl)
         y, st = mamba2.block_forward(lp, layers.rmsnorm(lp["ln"], x, cfg.norm_eps), cfg,
-                                     qimpl=qimpl, return_state=True)
+                                     qimpl=qimpl, return_state=True, lengths=lengths)
         new_mamba.append(st)
         x = x + y
     hidden = layers.rmsnorm(params["final_norm"], x, cfg.norm_eps)

@@ -500,6 +500,42 @@ def attention_decode(
     return y, (cache_k, cache_v)
 
 
+def attention_decode_quant(
+    p: dict,
+    x: jax.Array,                 # (B, 1, d) — one new token
+    cache,                        # kvcache.QuantizedKVLayer
+    pos: jax.Array,               # () or (B,) int32 — write/attend position
+    cfg,
+    *,
+    window: int = 0,
+    bits=None,
+    qimpl: str = "auto",
+):
+    """One decode step over a *packed* KV cache (DESIGN.md §11).
+
+    Mirrors :func:`attention_decode` but the cache is a quantized
+    ``QuantizedKVLayer``: the new K/V requantize exactly one sequence block
+    (append), and attention dequantizes inside the kernel — the packed
+    lanes are the only state bytes the step moves.  ``qimpl`` carries over:
+    "xla" runs the jnp reference, "pallas"/"interpret" the fused kernels.
+    """
+    from repro.kernels.quant_kv.ops import quant_kv_append, quant_kv_attention
+
+    b = x.shape[0]
+    positions = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1, 1), (b, 1))
+    q, k_new, v_new = _qkv(p, x, cfg, positions, bits=bits, qimpl=qimpl)
+    cache = quant_kv_append(cache, pos, k_new, v_new, impl=qimpl)
+    skv = cache.seq
+    posv = jnp.asarray(pos, jnp.int32).reshape(-1)[:, None]   # (B or 1, 1)
+    kv_valid = jnp.broadcast_to(jnp.arange(skv)[None, :] <= posv, (b, skv))
+    if window:
+        kv_valid &= jnp.broadcast_to(jnp.arange(skv)[None, :] > (posv - window),
+                                     (b, skv))
+    o = quant_kv_attention(q, cache, kv_valid, impl=qimpl, out_dtype=x.dtype)
+    y = qdense(p["wo"], o.reshape(b, 1, -1), bits=_b(bits, "wo"), qimpl=qimpl)
+    return y, cache
+
+
 # ---------------------------------------------------------------------------
 # MLP variants
 # ---------------------------------------------------------------------------

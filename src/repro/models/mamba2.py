@@ -119,8 +119,17 @@ def ssd_chunked(x, dt, a_log, b_in, c_in, d_skip, chunk: int):
     return y.astype(x.dtype), final_state
 
 
-def block_forward(p, x, cfg, *, bits=None, qimpl="auto", return_state: bool = False):
-    """Full-sequence Mamba2 mixer (train / prefill)."""
+def block_forward(p, x, cfg, *, bits=None, qimpl="auto", return_state: bool = False,
+                  lengths=None):
+    """Full-sequence Mamba2 mixer (train / prefill).
+
+    ``lengths`` (B,) int32: per-row valid prompt lengths for a right-padded
+    prefill.  Pad tokens are masked out of the recurrent-state update
+    (dt -> 0: decay exp(dt*A) = 1 and update dt*x*B = 0), so the returned
+    decode state is exactly the unpadded state — pads to the right never
+    reach valid positions through the causal conv or the causal SSD scan,
+    so the per-position outputs at valid positions are unchanged too.
+    """
     bsz, s, _ = x.shape
     din, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_nheads
     hp = cfg.ssm_head_dim
@@ -130,6 +139,9 @@ def block_forward(p, x, cfg, *, bits=None, qimpl="auto", return_state: bool = Fa
     xc = _causal_conv(xc_raw.astype(jnp.float32), p["conv_w"], p["conv_b"]).astype(x.dtype)
     xs, b_in, c_in = jnp.split(xc, [din, din + n], axis=-1)
     dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    if lengths is not None:
+        valid = jnp.arange(s)[None, :] < lengths[:, None]     # (B, S)
+        dt = dt * valid[..., None]
     y, final_state = ssd_chunked(xs.reshape(bsz, s, h, hp), dt, p["A_log"], b_in, c_in,
                                  p["D"], cfg.ssm_chunk)
     y = y.reshape(bsz, s, din)
@@ -139,8 +151,17 @@ def block_forward(p, x, cfg, *, bits=None, qimpl="auto", return_state: bool = Fa
                         qimpl=qimpl)
     if return_state:
         w = cfg.ssm_conv_width
-        conv_tail = xc_raw[:, -(w - 1):].astype(jnp.float32) if s >= w - 1 else jnp.pad(
-            xc_raw.astype(jnp.float32), ((0, 0), (w - 1 - s, 0), (0, 0)))
+        xr = xc_raw.astype(jnp.float32)
+        if lengths is not None:
+            # the conv history must end at each row's LAST VALID token, not
+            # at the pad boundary: gather rows [L-(w-1), L), zeros before 0
+            xr = jnp.where(valid[..., None], xr, 0.0)
+            idx = lengths[:, None] - (w - 1) + jnp.arange(w - 1)[None, :]
+            tail = jnp.take_along_axis(xr, jnp.clip(idx, 0, s - 1)[..., None], axis=1)
+            conv_tail = jnp.where((idx >= 0)[..., None], tail, 0.0)
+        else:
+            conv_tail = xr[:, -(w - 1):] if s >= w - 1 else jnp.pad(
+                xr, ((0, 0), (w - 1 - s, 0), (0, 0)))
         return out, {"conv": conv_tail, "ssm": final_state}
     return out
 
@@ -245,7 +266,10 @@ def unstack_layers(params, cfg) -> dict:
     return out
 
 
-def prefill(params, cfg, tokens=None, embeds=None, *, qimpl="auto"):
+def prefill(params, cfg, tokens=None, embeds=None, *, qimpl="auto", lengths=None):
+    """Serve prefill.  ``lengths`` masks right-pad tokens out of the
+    recurrent state (see block_forward) so the decode state of a padded
+    batched admission equals the unpadded per-request state exactly."""
     from repro.dist.sharding import shard_batch_act
     from . import decoder
 
@@ -255,7 +279,7 @@ def prefill(params, cfg, tokens=None, embeds=None, *, qimpl="auto"):
     states = []
     for lp in params["layers"]:
         y, st = block_forward(lp, layers.rmsnorm(lp["ln"], x, cfg.norm_eps), cfg,
-                              qimpl=qimpl, return_state=True)
+                              qimpl=qimpl, return_state=True, lengths=lengths)
         states.append(st)
         x = x + y
     hidden = layers.rmsnorm(params["final_norm"], x, cfg.norm_eps)

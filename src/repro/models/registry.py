@@ -68,26 +68,44 @@ class ModelAPI:
     init: Callable
     loss: Callable
     unstack: Callable
-    prefill: Callable
+    prefill: Callable            # accepts lengths= (per-row valid prompt lens)
     decode_step: Callable
-    init_decode_state: Callable  # (cfg, batch, seq, dtype, abstract) -> state pytree
+    # (cfg, batch, seq, dtype, abstract, *, state_bits, block) -> state pytree;
+    # state_bits = per-KV-entry [(k_bits, v_bits), ...] packs the caches as
+    # kvcache.QuantizedKVLayer (families without KV entries reject it)
+    init_decode_state: Callable
 
 
-def _decoder_state(cfg, batch, seq, dtype=jnp.bfloat16, abstract=False):
-    return (decoder.abstract_cache if abstract else decoder.init_cache)(cfg, batch, seq, dtype)
+def _decoder_state(cfg, batch, seq, dtype=jnp.bfloat16, abstract=False, *,
+                   state_bits=None, block=None):
+    if abstract:
+        if state_bits is not None:
+            raise NotImplementedError("abstract quantized decode state")
+        return decoder.abstract_cache(cfg, batch, seq, dtype)
+    return decoder.init_cache(cfg, batch, seq, dtype, state_bits=state_bits,
+                              block=block)
 
 
-def _mamba_state(cfg, batch, seq, dtype=jnp.bfloat16, abstract=False):
-    del seq, dtype
+def _mamba_state(cfg, batch, seq, dtype=jnp.bfloat16, abstract=False, *,
+                 state_bits=None, block=None):
+    del seq, dtype, block
+    if state_bits is not None:
+        raise ValueError("ssm family has no quantizable KV state")
     mk = mamba2.abstract_state if abstract else mamba2.init_state
     return [mk(cfg, batch) for _ in range(cfg.n_layers)]
 
 
-def _hybrid_state(cfg, batch, seq, dtype=jnp.bfloat16, abstract=False):
-    return hybrid.init_decode_state(cfg, batch, seq, dtype, abstract=abstract)
+def _hybrid_state(cfg, batch, seq, dtype=jnp.bfloat16, abstract=False, *,
+                  state_bits=None, block=None):
+    return hybrid.init_decode_state(cfg, batch, seq, dtype, abstract=abstract,
+                                    state_bits=state_bits, block=block)
 
 
-def _encdec_state(cfg, batch, seq, dtype=jnp.bfloat16, abstract=False):
+def _encdec_state(cfg, batch, seq, dtype=jnp.bfloat16, abstract=False, *,
+                  state_bits=None, block=None):
+    del block
+    if state_bits is not None:
+        raise ValueError("encdec serving has no engine-managed KV state")
     return encdec.init_cache(cfg, batch, seq, dtype, abstract=abstract)
 
 

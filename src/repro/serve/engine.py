@@ -29,10 +29,18 @@ bitwidth are fused at admission time into single packed buffers
 group; decode is memory-bound on HBM weight bytes, which is exactly where
 per-layer bitwidth pays (DESIGN.md §2).
 
-Known approximation inherited from the padded-prefill scheme: attention
-families mask pad positions exactly, but SSM/hybrid prefill integrates pad
-tokens into the recurrent state, so their decode state depends (weakly) on
-the pad length.
+The decode state itself may be quantized (DESIGN.md §11): ``state_bits``
+(or a ``PolicyArtifact`` carrying a searched state policy) packs the KV
+caches as ``kvcache.QuantizedKVLayer`` containers — int lanes + per-block
+scales, heterogeneous per-layer K/V bitwidths — and the engine verifies the
+built state against the artifact exactly like it verifies the packed
+weights.  Admission quantizes the prefill rows into their slots; each
+decode step requantizes only the sequence block it writes.
+
+Padded prefill is exact for every family: attention masks pad positions via
+the per-slot ``kv_valid``, and SSM/hybrid prefills mask pad tokens out of
+the recurrent-state update (``lengths`` threaded through ``api.prefill``),
+so the decode state never depends on the pad length.
 """
 from __future__ import annotations
 
@@ -44,6 +52,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import kvcache
 from repro.configs.base import ArchConfig
 from repro.core.policy import PolicyArtifact
 from repro.models import registry
@@ -77,9 +86,10 @@ def _round_up(n: int, mult: int) -> int:
 class ServeEngine:
     def __init__(self, cfg: ArchConfig, params: dict, *, max_slots: int = 4,
                  max_seq: int = 256, prefill_pad: int = 32, qimpl: str = "auto",
-                 temperature: float = 0.0, top_k: int = 0, seed: int = 0,
-                 state_dtype=jnp.float32, batch_admission: bool = True,
-                 fuse_projections: bool = True,
+                 temperature: float = 0.0, top_k: int = 0, top_p: float = 1.0,
+                 seed: int = 0, state_dtype=jnp.float32,
+                 batch_admission: bool = True, fuse_projections: bool = True,
+                 state_bits=None, kv_block: int | None = None,
                  artifact: PolicyArtifact | None = None):
         if cfg.family in ("audio", "encdec"):
             raise NotImplementedError(
@@ -102,50 +112,69 @@ class ServeEngine:
         self.prefill_pad = prefill_pad
         self.temperature = temperature
         self.top_k = top_k
+        self.top_p = top_p
         self.batch_admission = batch_admission
         self._key = jax.random.key(seed)
         self.slots = [_Slot() for _ in range(max_slots)]
-        self.state = self.api.init_decode_state(cfg, max_slots, max_seq, state_dtype)
+        # quantized decode state (DESIGN.md §11): explicit state_bits wins,
+        # else a searched state policy rides in on the artifact
+        if state_bits is None and artifact is not None:
+            state_bits = artifact.state_policy
+        resolved = (kvcache.resolve_state_bits(state_bits, cfg)
+                    if state_bits is not None else None)
+        self.state = self.api.init_decode_state(cfg, max_slots, max_seq,
+                                                state_dtype, state_bits=resolved,
+                                                block=kv_block)
+        #: state-entry name -> packed bits (the state analogue of packed_bits)
+        self.state_bits = kvcache.packed_state_bits(self.state)
+        if artifact is not None:
+            # bidirectional: wrong-width caches fail, a searched state entry
+            # the engine left fp fails, and a state policy searched on a
+            # different KV surface (head geometry / entry set) fails too —
+            # slots/max_seq may differ (geometry-independent surface hash)
+            surface = (kvcache.state_layer_infos(cfg, max_slots, max_seq)
+                       if artifact.state_policy is not None else None)
+            kvcache.verify_state_bits(self.state, artifact, surface=surface)
         self.stats = {"prefill_tokens": 0, "decode_steps": 0, "completed": 0,
                       "wall_s": 0.0}
 
         api, cfg_ = self.api, cfg
 
-        def decode(params, state, tokens, pos, key, temperature, top_k):
+        def decode(params, state, tokens, pos, key, temperature, top_k, top_p):
             logits, state = api.decode_step(params, cfg_, state, tokens, pos, qimpl=qimpl)
             last = logits[:, -1]
             if temperature > 0.0:  # static arg: greedy never touches the key
                 key, sub = jax.random.split(key)
-                toks = sample(last, sub, temperature=temperature, top_k=top_k)
+                toks = sample(last, sub, temperature=temperature, top_k=top_k,
+                              top_p=top_p)
             else:
                 toks = sample(last)
             return toks, state, key
 
-        def prefill(params, tokens):
-            _, st = api.prefill(params, cfg_, tokens=tokens, qimpl=qimpl)
+        def prefill(params, tokens, lengths):
+            _, st = api.prefill(params, cfg_, tokens=tokens, lengths=lengths,
+                                qimpl=qimpl)
             return st
 
         # donate the decode state: the KV caches / SSM states alias in place
-        # instead of being copied every token.  temperature/top_k ride as
-        # static args so mutating engine.temperature between runs retraces
+        # instead of being copied every token.  temperature/top_k/top_p ride
+        # as static args so mutating engine.temperature between runs retraces
         # instead of silently keeping the init-time value.
-        self._decode = jax.jit(decode, donate_argnums=(1,), static_argnums=(5, 6))
+        self._decode = jax.jit(decode, donate_argnums=(1,), static_argnums=(5, 6, 7))
         self._prefill = jax.jit(prefill)
 
     # -- state surgery ---------------------------------------------------
-    def _insert_rows(self, slot_ids: list[int], st_new: Any) -> None:
-        """Tree-insert rows of a batched prefill state into their slots."""
+    def _insert_rows(self, slot_ids: list[int], st_new: Any,
+                     lengths: jax.Array) -> None:
+        """Tree-insert rows of a batched prefill state into their slots.
 
-        ids = jnp.asarray(slot_ids)
-
-        def ins(cache, new):
-            # one scatter per leaf: row i of the prefill batch lands in slot
-            # slot_ids[i] (leading prefix of the seq/state dims), without the
-            # per-row full-cache copies a dynamic_update_slice loop would make
-            idx = (ids,) + tuple(slice(0, d) for d in new.shape[1:])
-            return cache.at[idx].set(new.astype(cache.dtype))
-
-        self.state = jax.tree.map(ins, self.state, st_new)
+        fp leaves scatter directly (one scatter per leaf, no per-row
+        full-cache copies); quantized KV layers quantize the fp prefill
+        rows block-wise on the way in — kvcache.insert_state_rows is the
+        shared walker (the calibration env admits the same way).
+        """
+        self.state = kvcache.insert_state_rows(self.state, jnp.asarray(slot_ids),
+                                               st_new, lengths)
 
     # -- admission ---------------------------------------------------------
     def _admit(self, assignments: list[tuple[int, Request]]) -> None:
@@ -167,8 +196,9 @@ class ServeEngine:
         toks = np.zeros((len(with_head), pad), np.int32)
         for row, (_, head) in enumerate(with_head):
             toks[row, : len(head)] = head
-        st = self._prefill(self.params, jnp.asarray(toks))
-        self._insert_rows([slot_id for slot_id, _ in with_head], st)
+        lengths = jnp.asarray([len(h) for _, h in with_head], jnp.int32)
+        st = self._prefill(self.params, jnp.asarray(toks), lengths)
+        self._insert_rows([slot_id for slot_id, _ in with_head], st, lengths)
         self.stats["prefill_tokens"] += sum(len(h) for _, h in with_head)
 
     # -- main loop -----------------------------------------------------------
@@ -203,7 +233,8 @@ class ServeEngine:
                 pos_h[i] = s.pos
             toks_dev, self.state, self._key = self._decode(
                 self.params, self.state, jnp.asarray(tokens_h),
-                jnp.asarray(pos_h), self._key, self.temperature, self.top_k)
+                jnp.asarray(pos_h), self._key, self.temperature, self.top_k,
+                self.top_p)
             toks = np.asarray(toks_dev)  # ONE (B,) int32 host transfer
             self.stats["decode_steps"] += 1
             for i in act:

@@ -1,4 +1,4 @@
-"""Token sampling: greedy / temperature / top-k (jit-friendly)."""
+"""Token sampling: greedy / temperature / top-k / top-p (jit-friendly)."""
 from __future__ import annotations
 
 import jax
@@ -6,8 +6,15 @@ import jax.numpy as jnp
 
 
 def sample(logits: jax.Array, key: jax.Array | None = None, *,
-           temperature: float = 0.0, top_k: int = 0) -> jax.Array:
-    """logits (..., V) -> token ids (...,).  temperature==0 -> greedy."""
+           temperature: float = 0.0, top_k: int = 0,
+           top_p: float = 1.0) -> jax.Array:
+    """logits (..., V) -> token ids (...,).  temperature==0 -> greedy.
+
+    Filters compose in the standard order: temperature scaling, then top-k,
+    then top-p (nucleus) over whatever support top-k left.  All ops are
+    shape-static (sort/cumsum), so the function jits with ``temperature``,
+    ``top_k`` and ``top_p`` as static arguments.
+    """
     if temperature <= 0.0:
         return jnp.argmax(logits, axis=-1).astype(jnp.int32)
     assert key is not None, "sampling with temperature needs a PRNG key"
@@ -15,6 +22,18 @@ def sample(logits: jax.Array, key: jax.Array | None = None, *,
     if top_k:
         kth = jnp.sort(logits, axis=-1)[..., -top_k][..., None]
         logits = jnp.where(logits < kth, -jnp.inf, logits)
+    if top_p < 1.0:
+        # nucleus: keep the smallest prefix of the descending-prob ranking
+        # whose mass reaches top_p; the first token always survives (the
+        # max(..., 0) guard keeps top_p <= 0 maximally restrictive — i.e.
+        # greedy — instead of wrapping kth to -1 and disabling the filter)
+        sorted_desc = jnp.sort(logits, axis=-1)[..., ::-1]
+        probs = jax.nn.softmax(sorted_desc, axis=-1)
+        cum_before = jnp.cumsum(probs, axis=-1) - probs
+        keep = cum_before < top_p                       # (..., V) desc order
+        kth = jnp.maximum(jnp.sum(keep, axis=-1) - 1, 0)  # last kept rank
+        thr = jnp.take_along_axis(sorted_desc, kth[..., None], axis=-1)
+        logits = jnp.where(logits < thr, -jnp.inf, logits)
     flat = logits.reshape(-1, logits.shape[-1])
     keys = jax.random.split(key, flat.shape[0])
     toks = jax.vmap(jax.random.categorical)(keys, flat)

@@ -1,0 +1,37 @@
+"""CPU smoke test for examples/budget_search_serve.py: the full
+search -> artifact -> serve demo (all three hardware conditions, including
+the KV-budgeted scenario) must keep running end to end."""
+import os
+import pathlib
+import sys
+
+import pytest
+
+EXAMPLES = pathlib.Path(__file__).resolve().parents[1] / "examples"
+
+
+@pytest.mark.slow
+def test_budget_search_serve_tiny(capsys):
+    sys.path.insert(0, str(EXAMPLES))
+    try:
+        import budget_search_serve
+    finally:
+        sys.path.pop(0)
+
+    out_dir = budget_search_serve.main(["--tiny"])
+    stdout = capsys.readouterr().out
+    # all three conditions produced artifacts on disk
+    for name in ("policy_memory_tight.json", "policy_latency_tight.json",
+                 "policy_kv_budgeted.json"):
+        assert os.path.exists(os.path.join(out_dir, name)), name
+    # the KV condition searched, reported the reduction, and served
+    assert "[kv-budgeted/shift_add]" in stdout
+    assert "served 3 requests on the quantized KV cache" in stdout
+    # the CLI deployments ran for the other two conditions
+    assert stdout.count("launch.serve --policy") == 2
+
+    from repro.core.policy import PolicyArtifact
+
+    art = PolicyArtifact.load(os.path.join(out_dir, "policy_kv_budgeted.json"))
+    assert art.state_policy is not None
+    assert art.report["state_bytes"] > 0

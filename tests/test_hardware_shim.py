@@ -1,0 +1,70 @@
+"""core/hardware compat shim: deprecation warning + exact delegation to the
+ShiftAddCostModel backend (Table VI / Fig. 5 values unchanged)."""
+import pytest
+
+from repro.core.policy import BitPolicy, LayerInfo
+from repro.cost import shift_add
+
+
+def _layers():
+    return (LayerInfo("a", (64, 32), macs=2048),
+            LayerInfo("b", (32, 32), macs=1024))
+
+
+class TestDeprecationWarning:
+    def test_access_warns(self):
+        from repro.core import hardware
+
+        with pytest.warns(DeprecationWarning, match="repro.cost.shift_add"):
+            _ = hardware.AREA_UM2
+
+    def test_import_of_core_stays_silent(self):
+        """Importing the package must not warn — only *using* the shim does."""
+        import subprocess
+        import sys
+
+        out = subprocess.run(
+            [sys.executable, "-W", "error::DeprecationWarning", "-c",
+             "import repro.core"],
+            capture_output=True, text=True,
+            env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})
+        assert out.returncode == 0, out.stderr
+
+    def test_unknown_attribute_raises(self):
+        from repro.core import hardware
+
+        with pytest.raises(AttributeError):
+            _ = hardware.not_a_symbol
+
+
+class TestExactDelegation:
+    def test_objects_are_identical(self):
+        from repro.core import hardware
+
+        with pytest.warns(DeprecationWarning):
+            assert hardware.ShiftAddCostModel is shift_add.ShiftAddCostModel
+            assert hardware.evaluate_policy is shift_add.evaluate_policy
+            assert hardware.AREA_UM2 is shift_add.AREA_UM2
+
+    def test_table6_fig5_values_unchanged(self):
+        from repro.core import hardware
+
+        with pytest.warns(DeprecationWarning):
+            assert hardware.AREA_UM2 == {"fp32": 3218.3, "fp16": 3837.9,
+                                         "bf16": 3501.9, "int8": 2103.4,
+                                         "shift_add": 1635.4}
+            assert hardware.area_saving_vs_int8() == pytest.approx(0.223, abs=1e-3)
+            # Fig. 5 energy fit: A8W2 -> -25.0%, A8W4 -> -13.8% vs INT8
+            assert float(hardware.mac_energy(2) - 1.0) == pytest.approx(-0.250, abs=0.005)
+            assert float(hardware.mac_energy(4) - 1.0) == pytest.approx(-0.138, abs=0.005)
+
+    def test_policy_pricing_identical(self):
+        from repro.core import hardware
+
+        policy = BitPolicy.from_bits(_layers(), {"a": 4, "b": 8})
+        with pytest.warns(DeprecationWarning):
+            legacy = hardware.evaluate_policy(policy)
+        seam = shift_add.ShiftAddCostModel().report(policy)
+        assert legacy.energy == seam.energy
+        assert legacy.latency == seam.latency_s
+        assert legacy.bops == seam.bops

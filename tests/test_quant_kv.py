@@ -1,0 +1,148 @@
+"""quant_kv kernel family: ref/pallas(interpret) parity, append semantics,
+and agreement with the fp attention oracle (DESIGN.md §11)."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.packing import VALID_BITS
+from repro.kvcache.cache import init_kv_layer, insert_rows
+from repro.kernels.quant_kv import ops
+
+B, S, H, HD, BLOCK = 3, 32, 2, 16, 8
+HQ = 4  # 2 query heads per kv head
+
+
+def _layer(k_bits=8, v_bits=8):
+    return init_kv_layer(B, S, H, HD, k_bits=k_bits, v_bits=v_bits, block=BLOCK)
+
+
+def _filled(k_bits=8, v_bits=8, seed=0, lens=(12, 7, 3)):
+    rng = np.random.default_rng(seed)
+    k = jnp.asarray(rng.normal(size=(B, max(lens), H, HD)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, max(lens), H, HD)), jnp.float32)
+    layer = insert_rows(_layer(k_bits, v_bits), jnp.arange(B), k, v,
+                        jnp.asarray(lens))
+    return layer, k, v, jnp.asarray(lens)
+
+
+def _fp_attention(q, k, v, kv_valid):
+    qg = q.reshape(B, H, HQ // H, HD)
+    s = jnp.einsum("bkgh,btkh->bkgt", qg, k) / math.sqrt(HD)
+    s = jnp.where(kv_valid[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bkgt,btkh->bkgh", p, v).reshape(B, HQ, HD)
+
+
+class TestAppendParity:
+    @pytest.mark.parametrize("bits", VALID_BITS)
+    def test_ref_matches_interpret(self, bits):
+        layer, _, _, lens = _filled(bits, bits)
+        rng = np.random.default_rng(1)
+        kn = jnp.asarray(rng.normal(size=(B, 1, H, HD)), jnp.float32)
+        vn = jnp.asarray(rng.normal(size=(B, 1, H, HD)), jnp.float32)
+        ref = ops.quant_kv_append(layer, lens, kn, vn, impl="xla")
+        pal = ops.quant_kv_append(layer, lens, kn, vn, impl="interpret")
+        # levels are bit-exact; scales agree to float rounding
+        assert jnp.array_equal(ref.k_packed, pal.k_packed)
+        assert jnp.array_equal(ref.v_packed, pal.v_packed)
+        assert jnp.allclose(ref.k_scale, pal.k_scale, rtol=1e-6)
+        assert jnp.allclose(ref.v_scale, pal.v_scale, rtol=1e-6)
+
+    def test_append_only_touches_current_block(self):
+        layer, _, _, _ = _filled()
+        pos = jnp.asarray([12, 7, 3], jnp.int32)
+        rng = np.random.default_rng(2)
+        new = jnp.asarray(rng.normal(size=(B, 1, H, HD)), jnp.float32)
+        out = ops.quant_kv_append(layer, pos, new, new, impl="xla")
+        for b, p in enumerate([12, 7, 3]):
+            blk = p // BLOCK
+            others = [i for i in range(S // BLOCK) if i != blk]
+            for i in others:
+                sl = slice(i * BLOCK, (i + 1) * BLOCK)
+                assert jnp.array_equal(out.k_packed[b, :, sl],
+                                       layer.k_packed[b, :, sl])
+                assert jnp.array_equal(out.k_scale[b, :, i],
+                                       layer.k_scale[b, :, i])
+
+    def test_append_roundtrip_accuracy_and_invariant(self):
+        layer, k, _, lens = _filled()
+        rng = np.random.default_rng(3)
+        new = jnp.asarray(rng.normal(size=(B, 1, H, HD)), jnp.float32)
+        out = ops.quant_kv_append(layer, lens, new, new, impl="xla")
+        kq, vq = out.dequantize()
+        for b, L in enumerate([12, 7, 3]):
+            # the appended row dequantizes close to the input ...
+            assert float(jnp.abs(kq[b, L].T - new[b, 0].T).max()) < 0.05
+            # ... earlier rows survive the block requant ...
+            assert float(jnp.abs(kq[b, :L] - k[b, :L]).max()) < 0.1
+            # ... and positions past the write point stay exactly zero
+            assert float(jnp.abs(kq[b, L + 1:]).max()) == 0.0
+
+    def test_scalar_pos_broadcasts(self):
+        layer, _, _, _ = _filled()
+        new = jnp.ones((B, 1, H, HD), jnp.float32)
+        a = ops.quant_kv_append(layer, jnp.asarray(5), new, new, impl="xla")
+        b_ = ops.quant_kv_append(layer, jnp.full((B,), 5), new, new, impl="xla")
+        assert jnp.array_equal(a.k_packed, b_.k_packed)
+
+
+class TestAttention:
+    @pytest.mark.parametrize("k_bits,v_bits", [(8, 8), (4, 8), (8, 4), (2, 2)])
+    def test_ref_matches_interpret(self, k_bits, v_bits):
+        layer, _, _, lens = _filled(k_bits, v_bits)
+        rng = np.random.default_rng(4)
+        q = jnp.asarray(rng.normal(size=(B, HQ, HD)), jnp.float32)
+        kv_valid = jnp.arange(S)[None, :] < lens[:, None]
+        ref = ops.quant_kv_attention(q, layer, kv_valid, impl="xla")
+        pal = ops.quant_kv_attention(q, layer, kv_valid, impl="interpret")
+        np.testing.assert_allclose(np.asarray(ref), np.asarray(pal),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_8bit_close_to_fp_oracle(self):
+        layer, k, v, lens = _filled(8, 8)
+        rng = np.random.default_rng(5)
+        q = jnp.asarray(rng.normal(size=(B, HQ, HD)), jnp.float32)
+        kv_valid = jnp.arange(S)[None, :] < lens[:, None]
+        kq = jnp.zeros((B, S, H, HD)).at[:, :k.shape[1]].set(k)
+        vq = jnp.zeros((B, S, H, HD)).at[:, :v.shape[1]].set(v)
+        got = ops.quant_kv_attention(q, layer, kv_valid, impl="xla")
+        want = _fp_attention(q, kq, vq, kv_valid)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=0.05)
+
+    def test_masked_positions_do_not_leak(self):
+        """Arbitrary garbage levels beyond kv_valid must not change the output."""
+        import dataclasses
+
+        layer, _, _, _ = _filled(4, 4, lens=(12, 12, 12))
+        rng = np.random.default_rng(6)
+        q = jnp.asarray(rng.normal(size=(B, HQ, HD)), jnp.float32)
+        short = jnp.arange(S)[None, :] < jnp.asarray([5, 5, 5])[:, None]
+        # stomp random int8 garbage into every masked position's packed rows
+        garbage = jnp.asarray(rng.integers(-128, 128, layer.k_packed.shape),
+                              jnp.int8)
+        beyond = (jnp.arange(S) >= 5)[None, None, :, None]
+        stomped = dataclasses.replace(
+            layer,
+            k_packed=jnp.where(beyond, garbage, layer.k_packed),
+            v_packed=jnp.where(beyond, garbage, layer.v_packed))
+        for impl in ("xla", "interpret"):
+            a = ops.quant_kv_attention(q, layer, short, impl=impl)
+            b_ = ops.quant_kv_attention(q, stomped, short, impl=impl)
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
+                                       rtol=1e-6, atol=1e-6)
+
+    def test_4d_query_shape(self):
+        layer, _, _, lens = _filled()
+        q = jnp.ones((B, 1, HQ, HD), jnp.float32)
+        kv_valid = jnp.arange(S)[None, :] < lens[:, None]
+        out = ops.quant_kv_attention(q, layer, kv_valid, impl="interpret")
+        assert out.shape == (B, 1, HQ, HD)
+
+    def test_unknown_impl_rejected(self):
+        layer, _, _, lens = _filled()
+        q = jnp.ones((B, HQ, HD), jnp.float32)
+        with pytest.raises(ValueError, match="unknown impl"):
+            ops.quant_kv_attention(q, layer, jnp.ones((B, S), bool), impl="cuda")

@@ -125,7 +125,7 @@ def test_decode_step_donates_state(dense_setup):
     tokens = jnp.zeros((2, 1), jnp.int32)
     pos = jnp.zeros((2,), jnp.int32)
     lowered = eng._decode.lower(eng.params, eng.state, tokens, pos, eng._key,
-                                eng.temperature, eng.top_k)
+                                eng.temperature, eng.top_k, eng.top_p)
     txt = lowered.as_text()
     # donation marks the state params as aliased/donated in the lowered HLO
     assert "tf.aliasing_output" in txt or "jax.buffer_donor" in txt
@@ -156,6 +156,57 @@ class TestSampling:
         for s in range(20):
             t = int(sample(logits, jax.random.key(s), temperature=2.0, top_k=2)[0])
             assert t in (0, 1)
+
+    def test_top_p_restricts_support(self):
+        # p(0) ~ 0.52: nucleus 0.5 keeps exactly the argmax
+        logits = jnp.asarray([[5.0, 4.9, -10.0, -10.0]])
+        for s in range(20):
+            t = int(sample(logits, jax.random.key(s), temperature=1.0, top_p=0.5)[0])
+            assert t == 0
+        # a wider nucleus re-admits the runner-up
+        seen = {int(sample(logits, jax.random.key(s), temperature=1.0, top_p=0.95)[0])
+                for s in range(40)}
+        assert seen == {0, 1}
+
+    def test_top_p_composes_with_top_k(self):
+        logits = jnp.asarray([[3.0, 2.9, 2.8, -1.0]])
+        for s in range(20):
+            t = int(sample(logits, jax.random.key(s), temperature=1.0,
+                           top_k=2, top_p=0.99)[0])
+            assert t in (0, 1)  # top-k already cut token 2 before top-p
+
+    def test_determinism_under_fixed_keys(self):
+        logits = jax.random.normal(jax.random.key(0), (3, 64))
+        for kwargs in (dict(), dict(temperature=1.0, top_k=8),
+                       dict(temperature=0.7, top_p=0.9),
+                       dict(temperature=1.3, top_k=16, top_p=0.8)):
+            a = sample(logits, jax.random.key(7), **kwargs)
+            b = sample(logits, jax.random.key(7), **kwargs)
+            assert jnp.array_equal(a, b)
+
+    def test_top_p_one_is_plain_sampling(self):
+        logits = jax.random.normal(jax.random.key(1), (2, 32))
+        a = sample(logits, jax.random.key(2), temperature=1.0)
+        b = sample(logits, jax.random.key(2), temperature=1.0, top_p=1.0)
+        assert jnp.array_equal(a, b)
+
+    def test_top_p_zero_is_maximally_restrictive(self):
+        """top_p <= 0 degenerates to greedy, never to 'filter disabled'."""
+        logits = jax.random.normal(jax.random.key(3), (4, 64))
+        greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        for s in range(10):
+            toks = sample(logits, jax.random.key(s), temperature=5.0, top_p=0.0)
+            assert jnp.array_equal(toks, greedy)
+
+
+def test_engine_threads_top_p(dense_setup):
+    """top_p rides the decode jit as a static arg, like temperature/top_k."""
+    cfg, api, sp = dense_setup
+    eng = ServeEngine(cfg, sp, max_slots=1, max_seq=64, seed=3,
+                      temperature=5.0, top_p=1e-6)
+    # a vanishing nucleus degenerates to greedy even at high temperature
+    greedy = ServeEngine(cfg, sp, max_slots=1, max_seq=64).generate([[5, 6, 7]], 4)
+    assert eng.generate([[5, 6, 7]], max_new_tokens=4) == greedy
 
 
 class TestPolicyArtifactServing:
