@@ -1,0 +1,151 @@
+"""Paged KV-cache benchmark -> BENCH_kvcache_paged.json (repo root).
+
+The resource-over-provisioning cell the paged pool exists for (DESIGN.md
+§12): 8 variable-length requests (16-256 prompt tokens) served under a
+``state_bytes`` budget of HALF the dense quantized cache.  The dense
+``(max_slots, max_seq)`` engine pre-pays max_seq for every slot; the paged
+engine allocates blocks on demand, so the SAME traffic fits the halved
+budget with identical output tokens.  Recorded:
+
+  * dense container bytes vs the paged pool's peak *allocated* bytes (the
+    quantity ``--limit state_bytes=`` budgets) and the reduction factor,
+  * pool utilization (peak allocated / pool size) and copy-on-write /
+    shared-block counters,
+  * decode tokens/s for both engines (interleaved best-of-N, same protocol
+    as benchmarks/kvcache.py) and whether the token streams match exactly.
+
+Registered as the "kvcache_paged" section of benchmarks/run.py.
+
+    PYTHONPATH=src python -m benchmarks.kvcache_paged
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+
+from repro.configs import gemma_2b
+from repro.core.policy import BitPolicy
+from repro.kvcache import pool_blocks_for_budget, resolve_state_bits
+from repro.models import registry
+from repro.quant import apply as qapply
+from repro.serve.engine import ServeEngine
+
+OUT_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_kvcache_paged.json")
+
+#: the acceptance cell: 8 variable-length requests, 16-256 prompt tokens
+BENCH = dict(max_slots=8, max_seq=288, prefill_pad=16, state_bits=4,
+             max_new_tokens=16, budget_frac=0.5, repeats=2)
+PROMPT_LENS = (16, 48, 80, 112, 144, 176, 208, 256)
+
+
+def _build(seed: int = 0):
+    cfg = gemma_2b.CONFIG.reduced()
+    api = registry.get_api(cfg)
+    params = api.init(cfg, jax.random.key(seed))
+    sp = api.unstack(params, cfg)
+    policy = BitPolicy.uniform(qapply.layer_specs(params, cfg), 4)
+    return cfg, qapply.quantize_for_serve(sp, policy, cfg)
+
+
+def _prompts():
+    return [[(3 + i + j) % 500 for j in range(ln)]
+            for i, ln in enumerate(PROMPT_LENS)]
+
+
+def _measure(engines: dict, prompts) -> dict:
+    for eng in engines.values():
+        eng.generate(prompts, max_new_tokens=BENCH["max_new_tokens"])  # warmup
+    best = {k: None for k in engines}
+    tokens = {}
+    for _ in range(BENCH["repeats"]):
+        for key, eng in engines.items():
+            t0 = time.perf_counter()
+            outs = eng.generate(prompts, max_new_tokens=BENCH["max_new_tokens"])
+            dt = time.perf_counter() - t0
+            tokens[key] = outs
+            n = sum(len(o) for o in outs)
+            rec = {"wall_s": round(dt, 4), "generated_tokens": n,
+                   "tokens_per_s": round(n / dt, 2)}
+            if best[key] is None or rec["tokens_per_s"] > best[key]["tokens_per_s"]:
+                best[key] = rec
+    return best, tokens
+
+
+def run(fast: bool = True) -> dict:
+    del fast  # one CI-sized cell
+    cfg, qp = _build()
+    prompts = _prompts()
+    kw = dict(max_slots=BENCH["max_slots"], max_seq=BENCH["max_seq"],
+              prefill_pad=BENCH["prefill_pad"], qimpl="xla",
+              state_bits=BENCH["state_bits"])
+    dense = ServeEngine(cfg, qp, **kw)
+
+    dense_bytes = dense.state_container_bytes()
+    budget = BENCH["budget_frac"] * dense_bytes
+    sbits = resolve_state_bits(BENCH["state_bits"], cfg)
+    blk = dense.state[0].block
+    pool_blocks = pool_blocks_for_budget(sbits, cfg.n_kv_heads,
+                                         cfg.resolved_head_dim, blk, budget)
+    paged = ServeEngine(cfg, qp, paged=True, pool_blocks=pool_blocks, **kw)
+
+    recs, tokens = _measure({"dense": dense, "paged": paged}, prompts)
+    peak_bytes = paged.allocated_state_bytes(peak=True)
+    pool = paged.pool
+    doc = {
+        "config": dict(BENCH, arch="gemma-2b.reduced", qimpl="xla",
+                       prompt_lens=list(PROMPT_LENS),
+                       backend=jax.default_backend()),
+        "state_bytes": {
+            "dense_container": dense_bytes,
+            "state_bytes_budget": int(budget),
+            "paged_pool_container": paged.state_container_bytes(),
+            "paged_peak_allocated": peak_bytes,
+            "reduction_vs_dense_x": round(dense_bytes / peak_bytes, 2),
+            "within_budget": bool(peak_bytes <= budget),
+        },
+        "pool": {
+            "block": blk,
+            "num_blocks": pool_blocks,
+            "peak_allocated_blocks": pool.peak_allocated,
+            "utilization": round(pool.peak_allocated / pool_blocks, 3),
+            "cow_copies": pool.cow_copies,
+            "shared_block_maps": pool.shared_maps,
+        },
+        "runs": recs,
+        "tokens_match_dense": bool(tokens["dense"] == tokens["paged"]),
+        "tokens_per_s_ratio": round(
+            recs["paged"]["tokens_per_s"] / recs["dense"]["tokens_per_s"], 3),
+    }
+    if not doc["tokens_match_dense"]:
+        raise AssertionError("paged engine tokens diverged from the dense path")
+    if peak_bytes >= dense_bytes:
+        raise AssertionError(
+            f"paged allocation ({peak_bytes}) did not beat the dense "
+            f"container ({dense_bytes})")
+    with open(OUT_PATH, "w") as f:
+        json.dump(doc, f, indent=1)
+    print(f"state bytes: dense {dense_bytes} -> paged peak {peak_bytes} "
+          f"({doc['state_bytes']['reduction_vs_dense_x']}x smaller, "
+          f"budget {int(budget)}, within_budget="
+          f"{doc['state_bytes']['within_budget']})")
+    print(f"pool: {pool.peak_allocated}/{pool_blocks} blocks peak "
+          f"({doc['pool']['utilization']:.0%} util), "
+          f"cow={pool.cow_copies}, shared={pool.shared_maps}")
+    print(f"decode: dense {recs['dense']['tokens_per_s']} tok/s, "
+          f"paged {recs['paged']['tokens_per_s']} tok/s; "
+          f"tokens_match={doc['tokens_match_dense']}")
+    return doc
+
+
+def main(argv=None) -> int:
+    argparse.ArgumentParser(description=__doc__).parse_args(argv)
+    run()
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -14,13 +14,16 @@ import time
 import traceback
 
 from . import (allocator, decode_throughput, fig3_trajectory, fig5_hw, kvcache,
-               roofline, table1_sigma_kl, table2_phases, table3_sota,
-               table4_hparam, table5_bops, table6_mac)
+               kvcache_paged, roofline, table1_sigma_kl, table2_phases,
+               table3_sota, table4_hparam, table5_bops, table6_mac)
 
 SECTIONS = {
     "decode": ("Decode throughput (BENCH_decode.json)", decode_throughput.run),
     "kvcache": ("Quantized KV cache: state bytes + decode tok/s vs fp cache "
                 "(BENCH_kvcache.json)", kvcache.run),
+    "kvcache_paged": ("Paged KV cache: allocated vs dense state bytes, pool "
+                      "utilization (BENCH_kvcache_paged.json)",
+                      kvcache_paged.run),
     "allocator": ("Allocator: wall-time + budget satisfaction x backends "
                   "(BENCH_allocator.json)", allocator.run),
     "table1": ("Table I: sigma vs KL vs final bits", table1_sigma_kl.run),
@@ -56,7 +59,13 @@ def main(argv=None) -> int:
         t0 = time.time()
         try:
             fn(fast=fast)
-        except Exception:
+        except KeyboardInterrupt:
+            raise
+        except BaseException:
+            # BaseException, not Exception: a section bailing via
+            # SystemExit (argparse, sys.exit in a main()) must count as a
+            # failure too, or --smoke exits 0 and CI uploads BENCH_*.json
+            # from a partially failed run.
             traceback.print_exc()
             failures.append(key)
         print(f"-- {key} done in {time.time() - t0:.1f}s")

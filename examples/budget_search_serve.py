@@ -10,13 +10,17 @@ serving stack.
      + ``state_bytes`` budget: the same two-phase controller additionally
      allocates heterogeneous per-layer K/V *cache* bitwidths from sigma/KL
      statistics over calibration decodes, and the engine serves with the
-     packed decode state.
+     packed decode state.  With ``--paged`` the state budget prices a paged
+     block pool's ALLOCATED blocks instead of the dense ``(slots, max_seq)``
+     worst case (DESIGN.md §12): the artifact records the pool geometry the
+     budget bought and the engine deploys block tables + on-demand
+     allocation, serving the same requests on strictly fewer state bytes.
 
 Each condition writes a versioned ``PolicyArtifact``; conditions 1-2 deploy
 via ``launch/serve.py --policy`` (the CLI path), condition 3 additionally
 verifies the engine's packed state against the artifact.
 
-    PYTHONPATH=src python examples/budget_search_serve.py [--tiny]
+    PYTHONPATH=src python examples/budget_search_serve.py [--tiny] [--paged]
 
 ``--tiny`` shrinks the pretraining/search budgets so the whole demo smoke-
 runs in CI (tests/test_examples.py).
@@ -59,6 +63,9 @@ def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--tiny", action="store_true",
                     help="CI-sized budgets (smoke test mode)")
+    ap.add_argument("--paged", action="store_true",
+                    help="condition 3 prices + deploys a paged KV block pool "
+                         "(DESIGN.md §12) instead of dense per-slot caches")
     args = ap.parse_args(argv)
     pretrain = 8 if args.tiny else 40
     iters = 4 if args.tiny else 10
@@ -103,8 +110,13 @@ def main(argv=None):
     slots, max_seq = 4, 64
     serve_params = registry.get_api(cfg).unstack(env.params, cfg)
     calib = np.random.default_rng(0).integers(1, cfg.vocab_size, (4, 16))
+    # --paged: the state budget prices a pool's allocated blocks (half the
+    # dense worst case — the paging bet) and the artifact records the pool
+    # geometry the budget buys (DESIGN.md §12)
+    allocated = slots * max_seq // 2 if args.paged else None
     kv_env = KVQuantEnv(serve_params, cfg, calib, slots=slots, max_seq=max_seq,
-                        cost_model=ShiftAddCostModel())
+                        cost_model=ShiftAddCostModel(),
+                        allocated_tokens=allocated)
     ref_state = kv_env.costs(BitPolicy.uniform(kv_env.layer_infos(), 8))
     joint_budget = Budget.of(acc_t, acc_buffer=0.05, buffer=0.08,
                              size_mib=0.75 * ref["size_mib"])
@@ -114,6 +126,7 @@ def main(argv=None):
         env, joint_budget, config=cc,
         state_env=kv_env, state_budget=state_budget,
         state_config=state_controller_config(len(kv_env.layer_infos())),
+        pool={"block": 16} if args.paged else None,
         meta={"arch": cfg.name, "condition": "kv-budgeted"})
     kv_path = os.path.join(out_dir, "policy_kv_budgeted.json")
     art_kv.save(kv_path)
@@ -126,13 +139,24 @@ def main(argv=None):
           f"smaller) kv_bits={sp_bits} -> {kv_path}")
 
     # deploy condition 3 directly: packed weights + packed decode state,
-    # bidirectionally verified against the artifact
+    # bidirectionally verified against the artifact (a v3 pool geometry
+    # makes the engine build block tables + on-demand allocation)
     qp = qapply.quantize_for_serve(serve_params, art_kv, cfg)
     eng = ServeEngine(cfg, qp, max_slots=slots, max_seq=max_seq, artifact=art_kv)
     outs = eng.generate([[5, 6, 7, 8], [1, 2, 9], [4, 4, 4, 4, 4]],
                         max_new_tokens=8)
     print(f"  served {len(outs)} requests on the quantized KV cache; "
           f"state_bits={eng.state_bits}")
+    if args.paged:
+        dense_eng = ServeEngine(cfg, qp, max_slots=slots, max_seq=max_seq,
+                                state_bits=art_kv.state_policy)
+        dense_bytes = dense_eng.state_container_bytes()
+        print(f"  [paged] pool {art_kv.pool['num_blocks']} blocks x "
+              f"{art_kv.pool['block']} positions; peak allocated "
+              f"{eng.allocated_state_bytes()} B vs dense container "
+              f"{dense_bytes} B "
+              f"({dense_bytes / max(eng.allocated_state_bytes(), 1):.1f}x "
+              f"less state memory for the same requests)")
 
     # ---- deploy conditions 1-2 through the serving CLI --------------------
     for path in (mem_path, lat_path):

@@ -369,10 +369,11 @@ def classify_zone(acc: float, res, t: "Targets | Budget") -> Zone:
 # ---------------------------------------------------------------------------
 
 #: bump when the artifact JSON layout changes incompatibly
-ARTIFACT_VERSION = 2
+ARTIFACT_VERSION = 3
 
-#: versions this build can still read (v1 artifacts simply have no KV policy)
-READABLE_ARTIFACT_VERSIONS = (1, 2)
+#: versions this build can still read (v1 artifacts have no KV policy,
+#: v1/v2 have no paged pool geometry — both load with those fields None)
+READABLE_ARTIFACT_VERSIONS = (1, 2, 3)
 
 
 def layer_registry_hash(layers: Iterable[LayerInfo]) -> str:
@@ -400,6 +401,10 @@ class PolicyArtifact:
     state_policy   per-layer K/V decode-state bitwidths (None: fp state) —
                    versioned alongside the weight policy since v2, with its
                    own registry hash over the state surface (DESIGN.md §11)
+    pool           paged-pool geometry (v3, DESIGN.md §12): a dict with
+                   ``block`` (sequence positions per physical block) and
+                   ``num_blocks`` (usable blocks the state_bytes budget
+                   bought).  None: the dense per-slot containers.
     meta           free-form provenance (arch, controller stats, wall time)
     """
 
@@ -410,18 +415,27 @@ class PolicyArtifact:
     budget: Budget | None = None
     state_policy: BitPolicy | None = None
     state_registry_hash: str = ""
+    pool: dict | None = None
     meta: dict = dataclasses.field(default_factory=dict)
     version: int = ARTIFACT_VERSION
 
     @classmethod
     def build(cls, policy: BitPolicy, *, backend: str = "", report: Mapping | None = None,
               budget: Budget | None = None, state_policy: "BitPolicy | None" = None,
-              meta: Mapping | None = None) -> "PolicyArtifact":
+              pool: Mapping | None = None, meta: Mapping | None = None) -> "PolicyArtifact":
+        if pool is not None:
+            if state_policy is None:
+                raise ValueError("pool geometry needs a state_policy (the "
+                                 "pool stores packed state only)")
+            missing = {"block", "num_blocks"} - set(pool)
+            if missing:
+                raise ValueError(f"pool geometry missing keys: {sorted(missing)}")
         return cls(policy=policy, registry_hash=layer_registry_hash(policy.layers),
                    backend=backend, report=dict(report or {}), budget=budget,
                    state_policy=state_policy,
                    state_registry_hash=(layer_registry_hash(state_policy.layers)
                                         if state_policy is not None else ""),
+                   pool=dict(pool) if pool is not None else None,
                    meta=dict(meta or {}))
 
     # -- validation ----------------------------------------------------------
@@ -455,6 +469,7 @@ class PolicyArtifact:
                 "state_policy": (json.loads(self.state_policy.to_json())
                                  if self.state_policy is not None else None),
                 "state_registry_hash": self.state_registry_hash,
+                "pool": self.pool,
                 "meta": self.meta,
                 "policy": json.loads(self.policy.to_json()),
             },
@@ -477,6 +492,7 @@ class PolicyArtifact:
             budget=Budget.from_dict(d["budget"]) if d.get("budget") else None,
             state_policy=state_policy,
             state_registry_hash=d.get("state_registry_hash", ""),
+            pool=dict(d["pool"]) if d.get("pool") else None,
             meta=dict(d.get("meta") or {}),
             version=version)
 

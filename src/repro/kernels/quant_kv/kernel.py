@@ -71,20 +71,31 @@ def _dequant_block(packed, scale, bits, hd, block):
 # ---------------------------------------------------------------------------
 
 
-def _attn_kernel(q_ref, kp_ref, ks_ref, vp_ref, vs_ref, mask_ref, out_ref, *,
-                 k_bits: int, v_bits: int, hd: int, block: int):
-    q = q_ref[0, 0].astype(jnp.float32)                       # (g, hd)
-    k = _dequant_block(kp_ref[0, 0], ks_ref[0, 0], k_bits, hd, block)  # (S, hd)
+def _attn_math(q, kp, ks, vp, vs, mask, *, k_bits: int, v_bits: int, hd: int,
+               block: int):
+    """The shared fused dequant-attention body: packed (S, ·) K/V + per-block
+    scales -> (g, hd) output.  Both the dense kernel and the paged kernel
+    (which first gathers its table's blocks into this exact layout) call it,
+    so paged attention is bitwise-identical to dense on identical contents."""
+    q = q.astype(jnp.float32)                                 # (g, hd)
+    k = _dequant_block(kp, ks, k_bits, hd, block)             # (S, hd)
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32)
-    s = s * (hd ** -0.5) + mask_ref[...]                      # (g, S) + (1, S)
+    s = s * (hd ** -0.5) + mask                               # (g, S) + (1, S)
     m = jnp.max(s, axis=-1, keepdims=True)
     p = jnp.exp(s - m)
     l = jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
-    v = _dequant_block(vp_ref[0, 0], vs_ref[0, 0], v_bits, hd, block)
+    v = _dequant_block(vp, vs, v_bits, hd, block)
     o = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
                             preferred_element_type=jnp.float32)
-    out_ref[0, 0] = o / l
+    return o / l
+
+
+def _attn_kernel(q_ref, kp_ref, ks_ref, vp_ref, vs_ref, mask_ref, out_ref, *,
+                 k_bits: int, v_bits: int, hd: int, block: int):
+    out_ref[0, 0] = _attn_math(q_ref[0, 0], kp_ref[0, 0], ks_ref[0, 0],
+                               vp_ref[0, 0], vs_ref[0, 0], mask_ref[...],
+                               k_bits=k_bits, v_bits=v_bits, hd=hd, block=block)
 
 
 @functools.partial(jax.jit, static_argnames=("k_bits", "v_bits", "hd", "block",
@@ -192,3 +203,145 @@ def quant_kv_append_pallas(
                    jax.ShapeDtypeStruct((b, h, 1, 1), jnp.float32)],
         interpret=interpret,
     )(jnp.asarray(pos, jnp.int32), new, packed, scale)
+
+
+# ---------------------------------------------------------------------------
+# paged variants: block-table gather (DESIGN.md §12)
+# ---------------------------------------------------------------------------
+
+
+def _paged_attn_kernel(tbl_ref, q_ref, kp_ref, ks_ref, vp_ref, vs_ref,
+                       mask_ref, out_ref, kacc, ksacc, vacc, vsacc, *,
+                       k_bits: int, v_bits: int, hd: int, block: int):
+    i, b = pl.program_id(0), pl.program_id(2)
+    nb = pl.num_programs(2)
+    # gather phase: the BlockSpec index maps already DMA'd the table-mapped
+    # pool block; unmapped entries (clamped to the trash block) zero-fill so
+    # the gathered layout matches a dense cache's never-written regions.
+    mapped = tbl_ref[i, b] >= 0
+    kacc[pl.ds(b * block, block), :] = jnp.where(mapped, kp_ref[0, 0], jnp.int8(0))
+    vacc[pl.ds(b * block, block), :] = jnp.where(mapped, vp_ref[0, 0], jnp.int8(0))
+    ksacc[pl.ds(b, 1), :] = jnp.where(mapped, ks_ref[0, 0], 1e-12).reshape(1, 1)
+    vsacc[pl.ds(b, 1), :] = jnp.where(mapped, vs_ref[0, 0], 1e-12).reshape(1, 1)
+
+    @pl.when(b == nb - 1)
+    def _():
+        out_ref[0, 0] = _attn_math(q_ref[0, 0], kacc[...], ksacc[...],
+                                   vacc[...], vsacc[...], mask_ref[...],
+                                   k_bits=k_bits, v_bits=v_bits, hd=hd,
+                                   block=block)
+
+
+@functools.partial(jax.jit, static_argnames=("k_bits", "v_bits", "hd", "block",
+                                             "interpret"))
+def quant_kv_attention_paged_pallas(
+    table: jax.Array,     # (B, S/block) int32 block table; -1 = unmapped
+    q: jax.Array,         # (B, n_kv, g, hd) float
+    k_packed: jax.Array,  # (P, n_kv, block, hd/lanes_k) int8 — the pool
+    k_scale: jax.Array,   # (P, n_kv, 1, 1) f32
+    v_packed: jax.Array,
+    v_scale: jax.Array,
+    mask: jax.Array,      # (B, S) f32 additive (0 valid / -1e30 invalid)
+    *,
+    k_bits: int,
+    v_bits: int,
+    hd: int,
+    block: int,
+    interpret: bool = False,
+) -> jax.Array:
+    """Fused dequant-attention over a block-table-mapped pool.
+
+    The scalar-prefetched table row drives the K/V BlockSpec index maps, so
+    each (slot, head) program DMAs exactly the pool blocks its table maps —
+    never the whole pool — then runs the SAME attention math as the dense
+    kernel on the gathered (S, ·) scratch.
+    """
+    b, n_kv, g, _ = q.shape
+    nb = table.shape[1]
+    s = nb * block
+    hk, hv = k_packed.shape[-1], v_packed.shape[-1]
+    phys = lambda i, j, blk, tbl: jnp.maximum(tbl[i, blk], 0)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, n_kv, nb),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, hd), lambda i, j, blk, tbl: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, block, hk),
+                         lambda i, j, blk, tbl: (phys(i, j, blk, tbl), j, 0, 0)),
+            pl.BlockSpec((1, 1, 1, 1),
+                         lambda i, j, blk, tbl: (phys(i, j, blk, tbl), j, 0, 0)),
+            pl.BlockSpec((1, 1, block, hv),
+                         lambda i, j, blk, tbl: (phys(i, j, blk, tbl), j, 0, 0)),
+            pl.BlockSpec((1, 1, 1, 1),
+                         lambda i, j, blk, tbl: (phys(i, j, blk, tbl), j, 0, 0)),
+            pl.BlockSpec((1, s), lambda i, j, blk, tbl: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, hd), lambda i, j, blk, tbl: (i, j, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((s, hk), jnp.int8), pltpu.VMEM((nb, 1), jnp.float32),
+            pltpu.VMEM((s, hv), jnp.int8), pltpu.VMEM((nb, 1), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_paged_attn_kernel, k_bits=k_bits, v_bits=v_bits,
+                          hd=hd, block=block),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, n_kv, g, hd), jnp.float32),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(jnp.asarray(table, jnp.int32), q, k_packed, k_scale, v_packed, v_scale,
+      mask)
+
+
+def _paged_append_kernel(pos_ref, tbl_ref, new_ref, packed_ref, scale_ref,
+                         blk_ref, sc_ref, *, bits: int, hd: int, block: int):
+    del tbl_ref  # consumed by the index maps; requant math is table-agnostic
+    _append_kernel(pos_ref, new_ref, packed_ref, scale_ref, blk_ref, sc_ref,
+                   bits=bits, hd=hd, block=block)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "hd", "block", "interpret"))
+def quant_kv_append_paged_pallas(
+    pos: jax.Array,      # (B,) int32 per-slot write positions
+    table: jax.Array,    # (B, S/block) int32 block table
+    new: jax.Array,      # (B, H, hd) float — the new token's K (or V)
+    packed: jax.Array,   # (P, H, block, hd/lanes) int8 — the pool
+    scale: jax.Array,    # (P, H, 1, 1) f32
+    *,
+    bits: int,
+    hd: int,
+    block: int,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Paged variant of the append: the scalar-prefetched (pos, table) pair
+    selects the ONE physical pool block each slot's write lands in; the
+    kernel body (shared with the dense append) dequantizes it, inserts the
+    row, and requantizes.  The caller scatters the emitted block + scale
+    back into the pool at the same physical ids (ops.place_paged_block)."""
+    b, h = new.shape[:2]
+    hdp = packed.shape[-1]
+    phys = lambda i, pos_r, tbl_r: jnp.maximum(tbl_r[i, pos_r[i] // block], 0)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, h, hd), lambda i, pos_r, tbl_r: (i, 0, 0)),
+            pl.BlockSpec((1, h, block, hdp),
+                         lambda i, pos_r, tbl_r: (phys(i, pos_r, tbl_r), 0, 0, 0)),
+            pl.BlockSpec((1, h, 1, 1),
+                         lambda i, pos_r, tbl_r: (phys(i, pos_r, tbl_r), 0, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, h, block, hdp), lambda i, pos_r, tbl_r: (i, 0, 0, 0)),
+            pl.BlockSpec((1, h, 1, 1), lambda i, pos_r, tbl_r: (i, 0, 0, 0)),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_paged_append_kernel, bits=bits, hd=hd, block=block),
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((b, h, block, hdp), jnp.int8),
+                   jax.ShapeDtypeStruct((b, h, 1, 1), jnp.float32)],
+        interpret=interpret,
+    )(jnp.asarray(pos, jnp.int32), jnp.asarray(table, jnp.int32), new, packed,
+      scale)

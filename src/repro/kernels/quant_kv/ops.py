@@ -6,9 +6,11 @@
   "interpret"  the Pallas kernel bodies interpreted on CPU (tests)
   "auto"       pallas on TPU backends, xla elsewhere
 
-Both ops take/return the ``kvcache.cache.QuantizedKVLayer`` container, so
-``models/layers.attention_decode_quant`` is the only call site that needs
-to know the dispatch surface exists.
+Both ops take/return the cache container — the dense
+``kvcache.cache.QuantizedKVLayer`` or the paged
+``kvcache.paged.PagedKVLayer`` (block-pool + block-table layout); the op
+dispatches on the container type, so ``models/layers.attention_decode_quant``
+is the only call site that needs to know the dispatch surface exists.
 """
 from __future__ import annotations
 
@@ -18,9 +20,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.kvcache.cache import QuantizedKVLayer
+from repro.kvcache.paged import PagedKVLayer, TRASH_BLOCK
 
-from .kernel import quant_kv_append_pallas, quant_kv_attention_pallas
-from .ref import quant_kv_append_ref, quant_kv_attention_ref
+from .kernel import (quant_kv_append_paged_pallas, quant_kv_append_pallas,
+                     quant_kv_attention_paged_pallas, quant_kv_attention_pallas)
+from .ref import (quant_kv_append_paged_ref, quant_kv_append_ref,
+                  quant_kv_attention_paged_ref, quant_kv_attention_ref)
 
 
 def _backend() -> str:
@@ -35,27 +40,36 @@ def _resolve(impl: str) -> str:
 
 def quant_kv_attention(
     q: jax.Array,                # (B, 1, hq, hd) or (B, hq, hd)
-    layer: QuantizedKVLayer,
+    layer,                       # QuantizedKVLayer | PagedKVLayer
     kv_valid: jax.Array,         # (B, S) bool
     *,
     impl: str = "auto",
     out_dtype=None,
 ) -> jax.Array:
-    """One decode token per slot attends over the packed cache."""
+    """One decode token per slot attends over the packed (dense or paged) cache."""
     impl = _resolve(impl)
+    paged = isinstance(layer, PagedKVLayer)
     lead4 = q.ndim == 4
     q3 = q[:, 0] if lead4 else q                      # (B, hq, hd)
     if impl == "xla":
-        o = quant_kv_attention_ref(q3, layer, kv_valid, out_dtype=out_dtype)
+        ref = quant_kv_attention_paged_ref if paged else quant_kv_attention_ref
+        o = ref(q3, layer, kv_valid, out_dtype=out_dtype)
     elif impl in ("pallas", "interpret"):
         b, s, n_kv, hd = layer.shape
         g = q3.shape[1] // n_kv
         qg = q3.reshape(b, n_kv, g, hd)
         mask = jnp.where(kv_valid, 0.0, -1e30).astype(jnp.float32)
-        o = quant_kv_attention_pallas(
-            qg, layer.k_packed, layer.k_scale, layer.v_packed, layer.v_scale,
-            mask, k_bits=layer.k_bits, v_bits=layer.v_bits, hd=hd,
-            block=layer.block, interpret=impl == "interpret")
+        if paged:
+            o = quant_kv_attention_paged_pallas(
+                layer.block_table, qg, layer.k_packed, layer.k_scale,
+                layer.v_packed, layer.v_scale, mask, k_bits=layer.k_bits,
+                v_bits=layer.v_bits, hd=hd, block=layer.block,
+                interpret=impl == "interpret")
+        else:
+            o = quant_kv_attention_pallas(
+                qg, layer.k_packed, layer.k_scale, layer.v_packed, layer.v_scale,
+                mask, k_bits=layer.k_bits, v_bits=layer.v_bits, hd=hd,
+                block=layer.block, interpret=impl == "interpret")
         o = o.reshape(b, n_kv * g, hd).astype(out_dtype or q.dtype)
     else:
         raise ValueError(f"unknown impl {impl!r}")
@@ -75,18 +89,31 @@ def place_block(packed: jax.Array, scale: jax.Array, blk: jax.Array,
     return jax.vmap(one)(packed, scale, blk, sc, jnp.asarray(pos, jnp.int32))
 
 
+def place_paged_block(pool: jax.Array, scale: jax.Array, blk: jax.Array,
+                      sc: jax.Array, phys: jax.Array):
+    """Scatter per-slot requantized blocks back into the pool at ``phys``.
+
+    Active slots own their target block exclusively (the engine's CoW
+    guarantee), so real ids never collide; idle slots all clamp to the
+    trash block, where last-write-wins is harmless by construction.
+    """
+    return pool.at[phys].set(blk), scale.at[phys].set(sc)
+
+
 def quant_kv_append(
-    layer: QuantizedKVLayer,
+    layer,                       # QuantizedKVLayer | PagedKVLayer
     pos: jax.Array,              # (B,) or scalar int32
     k_new: jax.Array,            # (B, 1, H, hd) float
     v_new: jax.Array,
     *,
     impl: str = "auto",
-) -> QuantizedKVLayer:
+):
     """Write one decode token's K/V; requantizes only the touched block."""
     impl = _resolve(impl)
+    paged = isinstance(layer, PagedKVLayer)
     if impl == "xla":
-        return quant_kv_append_ref(layer, pos, k_new, v_new)
+        ref = quant_kv_append_paged_ref if paged else quant_kv_append_ref
+        return ref(layer, pos, k_new, v_new)
     if impl not in ("pallas", "interpret"):
         raise ValueError(f"unknown impl {impl!r}")
     interp = impl == "interpret"
@@ -95,13 +122,29 @@ def quant_kv_append(
     kh = jnp.swapaxes(k_new, 1, 2)[:, :, 0]           # (B, H, hd)
     vh = jnp.swapaxes(v_new, 1, 2)[:, :, 0]
     hd = layer.head_dim
-    kb, ks = quant_kv_append_pallas(pos, kh, layer.k_packed, layer.k_scale,
-                                    bits=layer.k_bits, hd=hd,
-                                    block=layer.block, interpret=interp)
-    vb, vs = quant_kv_append_pallas(pos, vh, layer.v_packed, layer.v_scale,
-                                    bits=layer.v_bits, hd=hd,
-                                    block=layer.block, interpret=interp)
-    kp, ksc = place_block(layer.k_packed, layer.k_scale, kb, ks, pos, layer.block)
-    vp, vsc = place_block(layer.v_packed, layer.v_scale, vb, vs, pos, layer.block)
+    if paged:
+        tbl = layer.block_table
+        kb, ks = quant_kv_append_paged_pallas(
+            pos, tbl, kh, layer.k_packed, layer.k_scale, bits=layer.k_bits,
+            hd=hd, block=layer.block, interpret=interp)
+        vb, vs = quant_kv_append_paged_pallas(
+            pos, tbl, vh, layer.v_packed, layer.v_scale, bits=layer.v_bits,
+            hd=hd, block=layer.block, interpret=interp)
+        phys = jnp.maximum(
+            jnp.take_along_axis(tbl, (pos // layer.block)[:, None], axis=1)[:, 0],
+            TRASH_BLOCK)
+        kp, ksc = place_paged_block(layer.k_packed, layer.k_scale, kb, ks, phys)
+        vp, vsc = place_paged_block(layer.v_packed, layer.v_scale, vb, vs, phys)
+    else:
+        kb, ks = quant_kv_append_pallas(pos, kh, layer.k_packed, layer.k_scale,
+                                        bits=layer.k_bits, hd=hd,
+                                        block=layer.block, interpret=interp)
+        vb, vs = quant_kv_append_pallas(pos, vh, layer.v_packed, layer.v_scale,
+                                        bits=layer.v_bits, hd=hd,
+                                        block=layer.block, interpret=interp)
+        kp, ksc = place_block(layer.k_packed, layer.k_scale, kb, ks, pos,
+                              layer.block)
+        vp, vsc = place_block(layer.v_packed, layer.v_scale, vb, vs, pos,
+                              layer.block)
     return dataclasses.replace(layer, k_packed=kp, k_scale=ksc,
                                v_packed=vp, v_scale=vsc)

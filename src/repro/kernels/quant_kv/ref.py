@@ -56,3 +56,27 @@ def quant_kv_append_ref(layer: QuantizedKVLayer, pos: jax.Array,
                         k_new: jax.Array, v_new: jax.Array) -> QuantizedKVLayer:
     """One-token append: requantize exactly the block containing ``pos``."""
     return append_token(layer, pos, k_new, v_new)
+
+
+# ---------------------------------------------------------------------------
+# paged variants (DESIGN.md §12)
+# ---------------------------------------------------------------------------
+
+
+def quant_kv_attention_paged_ref(q: jax.Array, layer, kv_valid: jax.Array, *,
+                                 out_dtype=None) -> jax.Array:
+    """Oracle for the paged attention: gather the table-mapped blocks into
+    the dense layout (``kvcache.paged.to_dense``) and run the dense oracle —
+    bitwise-identical to a dense cache holding the same contents."""
+    from repro.kvcache.paged import to_dense
+
+    return quant_kv_attention_ref(q, to_dense(layer), kv_valid,
+                                  out_dtype=out_dtype)
+
+
+def quant_kv_append_paged_ref(layer, pos: jax.Array, k_new: jax.Array,
+                              v_new: jax.Array):
+    """Oracle for the paged append: requantize each slot's mapped block."""
+    from repro.kvcache.paged import append_token_paged
+
+    return append_token_paged(layer, pos, k_new, v_new)

@@ -10,6 +10,12 @@ from .cache import (  # noqa: F401
     insert_state_rows,
     quantize_kv_rows,
 )
+from .paged import (  # noqa: F401
+    BlockPool,
+    PagedKVLayer,
+    init_paged_layer,
+    pool_blocks_for_budget,
+)
 from .policy import (  # noqa: F401
     kv_entry_names,
     packed_state_bits,

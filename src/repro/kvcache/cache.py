@@ -210,41 +210,57 @@ def insert_state_rows(state, ids: jax.Array, st_new, valid_len: jax.Array):
     return walk(state, st_new)
 
 
+def requantize_block(blk_fp: jax.Array, new: jax.Array, off: jax.Array,
+                     bits: int):
+    """Insert ``new`` at ``off`` into a dequantized block and requantize.
+
+    ``blk_fp``: f32 (B, H, block, hd); ``new``: (B, H, hd); ``off``: (B,).
+    Positions > off zero out (container invariant), so a stale previous
+    occupant can neither leak into attention nor inflate the fresh scale.
+
+    THE single jnp source of the append-requant math: both the dense
+    (:func:`_append_side`) and the paged (``paged.append_token_paged``)
+    layouts call it, so their packed levels stay bit-identical — the
+    invariant the engine's dense-vs-paged token equality and the paged
+    shared-prefix scheme both ride on.  (The Pallas ``_append_kernel`` body
+    is the kernel-side counterpart; the parity harness pins the two.)
+    """
+    q = quantizer.qmax(bits)
+    idx = jnp.arange(blk_fp.shape[2])[None, None, :, None]
+    offb = off[:, None, None, None]
+    fp = jnp.where(idx < offb, blk_fp, 0.0)
+    fp = jnp.where(idx == offb, new.astype(jnp.float32)[:, :, None, :], fp)
+    amax = jnp.max(jnp.abs(fp), axis=(2, 3), keepdims=True)    # (B, H, 1, 1)
+    sc = jnp.maximum(amax, 1e-12) / q
+    lev = jnp.clip(jnp.round(fp / sc), -q, q).astype(jnp.int32)
+    return packing.pack(lev, bits), sc
+
+
 def _append_side(packed: jax.Array, scale: jax.Array, new: jax.Array,
                  pos: jax.Array, bits: int, hd: int, block: int):
     """Requantize only the block containing ``pos`` with the new row inserted.
 
     ``new``: fp (B, H, hd); ``pos``: (B,) int32 per-slot write positions.
-    Positions > pos inside the block are zeroed (container invariant), so a
-    stale previous occupant can neither leak into attention nor inflate the
-    fresh scale.
 
-    Written as one gather (take_along_axis on the block axis) + dense math +
-    one full-array select per buffer: per-slot dynamic-slice/scatter chains
-    lower to gathers over tiny operands that dominate the decode step on the
-    XLA fallback path, while the select fuses.
+    Written as one gather (take_along_axis on the block axis) + dense math
+    (:func:`requantize_block`) + one full-array select per buffer: per-slot
+    dynamic-slice/scatter chains lower to gathers over tiny operands that
+    dominate the decode step on the XLA fallback path, while the select
+    fuses.
     """
-    q = quantizer.qmax(bits)
     b, h, s, hdp = packed.shape
     nb = s // block
     bidx = pos // block                                        # (B,)
     off = pos % block
     view = packed.reshape(b, h, nb, block, hdp)
     blk = jnp.take_along_axis(view, bidx[:, None, None, None, None], axis=2)
-    lev = packing.unpack(blk, bits, hd)                        # (B, H, 1, block, hd)
+    lev = packing.unpack(blk, bits, hd)[:, :, 0]               # (B, H, block, hd)
     sc_b = jnp.take_along_axis(scale, bidx[:, None, None, None], axis=2)
-    fp = lev.astype(jnp.float32) * sc_b[..., None]             # (B, H, 1, 1, 1) bc
-    idx = jnp.arange(block)[None, None, None, :, None]
-    offb = off[:, None, None, None, None]
-    fp = jnp.where(idx < offb, fp, 0.0)
-    fp = jnp.where(idx == offb, new.astype(jnp.float32)[:, :, None, None, :], fp)
-    amax = jnp.max(jnp.abs(fp), axis=(3, 4), keepdims=True)    # (B, H, 1, 1, 1)
-    sc_new = jnp.maximum(amax, 1e-12) / q
-    blk_new = packing.pack(jnp.clip(jnp.round(fp / sc_new), -q, q).astype(jnp.int32),
-                           bits)                               # (B, H, 1, block, hdp)
+    fp = lev.astype(jnp.float32) * sc_b                        # (B, H, 1, 1) bc
+    blk_new, sc_new = requantize_block(fp, new, off, bits)
     at_block = (jnp.arange(nb) == bidx[:, None])[:, None, :, None, None]
-    packed2 = jnp.where(at_block, blk_new, view).reshape(b, h, s, hdp)
-    scale2 = jnp.where(at_block[..., 0], sc_new[..., 0], scale)
+    packed2 = jnp.where(at_block, blk_new[:, :, None], view).reshape(b, h, s, hdp)
+    scale2 = jnp.where(at_block[..., 0], sc_new, scale)
     return packed2, scale2
 
 

@@ -33,7 +33,7 @@ class KVQuantEnv(QuantEnvBase):
 
     def __init__(self, serve_params: dict, cfg, calib_tokens, *, slots: int,
                  max_seq: int, block: int = DEFAULT_BLOCK, cost_model=None,
-                 qimpl: str = "auto"):
+                 qimpl: str = "auto", allocated_tokens: int | None = None):
         from repro.cost import ShiftAddCostModel
         from repro.models import registry
 
@@ -45,7 +45,12 @@ class KVQuantEnv(QuantEnvBase):
         self.qimpl = qimpl
         self.cost_model = cost_model or ShiftAddCostModel()
         self._api = registry.get_api(cfg)
-        self._specs = state_layer_infos(cfg, slots, max_seq)
+        # allocated_tokens: price a paged pool's live blocks instead of the
+        # dense (slots, max_seq) worst case (DESIGN.md §12).  Fidelity is
+        # still scored on a dense calibration cache — paged blocks hold
+        # bit-identical contents, so the quality measure transfers exactly.
+        self._specs = state_layer_infos(cfg, slots, max_seq,
+                                        allocated_tokens=allocated_tokens)
 
         # one calibration prefill: capture the fp K/V every entry sees
         toks = jnp.asarray(calib_tokens, jnp.int32)

@@ -1,0 +1,359 @@
+"""Paged quantized KV-cache: block pool + per-request block tables (DESIGN.md §12).
+
+The dense ``QuantizedKVLayer`` allocates one ``(max_slots, max_seq)``
+container per layer, so a 32-token request pays for the full ``max_seq`` of
+sigma-budgeted state.  The paged design splits the cache into physical
+*blocks* of ``block`` sequence positions — exactly the per-(slot, head,
+seq-block) scale granularity the dense layout already quantizes at — and
+maps them on demand:
+
+  * ``PagedKVLayer`` holds one packed int-lane **pool** per layer per side
+    (``(P, H, block, hd/lanes)`` int8 + ``(P, H, 1, 1)`` f32 scales) and a
+    per-slot ``block_table`` ``(B, max_seq/block)`` int32 mapping logical
+    sequence blocks to physical pool blocks (``-1`` = unmapped).  Physical
+    block 0 is reserved as the *trash block*: idle slots' lockstep appends
+    land there (clamped from ``-1``) so they can never corrupt live state.
+  * ``BlockPool`` is the host-side allocator: LIFO free list + per-block
+    refcounts.  Shared-prefix admission maps the same physical blocks into
+    several slots (refcount > 1); the first append into a shared block
+    copies it first (copy-on-write, serve/engine.py).
+  * The block-table kernels live in ``kernels/quant_kv`` behind the same
+    ``auto/pallas/xla/interpret`` dispatch as the dense ops — attention
+    scalar-prefetches the table row and DMAs only mapped blocks.
+
+Content parity with the dense layout is *bitwise*: blocks quantize with the
+same ``_block_quantize`` / append-requant math, so a paged cache holding the
+same rows as a dense cache produces bit-identical attention output — the
+invariant ``tests/test_paged_kvcache.py`` pins and the serve engine's
+dense-vs-paged token equality rides on.
+
+Zero-beyond-write carries over: a freshly mapped block is fully overwritten
+by its first write (prefill insertion quantizes whole blocks; appends zero
+every position past the write offset), and attention zero-fills unmapped
+table entries, so a freed block's previous occupant can never leak into a
+later request — even across free -> realloc.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import packing
+
+from .cache import (DEFAULT_BLOCK, _block_quantize, requantize_block,
+                    resolve_block)
+
+#: physical block id 0 is never allocated: it absorbs idle-slot appends
+TRASH_BLOCK = 0
+
+
+@dataclasses.dataclass
+class PagedKVLayer:
+    """One attention layer's paged packed decode state (pytree)."""
+
+    k_packed: jax.Array     # int8 (P, H, block, hd/lanes_k) — the K pool
+    k_scale: jax.Array      # f32  (P, H, 1, 1) — one scale per (block, head)
+    v_packed: jax.Array     # int8 (P, H, block, hd/lanes_v)
+    v_scale: jax.Array      # f32  (P, H, 1, 1)
+    block_table: jax.Array  # int32 (B, max_seq/block); -1 = unmapped
+    k_bits: int             # static
+    v_bits: int             # static
+    block: int              # static
+    shape: tuple[int, ...]  # static logical (B, max_seq, H, hd)
+
+    @property
+    def seq(self) -> int:
+        return self.shape[1]
+
+    @property
+    def head_dim(self) -> int:
+        return self.shape[3]
+
+    @property
+    def num_blocks(self) -> int:
+        return self.k_packed.shape[0]
+
+    def bytes_per_block(self) -> int:
+        """Packed + scale bytes ONE physical block occupies (both sides)."""
+        _, _, h, hd = self.shape
+        packed = sum(packing.container_bytes((h, self.block, hd), bits)
+                     for bits in (self.k_bits, self.v_bits))
+        return packed + 2 * 4 * h  # two f32 scales per (block, head)
+
+    def container_bytes(self) -> int:
+        """Whole-pool footprint in HBM (incl. the block table)."""
+        return self.num_blocks * self.bytes_per_block() + 4 * self.block_table.size
+
+    def allocated_bytes(self, n_blocks: int) -> int:
+        """Footprint of ``n_blocks`` live blocks — what the budget prices."""
+        return n_blocks * self.bytes_per_block()
+
+
+jax.tree_util.register_dataclass(
+    PagedKVLayer,
+    data_fields=["k_packed", "k_scale", "v_packed", "v_scale", "block_table"],
+    meta_fields=["k_bits", "v_bits", "block", "shape"],
+)
+
+
+def init_paged_layer(num_blocks: int, slots: int, max_seq: int, n_kv: int,
+                     hd: int, *, k_bits: int, v_bits: int,
+                     block: int = DEFAULT_BLOCK) -> PagedKVLayer:
+    """All-unmapped paged cache with ``num_blocks`` physical blocks (+ trash).
+
+    ``num_blocks`` counts *usable* blocks; the reserved trash block is added
+    on top so a budget of N blocks really buys N blocks of live state.
+    """
+    packing.check_bits(k_bits)
+    packing.check_bits(v_bits)
+    block = resolve_block(max_seq, block)
+    if num_blocks < 1:
+        raise ValueError(f"pool needs at least one usable block, got {num_blocks}")
+    p = num_blocks + 1  # + trash
+    mk = lambda bits: jnp.zeros((p, n_kv, block, -(-hd // packing.LANES[bits])),
+                                jnp.int8)
+    sc = lambda: jnp.full((p, n_kv, 1, 1), 1e-12, jnp.float32)
+    table = jnp.full((slots, max_seq // block), -1, jnp.int32)
+    return PagedKVLayer(k_packed=mk(k_bits), k_scale=sc(), v_packed=mk(v_bits),
+                        v_scale=sc(), block_table=table, k_bits=int(k_bits),
+                        v_bits=int(v_bits), block=block,
+                        shape=(slots, max_seq, n_kv, hd))
+
+
+def pool_blocks_for_budget(state_bits: list[tuple[int, int]], n_kv: int,
+                           hd: int, block: int, budget_bytes: float) -> int:
+    """Max usable physical blocks a ``state_bytes`` budget buys.
+
+    One "block" here is one *logical* block across every layer (the
+    allocator hands out the same physical id in each layer's pool), so the
+    per-block price sums the per-layer K+V packed lanes and scales.
+    """
+    per_block = 0
+    for kb, vb in state_bits:
+        per_block += sum(packing.container_bytes((n_kv, block, hd), bits)
+                         for bits in (kb, vb))
+        per_block += 2 * 4 * n_kv
+    n = int(budget_bytes // per_block)
+    if n < 1:
+        raise ValueError(
+            f"state_bytes budget {budget_bytes:g} buys zero blocks "
+            f"({per_block} B/block across {len(state_bits)} layers)")
+    return n
+
+
+# ---------------------------------------------------------------------------
+# host-side allocator
+# ---------------------------------------------------------------------------
+
+
+class BlockPool:
+    """Free-list block allocator with refcounts (host side, not a pytree).
+
+    Physical ids are shared across every layer's pool buffers — one
+    allocation maps the same id in all layers.  Refcounts > 1 mark blocks
+    mapped into several slots (shared prefixes); ``decref`` returns a block
+    to the free list only when its last reference drops.
+    """
+
+    def __init__(self, num_blocks: int):
+        if num_blocks < 1:
+            raise ValueError("BlockPool needs at least one usable block")
+        self.num_blocks = num_blocks
+        # LIFO free list over usable ids [1, num_blocks]; 0 is the trash block
+        self._free = list(range(num_blocks, TRASH_BLOCK, -1))
+        self._ref = np.zeros(num_blocks + 1, np.int32)
+        self.reserved = 0  # blocks promised to admitted requests' future growth
+        self.peak_allocated = 0
+        self.cow_copies = 0
+        self.shared_maps = 0
+
+    @property
+    def free_count(self) -> int:
+        return len(self._free)
+
+    @property
+    def available(self) -> int:
+        """Free blocks not already promised to an admitted request."""
+        return len(self._free) - self.reserved
+
+    @property
+    def allocated(self) -> int:
+        return self.num_blocks - len(self._free)
+
+    def reserve(self, n: int) -> None:
+        """Promise ``n`` future blocks (admission-time growth accounting:
+        every admitted request's decode appends and copy-on-write splits are
+        pre-counted, so a mid-decode allocation can never strand it)."""
+        assert n <= self.available, (n, self.available)
+        self.reserved += n
+
+    def unreserve(self, n: int) -> None:
+        assert n <= self.reserved, (n, self.reserved)
+        self.reserved -= n
+
+    def refcount(self, bid: int) -> int:
+        return int(self._ref[bid])
+
+    def alloc(self) -> int:
+        if not self._free:
+            raise RuntimeError(
+                f"block pool exhausted ({self.num_blocks} blocks allocated); "
+                f"raise the state_bytes budget / pool_blocks or admit fewer "
+                f"concurrent requests")
+        bid = self._free.pop()
+        self._ref[bid] = 1
+        self.peak_allocated = max(self.peak_allocated, self.allocated)
+        return bid
+
+    def incref(self, bid: int) -> int:
+        assert bid != TRASH_BLOCK and self._ref[bid] > 0, bid
+        self._ref[bid] += 1
+        self.shared_maps += 1
+        return bid
+
+    def decref(self, bid: int) -> None:
+        if bid == TRASH_BLOCK:
+            return
+        assert self._ref[bid] > 0, f"double free of block {bid}"
+        self._ref[bid] -= 1
+        if self._ref[bid] == 0:
+            self._free.append(bid)
+
+
+# ---------------------------------------------------------------------------
+# dense view (reference path + tests)
+# ---------------------------------------------------------------------------
+
+
+def to_dense(layer: PagedKVLayer):
+    """Gather the paged pool into the dense ``QuantizedKVLayer`` layout.
+
+    Mapped blocks gather their pool bytes; unmapped positions read as zero
+    levels with the init scale — exactly what a dense cache holds where
+    nothing was written.  This makes the xla/interpret paged attention
+    *bitwise* equal to the dense path on identical contents.
+    """
+    from .cache import QuantizedKVLayer
+
+    b, s, h, hd = layer.shape
+    nb = s // layer.block
+    tbl = layer.block_table                              # (B, nb)
+    mapped = (tbl >= 0)[:, :, None, None, None]          # (B, nb, 1, 1, 1)
+    idx = jnp.maximum(tbl, 0)
+
+    def side(pool, scale):
+        blk = jnp.take(pool, idx, axis=0)                # (B, nb, H, block, hdp)
+        blk = jnp.where(mapped, blk, jnp.int8(0))
+        packed = jnp.moveaxis(blk, 2, 1).reshape(b, h, s, pool.shape[-1])
+        sc = jnp.take(scale[..., 0, 0], idx, axis=0)     # (B, nb, H)
+        sc = jnp.where(mapped[..., 0, 0, 0][..., None], sc, 1e-12)
+        return packed, jnp.moveaxis(sc, 2, 1)[..., None]  # (B, H, nb, 1)
+
+    kp, ks = side(layer.k_packed, layer.k_scale)
+    vp, vs = side(layer.v_packed, layer.v_scale)
+    return QuantizedKVLayer(k_packed=kp, k_scale=ks, v_packed=vp, v_scale=vs,
+                            k_bits=layer.k_bits, v_bits=layer.v_bits,
+                            block=layer.block, shape=layer.shape)
+
+
+# ---------------------------------------------------------------------------
+# prefill insertion (engine admission)
+# ---------------------------------------------------------------------------
+
+
+def insert_prefill_rows(layer: PagedKVLayer, row_tables, k_new: jax.Array,
+                        v_new: jax.Array,
+                        valid_len: jax.Array | None = None) -> PagedKVLayer:
+    """Quantize fp prefill rows ``(N, P, H, hd)`` into their mapped blocks.
+
+    ``row_tables`` is ``(N, ceil(P/block))`` int32 of *physical* destination
+    ids per (row, logical block); entries < 0 skip the write (shared-prefix
+    blocks a donor slot already holds, or pad blocks past the row's
+    coverage) by redirecting the scatter to the trash block.  Quantization
+    is the dense path's ``_block_quantize`` — identical rows produce
+    bit-identical blocks, which is what makes prefix sharing exact.
+    """
+    n, p, h, hd = k_new.shape
+    pad = (-p) % layer.block
+    if pad:
+        zeros = ((0, 0), (0, pad), (0, 0), (0, 0))
+        k_new = jnp.pad(k_new.astype(jnp.float32), zeros)
+        v_new = jnp.pad(v_new.astype(jnp.float32), zeros)
+        p += pad
+    npb = p // layer.block
+    row_tables = jnp.asarray(row_tables, jnp.int32)
+    if row_tables.shape != (n, npb):
+        raise ValueError(f"row_tables {row_tables.shape} != {(n, npb)}")
+    dest = jnp.maximum(row_tables, TRASH_BLOCK).reshape(-1)  # (N*npb,)
+
+    kh = jnp.swapaxes(k_new, 1, 2).astype(jnp.float32)       # (N, H, P, hd)
+    vh = jnp.swapaxes(v_new, 1, 2).astype(jnp.float32)
+    if valid_len is not None:
+        keep = (jnp.arange(p) < valid_len[:, None])[:, None, :, None]
+        kh = jnp.where(keep, kh, 0.0)
+        vh = jnp.where(keep, vh, 0.0)
+
+    def side(pool, scale, x, bits):
+        packed, sc = _block_quantize(x, bits, layer.block)   # (N,H,P,hdp), (N,H,nb,1)
+        blk = packed.reshape(n, h, npb, layer.block, -1)
+        blk = jnp.moveaxis(blk, 2, 1).reshape(n * npb, h, layer.block, -1)
+        scb = jnp.moveaxis(sc, 2, 1).reshape(n * npb, h, 1, 1)
+        return pool.at[dest].set(blk), scale.at[dest].set(scb)
+
+    kp, ks = side(layer.k_packed, layer.k_scale, kh, layer.k_bits)
+    vp, vs = side(layer.v_packed, layer.v_scale, vh, layer.v_bits)
+    return dataclasses.replace(layer, k_packed=kp, k_scale=ks,
+                               v_packed=vp, v_scale=vs)
+
+
+def append_token_paged(layer: PagedKVLayer, pos: jax.Array, k_new: jax.Array,
+                       v_new: jax.Array) -> PagedKVLayer:
+    """Write one decode token per slot into its mapped block (jnp reference).
+
+    ``k_new``/``v_new``: fp ``(B, 1, H, hd)``; ``pos``: () or (B,) int32.
+    The engine guarantees the target block of every *active* slot is mapped
+    and exclusively owned (copy-on-write happens host-side before the
+    step); idle slots' tables read ``-1`` and clamp to the trash block.
+    """
+    b = k_new.shape[0]
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1), (b,))
+    bidx = pos // layer.block
+    phys = jnp.maximum(
+        jnp.take_along_axis(layer.block_table, bidx[:, None], axis=1)[:, 0],
+        TRASH_BLOCK)                                          # (B,)
+    off = pos % layer.block
+    kh = jnp.swapaxes(k_new, 1, 2)[:, :, 0].astype(jnp.float32)  # (B, H, hd)
+    vh = jnp.swapaxes(v_new, 1, 2)[:, :, 0].astype(jnp.float32)
+
+    def side(pool, scale, new, bits):
+        blk = jnp.take(pool, phys, axis=0)                    # (B, H, block, hdp)
+        sc = jnp.take(scale, phys, axis=0)                    # (B, H, 1, 1)
+        lev = packing.unpack(blk, bits, layer.head_dim)
+        fp = lev.astype(jnp.float32) * sc
+        blk_new, sc_new = requantize_block(fp, new, off, bits)
+        return pool.at[phys].set(blk_new), scale.at[phys].set(sc_new)
+
+    kp, ks = side(layer.k_packed, layer.k_scale, kh, layer.k_bits)
+    vp, vs = side(layer.v_packed, layer.v_scale, vh, layer.v_bits)
+    return dataclasses.replace(layer, k_packed=kp, k_scale=ks,
+                               v_packed=vp, v_scale=vs)
+
+
+def copy_blocks(layer: PagedKVLayer, src: jax.Array, dst: jax.Array) -> PagedKVLayer:
+    """Device-copy pool blocks ``src -> dst`` in every buffer (copy-on-write)."""
+    src = jnp.asarray(src, jnp.int32)
+    dst = jnp.asarray(dst, jnp.int32)
+    cp = lambda buf: buf.at[dst].set(jnp.take(buf, src, axis=0))
+    return dataclasses.replace(layer, k_packed=cp(layer.k_packed),
+                               k_scale=cp(layer.k_scale),
+                               v_packed=cp(layer.v_packed),
+                               v_scale=cp(layer.v_scale))
+
+
+def with_table(layer: PagedKVLayer, table) -> PagedKVLayer:
+    """Swap in a new host-built block table (admission / CoW / free)."""
+    return dataclasses.replace(layer,
+                               block_table=jnp.asarray(table, jnp.int32))

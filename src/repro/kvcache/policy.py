@@ -25,6 +25,7 @@ from typing import Any
 from repro.core.policy import BitPolicy, LayerInfo, PolicyArtifact, layer_registry_hash
 
 from .cache import QuantizedKVLayer
+from .paged import PagedKVLayer
 
 #: families whose decode state has quantizable KV entries
 KV_FAMILIES = ("dense", "moe", "vlm", "hybrid")
@@ -40,16 +41,28 @@ def kv_entry_names(cfg) -> list[str]:
     return []
 
 
-def state_layer_infos(cfg, batch: int, seq: int) -> tuple[LayerInfo, ...]:
+def state_layer_infos(cfg, batch: int, seq: int, *,
+                      allocated_tokens: int | None = None) -> tuple[LayerInfo, ...]:
     """The quantizable decode-state surface for a serving geometry.
 
     Shape is the full multi-slot cache ``(batch, seq, n_kv, hd)`` so that
     ``BitPolicy.state_bytes()`` prices exactly what the engine allocates;
     macs are the per-decode-step attention MACs that read the entry
     (QK for .k, PV for .v), which is what the roofline FLOPs term wants.
+
+    ``allocated_tokens`` prices a *paged* deployment instead (DESIGN.md
+    §12): the shape collapses to ``(1, allocated_tokens, n_kv, hd)`` — the
+    expected live block coverage rather than the dense worst case — so a
+    ``state_bytes`` budget (and the roofline's per-step state traffic)
+    bounds allocated blocks, not the ``batch * seq`` over-provisioning the
+    paged pool exists to avoid.  Callers round to block granularity.  The
+    geometry-independent ``state_surface_hash`` is unaffected.
     """
     hd = cfg.resolved_head_dim
-    shape = (batch, seq, cfg.n_kv_heads, hd)
+    if allocated_tokens is not None:
+        shape = (1, int(allocated_tokens), cfg.n_kv_heads, hd)
+    else:
+        shape = (batch, seq, cfg.n_kv_heads, hd)
     macs = batch * cfg.n_heads * seq * hd
     infos = [LayerInfo(f"{nm}.state.{side}", shape, macs=macs, kind="state")
              for nm in kv_entry_names(cfg) for side in ("k", "v")]
@@ -116,15 +129,16 @@ def resolve_state_bits(spec, cfg) -> list[tuple[int, int]] | None:
 def extract_kv_entries(state) -> list[tuple[str, Any]]:
     """Ordered (entry-name, node) pairs of a decode-state pytree's KV slots.
 
-    Works on both fp states (nodes are ``{"k", "v"}`` dicts) and quantized
-    states (nodes are ``QuantizedKVLayer``); SSM entries are skipped.
+    Works on fp states (nodes are ``{"k", "v"}`` dicts) and on quantized
+    states, dense (``QuantizedKVLayer``) or paged (``PagedKVLayer``); SSM
+    entries are skipped.
     """
     if isinstance(state, dict) and "attn" in state:  # hybrid
         return [(f"shared_attn.app{j:03d}", e) for j, e in enumerate(state["attn"])]
     if isinstance(state, (list, tuple)):
         out = []
         for i, e in enumerate(state):
-            if isinstance(e, QuantizedKVLayer) or (
+            if isinstance(e, (QuantizedKVLayer, PagedKVLayer)) or (
                     isinstance(e, dict) and set(e) == {"k", "v"}):
                 out.append((f"layer{i:03d}", e))
         return out
@@ -135,7 +149,7 @@ def packed_state_bits(state) -> dict[str, int]:
     """State-entry name -> bits actually packed into a decode-state pytree."""
     out: dict[str, int] = {}
     for nm, node in extract_kv_entries(state):
-        if isinstance(node, QuantizedKVLayer):
+        if isinstance(node, (QuantizedKVLayer, PagedKVLayer)):
             out[f"{nm}.state.k"] = node.k_bits
             out[f"{nm}.state.v"] = node.v_bits
     return out

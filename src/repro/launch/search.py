@@ -49,12 +49,19 @@ def search_policy(env: LMQuantEnv, budget: Budget, *,
                   meta: dict | None = None, state_env=None,
                   state_budget: Budget | None = None,
                   state_config: ControllerConfig | None = None,
+                  pool: dict | None = None,
                   ) -> tuple[PolicyArtifact, SigmaQuantResult]:
     """Run the two-phase search and package the result as a PolicyArtifact.
 
     With ``state_env``/``state_budget`` (a ``kvcache.env.KVQuantEnv`` and a
     ``state_bytes`` budget) a second controller pass allocates the decode-
     state bitwidths; the KV policy is versioned in the same artifact.
+
+    ``pool`` requests paged-pool geometry in the artifact (v3): pass
+    ``{"block": n}`` and the searched state policy's bitwidths size the
+    pool so the whole pool fits the ``state_bytes`` limit — the budget
+    bounds *allocated* blocks, so deployment gets exactly the block count
+    the budget bought (DESIGN.md §12).
     """
     t0 = time.perf_counter()
     result = SigmaQuantController(env, budget, config, log=log).run()
@@ -62,6 +69,7 @@ def search_policy(env: LMQuantEnv, budget: Budget, *,
     meta = dict(meta or {}, success=result.success, abandoned=result.abandoned,
                 acc=result.acc, mean_bits=result.policy.mean_bits())
     state_policy = None
+    pool_geom = None
     if state_env is not None:
         assert state_budget is not None, "state search needs a state_bytes budget"
         sres = SigmaQuantController(state_env, state_budget,
@@ -71,10 +79,23 @@ def search_policy(env: LMQuantEnv, budget: Budget, *,
         meta.update(state_success=sres.success, state_acc=sres.acc,
                     state_mean_bits=state_policy.mean_bits(),
                     fp_state_bytes=state_env.fp_state_bytes())
+        if pool is not None:
+            from repro.kvcache import pool_blocks_for_budget, resolve_state_bits
+
+            cfg = state_env.cfg
+            block = int(pool["block"])
+            limit = next(it.limit for it in state_budget.items
+                         if it.metric == "state_bytes")
+            pool_geom = {
+                "block": block,
+                "num_blocks": pool_blocks_for_budget(
+                    resolve_state_bits(state_policy, cfg), cfg.n_kv_heads,
+                    cfg.resolved_head_dim, block, limit),
+            }
     meta["search_wall_s"] = round(time.perf_counter() - t0, 3)
     artifact = PolicyArtifact.build(
         result.policy, backend=env.cost_model.name, report=report, budget=budget,
-        state_policy=state_policy, meta=meta)
+        state_policy=state_policy, pool=pool_geom, meta=meta)
     return artifact, result
 
 
@@ -131,6 +152,14 @@ def main(argv=None) -> int:
     ap.add_argument("--kv-calib-len", type=int, default=16)
     ap.add_argument("--state-tol", type=float, default=0.15,
                     help="tolerated relative logit error of the quantized state")
+    ap.add_argument("--paged", action="store_true",
+                    help="price/deploy the state as a paged block pool: the "
+                         "state_bytes limit bounds ALLOCATED blocks and the "
+                         "artifact records pool geometry (DESIGN.md §12)")
+    ap.add_argument("--kv-allocated-tokens", type=int, default=None,
+                    help="--paged: expected live KV tokens across slots the "
+                         "budget prices (default: slots * kv-max-seq, the "
+                         "dense worst case)")
     args = ap.parse_args(argv)
     if not args.limit:
         ap.error("pass at least one --limit metric=value")
@@ -158,8 +187,9 @@ def main(argv=None) -> int:
     print(f"float val loss {float_loss:.3f}; budget: "
           + ", ".join(f"{it.metric}<={it.limit:g}" for it in budget.items))
 
-    state_env = state_budget = state_cc = None
+    state_env = state_budget = state_cc = pool_req = None
     if state_limit is not None:
+        from repro.kvcache.cache import DEFAULT_BLOCK, resolve_block
         from repro.kvcache.env import KVQuantEnv
         from repro.quant import apply as qapply
 
@@ -171,20 +201,33 @@ def main(argv=None) -> int:
         rng = np.random.default_rng(args.seed)
         calib = rng.integers(1, cfg.vocab_size,
                              (args.kv_calib, args.kv_calib_len))
+        allocated = None
+        if args.paged:
+            if cfg.family not in ("dense", "moe", "vlm"):
+                ap.error(f"--paged covers the decoder families; {cfg.family!r} "
+                         f"state cannot deploy a block pool (DESIGN.md §12)")
+            blk = resolve_block(args.kv_max_seq, DEFAULT_BLOCK)
+            allocated = args.kv_allocated_tokens or args.slots * args.kv_max_seq
+            allocated = -(-allocated // blk) * blk  # block granularity
+            pool_req = {"block": blk}
         state_env = KVQuantEnv(serve_params, cfg, calib, slots=args.slots,
-                               max_seq=args.kv_max_seq, cost_model=cost_model)
+                               max_seq=args.kv_max_seq, cost_model=cost_model,
+                               allocated_tokens=allocated)
         state_budget = Budget.of(-args.state_tol, acc_buffer=0.05, buffer=0.08,
                                  state_bytes=state_limit)
         state_cc = state_controller_config(len(state_env.layer_infos()))
         print(f"state budget: state_bytes<={state_limit:g} "
               f"(fp32 cache {state_env.fp_state_bytes():g} B, "
-              f"{len(state_env.layer_infos())} KV entries)")
+              f"{len(state_env.layer_infos())} KV entries"
+              + (f", paged @ {allocated} allocated tokens" if args.paged else "")
+              + ")")
 
     artifact, result = search_policy(
         env, budget, config=ControllerConfig(phase2_max_iters=args.phase2_iters,
                                              phase1_qat_epochs=1, phase2_qat_epochs=1),
         log=print, meta={"arch": cfg.name, "backend": args.backend},
-        state_env=state_env, state_budget=state_budget, state_config=state_cc)
+        state_env=state_env, state_budget=state_budget, state_config=state_cc,
+        pool=pool_req)
     artifact.save(args.out)
     print(f"policy artifact -> {args.out}  (success={result.success} "
           f"mean_bits={result.policy.mean_bits():.2f} backend={args.backend})")
@@ -192,6 +235,9 @@ def main(argv=None) -> int:
         print(f"  state policy: mean_bits={artifact.state_policy.mean_bits():.2f} "
               f"state_bytes={artifact.report['state_bytes']:g} "
               f"(success={artifact.meta.get('state_success')})")
+    if artifact.pool is not None:
+        print(f"  paged pool: {artifact.pool['num_blocks']} blocks x "
+              f"{artifact.pool['block']} positions")
     for metric, value in artifact.report.items():
         print(f"  {metric:>16} = {value:g}")
 

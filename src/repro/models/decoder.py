@@ -166,11 +166,31 @@ def unstack_layers(params, cfg) -> dict:
 
 
 def init_cache(cfg, batch: int, seq: int, dtype=jnp.bfloat16, *,
-               state_bits=None, block: int | None = None) -> list[dict]:
-    """Decode KV cache: fp ``{"k","v"}`` dicts, or packed ``QuantizedKVLayer``
+               state_bits=None, block: int | None = None, paged: bool = False,
+               pool_blocks: int | None = None) -> list[dict]:
+    """Decode KV cache: fp ``{"k","v"}`` dicts, packed ``QuantizedKVLayer``
     containers when ``state_bits`` (per-layer ``[(k_bits, v_bits), ...]``)
-    is given (DESIGN.md §11)."""
+    is given (DESIGN.md §11), or block-pool ``PagedKVLayer`` containers when
+    additionally ``paged`` (DESIGN.md §12; ``pool_blocks`` usable physical
+    blocks, default the dense-equivalent ``batch * seq / block``)."""
     hd = cfg.resolved_head_dim
+    if paged:
+        from repro.kvcache.cache import DEFAULT_BLOCK, resolve_block
+        from repro.kvcache.paged import init_paged_layer
+
+        if state_bits is None:
+            raise ValueError("paged KV cache requires state_bits (the pool "
+                             "stores packed lanes only)")
+        if len(state_bits) != cfg.n_layers:
+            raise ValueError(f"state_bits has {len(state_bits)} entries for "
+                             f"{cfg.n_layers} layers")
+        blk = resolve_block(seq, block or DEFAULT_BLOCK)
+        n_blocks = pool_blocks or (batch * seq) // blk
+        return [
+            init_paged_layer(n_blocks, batch, seq, cfg.n_kv_heads, hd,
+                             k_bits=kb, v_bits=vb, block=blk)
+            for kb, vb in state_bits
+        ]
     if state_bits is not None:
         from repro.kvcache.cache import DEFAULT_BLOCK, init_kv_layer
 
@@ -304,11 +324,12 @@ def prefill_sp(params, cfg, tokens, *, mesh, qimpl="auto"):
 def decode_step(params, cfg, caches, token, pos, *, embeds=None, qimpl="auto"):
     """One token through unrolled layers with cache update at ``pos``.
 
-    Each layer's cache is either an fp ``{"k","v"}`` dict or a packed
-    ``QuantizedKVLayer`` (heterogeneous per-layer state bitwidths) — the
-    two forms may mix freely within one model.
+    Each layer's cache is an fp ``{"k","v"}`` dict, a packed
+    ``QuantizedKVLayer``, or a block-pool ``PagedKVLayer`` (heterogeneous
+    per-layer state bitwidths) — the forms may mix freely within one model.
     """
     from repro.kvcache.cache import QuantizedKVLayer
+    from repro.kvcache.paged import PagedKVLayer
 
     if embeds is None:
         x = embed_tokens(params, token, cfg)  # (B, 1, d)
@@ -317,7 +338,7 @@ def decode_step(params, cfg, caches, token, pos, *, embeds=None, qimpl="auto"):
     new_caches = []
     for lp, cache in zip(params["layers"], caches):
         xn = layers.norm(lp["ln1"], x, cfg.norm, cfg.norm_eps)
-        if isinstance(cache, QuantizedKVLayer):
+        if isinstance(cache, (QuantizedKVLayer, PagedKVLayer)):
             att, ncache = layers.attention_decode_quant(
                 lp["attn"], xn, cache, pos, cfg, qimpl=qimpl)
         else:

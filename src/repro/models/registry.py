@@ -77,34 +77,39 @@ class ModelAPI:
 
 
 def _decoder_state(cfg, batch, seq, dtype=jnp.bfloat16, abstract=False, *,
-                   state_bits=None, block=None):
+                   state_bits=None, block=None, paged=False, pool_blocks=None):
     if abstract:
-        if state_bits is not None:
+        if state_bits is not None or paged:
             raise NotImplementedError("abstract quantized decode state")
         return decoder.abstract_cache(cfg, batch, seq, dtype)
     return decoder.init_cache(cfg, batch, seq, dtype, state_bits=state_bits,
-                              block=block)
+                              block=block, paged=paged, pool_blocks=pool_blocks)
 
 
 def _mamba_state(cfg, batch, seq, dtype=jnp.bfloat16, abstract=False, *,
-                 state_bits=None, block=None):
-    del seq, dtype, block
-    if state_bits is not None:
+                 state_bits=None, block=None, paged=False, pool_blocks=None):
+    del seq, dtype, block, pool_blocks
+    if state_bits is not None or paged:
         raise ValueError("ssm family has no quantizable KV state")
     mk = mamba2.abstract_state if abstract else mamba2.init_state
     return [mk(cfg, batch) for _ in range(cfg.n_layers)]
 
 
 def _hybrid_state(cfg, batch, seq, dtype=jnp.bfloat16, abstract=False, *,
-                  state_bits=None, block=None):
+                  state_bits=None, block=None, paged=False, pool_blocks=None):
+    del pool_blocks
+    if paged:
+        raise NotImplementedError(
+            "paged KV cache covers the decoder families; the hybrid shared-"
+            "attention caches stay dense (DESIGN.md §12)")
     return hybrid.init_decode_state(cfg, batch, seq, dtype, abstract=abstract,
                                     state_bits=state_bits, block=block)
 
 
 def _encdec_state(cfg, batch, seq, dtype=jnp.bfloat16, abstract=False, *,
-                  state_bits=None, block=None):
-    del block
-    if state_bits is not None:
+                  state_bits=None, block=None, paged=False, pool_blocks=None):
+    del block, pool_blocks
+    if state_bits is not None or paged:
         raise ValueError("encdec serving has no engine-managed KV state")
     return encdec.init_cache(cfg, batch, seq, dtype, abstract=abstract)
 

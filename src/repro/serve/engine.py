@@ -37,6 +37,15 @@ built state against the artifact exactly like it verifies the packed
 weights.  Admission quantizes the prefill rows into their slots; each
 decode step requantizes only the sequence block it writes.
 
+With ``paged=True`` (or a v3 artifact carrying pool geometry) the quantized
+caches become block pools with per-slot block tables (DESIGN.md §12):
+admission maps blocks on demand — sharing bit-identical shared-prefix
+blocks by refcount — decode appends allocate at block boundaries against
+admission-time growth reservations, a shared block copies on first write
+(copy-on-write), and completion frees every mapped block, so the budgeted
+``state_bytes`` pays for *live* tokens instead of ``max_slots * max_seq``.
+Requests the pool cannot cover yet wait in the queue (backpressure).
+
 Padded prefill is exact for every family: attention masks pad positions via
 the per-slot ``kv_valid``, and SSM/hybrid prefills mask pad tokens out of
 the recurrent-state update (``lengths`` threaded through ``api.prefill``),
@@ -90,6 +99,8 @@ class ServeEngine:
                  seed: int = 0, state_dtype=jnp.float32,
                  batch_admission: bool = True, fuse_projections: bool = True,
                  state_bits=None, kv_block: int | None = None,
+                 paged: bool = False, pool_blocks: int | None = None,
+                 share_prefix: bool = True,
                  artifact: PolicyArtifact | None = None):
         if cfg.family in ("audio", "encdec"):
             raise NotImplementedError(
@@ -122,9 +133,40 @@ class ServeEngine:
             state_bits = artifact.state_policy
         resolved = (kvcache.resolve_state_bits(state_bits, cfg)
                     if state_bits is not None else None)
+        # paged block pool (DESIGN.md §12): explicit paged=True, or an
+        # artifact carrying v3 pool geometry
+        if artifact is not None and artifact.pool is not None:
+            paged = True
+            pool_blocks = pool_blocks or int(artifact.pool["num_blocks"])
+            kv_block = kv_block or int(artifact.pool["block"])
+        if paged and resolved is None:
+            raise ValueError("paged KV cache requires a quantized state "
+                             "(state_bits or an artifact state policy)")
+        self.paged = paged
+        self.share_prefix = share_prefix
         self.state = self.api.init_decode_state(cfg, max_slots, max_seq,
                                                 state_dtype, state_bits=resolved,
-                                                block=kv_block)
+                                                block=kv_block, paged=paged,
+                                                pool_blocks=pool_blocks)
+        if paged:
+            blk = self.state[0].block
+            if artifact is not None and artifact.pool is not None and (
+                    blk != int(artifact.pool["block"])):
+                # resolve_block silently shrank the block because it does not
+                # divide max_seq — the pool would then cover fewer tokens at
+                # different per-block bytes than the budget priced
+                raise ValueError(
+                    f"artifact pool block {artifact.pool['block']} does not "
+                    f"divide max_seq={max_seq}; serve with a max_seq multiple "
+                    f"of the searched block length")
+            self.pool = kvcache.BlockPool(self.state[0].num_blocks - 1)
+            self._kv_blk = blk
+            self._host_tables = np.full((max_slots, max_seq // blk), -1, np.int32)
+            self._shared_blocks: dict[int, set[int]] = {}
+            self._reserved: dict[int, int] = {}
+            self._tables_dirty = False
+        else:
+            self.pool = None
         #: state-entry name -> packed bits (the state analogue of packed_bits)
         self.state_bits = kvcache.packed_state_bits(self.state)
         if artifact is not None:
@@ -176,21 +218,180 @@ class ServeEngine:
         self.state = kvcache.insert_state_rows(self.state, jnp.asarray(slot_ids),
                                                st_new, lengths)
 
+    # -- paged block bookkeeping (DESIGN.md §12) --------------------------
+    def _push_tables(self) -> None:
+        """Mirror the host block tables into every paged layer's device copy."""
+        if not self._tables_dirty:
+            return
+        # one device copy PER layer: the decode step donates the state, and
+        # donation rejects the same buffer appearing in two arguments
+        self.state = [kvcache.paged.with_table(layer,
+                                               jnp.asarray(self._host_tables))
+                      for layer in self.state]
+        self._tables_dirty = False
+
+    def _map_slot_blocks(self, slot_id: int, req: Request) -> bool:
+        """Map blocks covering positions ``[0, len(prompt) - 1]`` for a slot
+        and RESERVE its decode growth (blocks the appends will cross into,
+        plus one copy-on-write split if the write block is shared), so a
+        mid-decode allocation can never fail for an admitted request.
+
+        Blocks whose occupied rows are bit-identical to a block some other
+        slot already maps (a shared prefix, block-aligned coverage) map the
+        SAME physical block with a bumped refcount instead of allocating —
+        the first append into such a block copies it first (copy-on-write,
+        ``_ensure_append_blocks``).  Returns False (with full rollback) when
+        the pool cannot cover prompt + growth, so the caller can requeue the
+        request instead of half-admitting it.
+        """
+        blk = self._kv_blk
+        prompt = req.prompt
+        length = len(prompt)
+        w_new = length - 1                      # head rows written at admission
+        tb_first = (length - 1) // blk          # block the replay append hits
+        # highest position this request can ever write: at least the replay
+        # append at length-1 (even for max_new_tokens <= 0 the decode loop
+        # runs one step), at most max_seq - 2 (run()'s stop condition)
+        last_pos = min(max(length - 1, length - 2 + req.max_new_tokens),
+                       self.max_seq - 2)
+        tb_last = last_pos // blk
+        donor, common = None, 0
+        if self.share_prefix:
+            for other, slot in enumerate(self.slots):
+                if other == slot_id or slot.free:
+                    continue
+                lcp = 0
+                for a, b in zip(prompt, slot.req.prompt):
+                    if a != b:
+                        break
+                    lcp += 1
+                if lcp > common:
+                    donor, common = other, lcp
+        plan: list[tuple[int, int | None]] = []  # (logical block, donor bid)
+        n_fresh = 0
+        for j in range(tb_first + 1):
+            end_new = min(w_new, (j + 1) * blk)
+            src = None
+            if donor is not None and self._host_tables[donor, j] >= 0:
+                w_d = self.slots[donor].pos
+                # identical occupancy, fully inside the common prefix:
+                # the donor's block bytes ARE this slot's block bytes
+                if min(w_d, (j + 1) * blk) == end_new and end_new <= common:
+                    src = int(self._host_tables[donor, j])
+            plan.append((j, src))
+            n_fresh += src is None
+        # growth: every block past the first write block, plus the CoW copy
+        # if the first write block itself is shared
+        growth = (tb_last - tb_first) + (plan[tb_first][1] is not None)
+        if self.pool.available < n_fresh + growth:
+            return False
+        row = self._host_tables[slot_id]
+        shared: set[int] = set()
+        for j, src in plan:
+            if src is not None:
+                row[j] = self.pool.incref(src)
+                shared.add(j)
+            else:
+                row[j] = self.pool.alloc()
+        self.pool.reserve(growth)
+        self._reserved[slot_id] = growth
+        self._shared_blocks[slot_id] = shared
+        self._tables_dirty = True
+        return True
+
+    def _grow_alloc(self, slot_id: int) -> int:
+        """Allocate one block against the slot's admission-time reservation."""
+        n = self._reserved.get(slot_id, 0)
+        if n > 0:
+            self.pool.unreserve(1)
+            self._reserved[slot_id] = n - 1
+        return self.pool.alloc()
+
+    def _ensure_append_blocks(self, active: list[int]) -> None:
+        """Before a decode step: every active slot's write block must be
+        mapped (allocate on demand at block boundaries) and exclusively
+        owned (copy-on-write when a shared prefix diverges)."""
+        cow_src, cow_dst = [], []
+        for i in active:
+            tb = self.slots[i].pos // self._kv_blk
+            bid = int(self._host_tables[i, tb])
+            if bid < 0:
+                self._host_tables[i, tb] = self._grow_alloc(i)
+                self._tables_dirty = True
+            elif self.pool.refcount(bid) > 1:
+                fresh = self._grow_alloc(i)
+                self.pool.cow_copies += 1
+                self.pool.decref(bid)
+                self._host_tables[i, tb] = fresh
+                cow_src.append(bid)
+                cow_dst.append(fresh)
+                self._tables_dirty = True
+        if cow_src:
+            self.state = [kvcache.paged.copy_blocks(layer, cow_src, cow_dst)
+                          for layer in self.state]
+        self._push_tables()
+
+    def _free_slot_blocks(self, slot_id: int) -> None:
+        for bid in self._host_tables[slot_id]:
+            if bid >= 0:
+                self.pool.decref(int(bid))
+        self._host_tables[slot_id] = -1
+        self.pool.unreserve(self._reserved.pop(slot_id, 0))
+        self._shared_blocks.pop(slot_id, None)
+        self._tables_dirty = True
+
+    def _row_tables(self, with_head: list[tuple[int, list[int]]],
+                    pad: int) -> np.ndarray:
+        """Physical write destinations per (prefill row, logical block).
+
+        -1 skips the write: pad blocks past the row's head rows, and
+        shared-prefix blocks whose bytes a donor slot already holds (or
+        writes in this very batch — same rows, same quantizer, same bits).
+        """
+        blk = self._kv_blk
+        npb = -(-pad // blk)
+        out = np.full((len(with_head), npb), -1, np.int32)
+        for r, (slot_id, head) in enumerate(with_head):
+            shared = self._shared_blocks.get(slot_id, set())
+            for j in range(min(npb, -(-len(head) // blk))):
+                if j not in shared:
+                    out[r, j] = self._host_tables[slot_id, j]
+        return out
+
+    def _insert_rows_paged(self, with_head, st_new, lengths, pad: int) -> None:
+        row_tables = self._row_tables(with_head, pad)
+        new_state = []
+        for layer, new in zip(self.state, st_new):
+            new_state.append(kvcache.paged.insert_prefill_rows(
+                layer, row_tables, new["k"], new["v"], valid_len=lengths))
+        self.state = new_state
+
     # -- admission ---------------------------------------------------------
-    def _admit(self, assignments: list[tuple[int, Request]]) -> None:
-        """Admit requests into free slots; one padded prefill for the batch."""
+    def _admit(self, assignments: list[tuple[int, Request]]) -> list[Request]:
+        """Admit requests into free slots; one padded prefill for the batch.
+
+        Returns the requests that could NOT be admitted (paged pool too full
+        to cover their prompts) for the caller to requeue.
+        """
         with_head: list[tuple[int, list[int]]] = []
+        rejected: list[Request] = []
         for slot_id, req in assignments:
             prompt = req.prompt
             assert 1 <= len(prompt) < self.max_seq, (len(prompt), self.max_seq)
             slot = self.slots[slot_id]
             slot.req, slot.generated = req, []
             slot.pos = len(prompt) - 1
+            if self.paged and not self._map_slot_blocks(slot_id, req):
+                self.slots[slot_id] = _Slot()
+                rejected.append(req)
+                continue
             self._pending_token[slot_id] = prompt[-1]  # replayed next step
             if len(prompt) > 1:
                 with_head.append((slot_id, prompt[:-1]))
+        if self.paged:
+            self._push_tables()
         if not with_head:
-            return
+            return rejected
         pad = min(_round_up(max(len(h) for _, h in with_head), self.prefill_pad),
                   self.max_seq)
         toks = np.zeros((len(with_head), pad), np.int32)
@@ -198,8 +399,12 @@ class ServeEngine:
             toks[row, : len(head)] = head
         lengths = jnp.asarray([len(h) for _, h in with_head], jnp.int32)
         st = self._prefill(self.params, jnp.asarray(toks), lengths)
-        self._insert_rows([slot_id for slot_id, _ in with_head], st, lengths)
+        if self.paged:
+            self._insert_rows_paged(with_head, st, lengths, pad)
+        else:
+            self._insert_rows([slot_id for slot_id, _ in with_head], st, lengths)
         self.stats["prefill_tokens"] += sum(len(h) for _, h in with_head)
+        return rejected
 
     # -- main loop -----------------------------------------------------------
     def run(self, requests: list[Request]) -> dict[int, list[int]]:
@@ -220,12 +425,25 @@ class ServeEngine:
             if free and queue:
                 assignments = [(i, queue.pop(0)) for i in free[: len(queue)]]
                 if self.batch_admission:
-                    self._admit(assignments)
+                    rejected = self._admit(assignments)
                 else:  # reference path: one padded prefill per request
+                    rejected = []
                     for pair in assignments:
-                        self._admit([pair])
+                        rejected += self._admit([pair])
+                # paged backpressure: requests the pool could not cover wait
+                # for completions to free blocks
+                queue[:0] = rejected
+                if rejected and not active():
+                    raise RuntimeError(
+                        f"request needs more KV blocks than the whole pool "
+                        f"holds ({self.pool.num_blocks}); raise pool_blocks "
+                        f"or the state_bytes budget")
             act = active()
-            # one lock-step decode over all slots (idle slots step harmlessly)
+            if self.paged:
+                # map/CoW every active slot's write block before the step
+                self._ensure_append_blocks(act)
+            # one lock-step decode over all slots (idle slots step harmlessly;
+            # paged idle slots append into the reserved trash block)
             for i in act:
                 s = self.slots[i]
                 tokens_h[i, 0] = self._pending_token.get(
@@ -248,9 +466,33 @@ class ServeEngine:
                 if done:
                     results[s.req.uid] = list(s.generated)
                     self.stats["completed"] += 1
+                    if self.paged:
+                        self._free_slot_blocks(i)
                     self.slots[i] = _Slot()
         self.stats["wall_s"] += time.perf_counter() - t0
         return results
+
+    # -- state accounting ----------------------------------------------------
+    def state_container_bytes(self) -> int:
+        """HBM bytes the decode state occupies (dense containers / whole pool)."""
+        total = 0
+        for leaf in jax.tree.leaves(
+                self.state,
+                is_leaf=lambda x: hasattr(x, "container_bytes")):
+            if hasattr(leaf, "container_bytes"):
+                total += leaf.container_bytes()
+            else:
+                total += leaf.size * leaf.dtype.itemsize
+        return total
+
+    def allocated_state_bytes(self, *, peak: bool = True) -> int:
+        """Paged: bytes of live (peak by default) blocks — what the
+        ``state_bytes`` budget prices.  Dense: the full container (every
+        slot pre-pays ``max_seq``, which is the point of going paged)."""
+        if not self.paged:
+            return self.state_container_bytes()
+        n = self.pool.peak_allocated if peak else self.pool.allocated
+        return sum(layer.allocated_bytes(n) for layer in self.state)
 
     # -- convenience ---------------------------------------------------------
     def generate(self, prompts: list[list[int]], max_new_tokens: int = 16) -> list[list[int]]:

@@ -1,6 +1,7 @@
 """CPU smoke test for examples/budget_search_serve.py: the full
 search -> artifact -> serve demo (all three hardware conditions, including
-the KV-budgeted scenario) must keep running end to end."""
+the KV-budgeted scenario on the paged block pool) must keep running end to
+end."""
 import os
 import pathlib
 import sys
@@ -18,7 +19,7 @@ def test_budget_search_serve_tiny(capsys):
     finally:
         sys.path.pop(0)
 
-    out_dir = budget_search_serve.main(["--tiny"])
+    out_dir = budget_search_serve.main(["--tiny", "--paged"])
     stdout = capsys.readouterr().out
     # all three conditions produced artifacts on disk
     for name in ("policy_memory_tight.json", "policy_latency_tight.json",
@@ -27,6 +28,9 @@ def test_budget_search_serve_tiny(capsys):
     # the KV condition searched, reported the reduction, and served
     assert "[kv-budgeted/shift_add]" in stdout
     assert "served 3 requests on the quantized KV cache" in stdout
+    # the --paged scenario deployed the pool and beat the dense container
+    assert "[paged] pool" in stdout
+    assert "less state memory" in stdout
     # the CLI deployments ran for the other two conditions
     assert stdout.count("launch.serve --policy") == 2
 
@@ -35,3 +39,6 @@ def test_budget_search_serve_tiny(capsys):
     art = PolicyArtifact.load(os.path.join(out_dir, "policy_kv_budgeted.json"))
     assert art.state_policy is not None
     assert art.report["state_bytes"] > 0
+    # v3: the pool geometry the state budget bought rides in the artifact
+    assert art.pool is not None and art.pool["num_blocks"] >= 1
+    assert art.version == 3

@@ -1,0 +1,310 @@
+"""Paged quantized KV-cache (DESIGN.md §12): BlockPool allocator semantics,
+paged-vs-dense engine parity, freed-block no-leak, shared-prefix
+copy-on-write, allocated-bytes accounting, and artifact v3 pool geometry."""
+import jax
+import pytest
+
+from repro.configs import gemma_2b, zamba2_2p7b
+from repro.core.policy import BitPolicy, PolicyArtifact
+from repro.kvcache import (BlockPool, pool_blocks_for_budget,
+                           state_layer_infos)
+from repro.kvcache import paged as pg
+from repro.models import registry
+from repro.quant import apply as qapply
+from repro.serve.engine import Request, ServeEngine
+
+pytestmark = pytest.mark.filterwarnings("ignore::DeprecationWarning")
+
+
+@pytest.fixture(scope="module")
+def dense_setup():
+    cfg = gemma_2b.CONFIG.reduced()
+    api = registry.get_api(cfg)
+    params = api.init(cfg, jax.random.key(0))
+    return cfg, api, api.unstack(params, cfg)
+
+
+VAR_PROMPTS = [[5, 6, 7, 8], [1, 2, 9, 4, 7, 3], [9] * 11, [2],
+               [(3 * i + 1) % 500 for i in range(22)]]
+
+
+def _engine(cfg, sp, **kw):
+    kw.setdefault("max_slots", 3)
+    kw.setdefault("max_seq", 64)
+    kw.setdefault("state_bits", 4)
+    kw.setdefault("qimpl", "xla")
+    return ServeEngine(cfg, sp, **kw)
+
+
+# ---------------------------------------------------------------------------
+# allocator
+# ---------------------------------------------------------------------------
+
+
+class TestBlockPool:
+    def test_alloc_free_cycle(self):
+        pool = BlockPool(4)
+        ids = [pool.alloc() for _ in range(4)]
+        assert sorted(ids) == [1, 2, 3, 4]  # block 0 is the trash block
+        assert pool.allocated == 4 and pool.free_count == 0
+        with pytest.raises(RuntimeError, match="exhausted"):
+            pool.alloc()
+        for b in ids:
+            pool.decref(b)
+        assert pool.allocated == 0 and pool.free_count == 4
+        assert pool.peak_allocated == 4
+
+    def test_refcounted_sharing(self):
+        pool = BlockPool(3)
+        b = pool.alloc()
+        pool.incref(b)
+        assert pool.refcount(b) == 2 and pool.shared_maps == 1
+        pool.decref(b)
+        assert pool.refcount(b) == 1 and pool.free_count == 2  # still live
+        pool.decref(b)
+        assert pool.free_count == 3
+
+    def test_trash_block_never_allocated_or_freed(self):
+        pool = BlockPool(2)
+        assert pool.alloc() != pg.TRASH_BLOCK
+        pool.decref(pg.TRASH_BLOCK)  # no-op, never raises
+        assert pool.free_count == 1
+
+    def test_lifo_reuse(self):
+        pool = BlockPool(3)
+        a = pool.alloc()
+        pool.decref(a)
+        assert pool.alloc() == a  # freed block is immediately reusable
+
+
+# ---------------------------------------------------------------------------
+# layer geometry
+# ---------------------------------------------------------------------------
+
+
+class TestPagedLayer:
+    def test_pool_sizing_and_bytes(self):
+        layer = pg.init_paged_layer(6, slots=2, max_seq=64, n_kv=2, hd=16,
+                                    k_bits=4, v_bits=8, block=16)
+        assert layer.num_blocks == 7  # 6 usable + trash
+        # K 4-bit packs 2/byte: 2 heads * 16 pos * 8 B; V 8-bit: 2*16*16
+        assert layer.bytes_per_block() == 2 * 16 * 8 + 2 * 16 * 16 + 2 * 4 * 2
+        assert layer.container_bytes() == (
+            7 * layer.bytes_per_block() + 4 * layer.block_table.size)
+        assert layer.allocated_bytes(3) == 3 * layer.bytes_per_block()
+
+    def test_pool_blocks_for_budget(self):
+        bits = [(4, 8), (4, 8)]
+        per_block = (2 * 16 * 8 + 2 * 16 * 16 + 2 * 4 * 2) * 2
+        assert pool_blocks_for_budget(bits, 2, 16, 16, 10 * per_block) == 10
+        with pytest.raises(ValueError, match="zero blocks"):
+            pool_blocks_for_budget(bits, 2, 16, 16, per_block - 1)
+
+    def test_paged_requires_quantized_state(self, dense_setup):
+        cfg, _, sp = dense_setup
+        with pytest.raises(ValueError, match="paged KV cache requires"):
+            ServeEngine(cfg, sp, max_slots=2, max_seq=64, paged=True)
+
+    def test_hybrid_paged_rejected(self):
+        cfg = zamba2_2p7b.CONFIG.reduced()
+        api = registry.get_api(cfg)
+        sp = api.unstack(api.init(cfg, jax.random.key(0)), cfg)
+        with pytest.raises(NotImplementedError, match="hybrid"):
+            ServeEngine(cfg, sp, max_slots=2, max_seq=64, state_bits=8,
+                        paged=True)
+
+
+# ---------------------------------------------------------------------------
+# engine parity + invariants
+# ---------------------------------------------------------------------------
+
+
+class TestPagedEngine:
+    def test_paged_matches_dense_tokens(self, dense_setup):
+        """Variable-length requests: the paged engine's tokens match the
+        dense quantized engine's exactly (bitwise attention parity end to
+        end), while allocating strictly fewer state bytes."""
+        cfg, _, sp = dense_setup
+        dense = _engine(cfg, sp)
+        paged = _engine(cfg, sp, paged=True, pool_blocks=12)
+        out_d = dense.generate(VAR_PROMPTS, max_new_tokens=6)
+        out_p = paged.generate(VAR_PROMPTS, max_new_tokens=6)
+        assert out_p == out_d
+        assert paged.allocated_state_bytes() < dense.state_container_bytes()
+        assert paged.pool.allocated == 0  # everything freed on completion
+        assert paged.pool.peak_allocated > 0
+
+    def test_small_pool_backpressure_preserves_outputs(self, dense_setup):
+        """A pool far below slots*max_seq forces sequential admission but
+        must not change any request's tokens."""
+        cfg, _, sp = dense_setup
+        ref = _engine(cfg, sp).generate(VAR_PROMPTS, max_new_tokens=6)
+        tiny = _engine(cfg, sp, paged=True, pool_blocks=3)
+        assert tiny.generate(VAR_PROMPTS, max_new_tokens=6) == ref
+
+    def test_zero_max_new_tokens_keeps_reservations_sane(self, dense_setup):
+        """A block-aligned prompt with max_new_tokens=0 must not drive the
+        growth reservation negative (which would over-commit the pool)."""
+        cfg, _, sp = dense_setup
+        eng = _engine(cfg, sp, paged=True, pool_blocks=8)
+        out = eng.run([Request(uid=0, prompt=[3] * 17, max_new_tokens=0),
+                       Request(uid=1, prompt=[4] * 5, max_new_tokens=4)])
+        assert len(out[0]) == 1 and len(out[1]) == 4  # loop decodes once
+        assert eng.pool.reserved == 0 and eng.pool.allocated == 0
+        assert eng.pool.available == 8
+
+    def test_pool_block_must_divide_max_seq(self, dense_setup):
+        """A v3 artifact's pool block silently shrinking via resolve_block
+        would deploy different geometry than the budget priced: refuse."""
+        cfg, api, sp = dense_setup
+        params = api.init(cfg, jax.random.key(0))
+        specs = qapply.layer_specs(params, cfg)
+        sp_infos = state_layer_infos(cfg, 2, 64)
+        art = PolicyArtifact.build(
+            BitPolicy.uniform(specs, 8), backend="shift_add",
+            state_policy=BitPolicy.uniform(sp_infos, 4),
+            pool={"block": 16, "num_blocks": 8})
+        qp = qapply.quantize_for_serve(sp, art, cfg)
+        with pytest.raises(ValueError, match="does not divide max_seq"):
+            ServeEngine(cfg, qp, max_slots=2, max_seq=40, artifact=art)
+
+    def test_oversized_request_raises(self, dense_setup):
+        cfg, _, sp = dense_setup
+        eng = _engine(cfg, sp, paged=True, pool_blocks=1)
+        with pytest.raises(RuntimeError, match="whole pool"):
+            eng.run([Request(uid=0, prompt=[7] * 40, max_new_tokens=2)])
+
+    def test_freed_blocks_never_leak(self, dense_setup):
+        """free -> realloc reuse: a second batch served on recycled blocks
+        produces exactly what a fresh engine produces (zero-beyond-write
+        survives block recycling)."""
+        cfg, _, sp = dense_setup
+        eng = _engine(cfg, sp, paged=True, pool_blocks=12)
+        eng.generate([[(7 * i + 3) % 500 for i in range(30)] for _ in range(3)],
+                     max_new_tokens=8)   # fill + free a previous tenant
+        assert eng.pool.allocated == 0
+        out = eng.generate(VAR_PROMPTS, max_new_tokens=6)
+        fresh = _engine(cfg, sp, paged=True, pool_blocks=12)
+        assert out == fresh.generate(VAR_PROMPTS, max_new_tokens=6)
+
+    def test_cow_matches_unshared_admission(self, dense_setup):
+        """Shared-prefix admission + copy-on-write divergence is bitwise
+        invisible: identical logits/tokens vs share_prefix=False."""
+        cfg, _, sp = dense_setup
+        prompts = [[7] * 9, [7] * 9, [7] * 9]
+        shared = _engine(cfg, sp, paged=True, pool_blocks=12,
+                         share_prefix=True)
+        unshared = _engine(cfg, sp, paged=True, pool_blocks=12,
+                           share_prefix=False)
+        out_s = shared.generate(prompts, max_new_tokens=6)
+        out_u = unshared.generate(prompts, max_new_tokens=6)
+        assert out_s == out_u
+        # sharing and divergence really happened
+        assert shared.pool.shared_maps >= 2
+        assert shared.pool.cow_copies >= 2
+        assert unshared.pool.shared_maps == 0
+
+    def test_shared_prefix_allocates_fewer_blocks(self, dense_setup):
+        cfg, _, sp = dense_setup
+        prompts = [[3] * 33, [3] * 33]  # two full shared blocks + tail
+        shared = _engine(cfg, sp, paged=True, pool_blocks=16)
+        unshared = _engine(cfg, sp, paged=True, pool_blocks=16,
+                           share_prefix=False)
+        assert (shared.generate(prompts, 4) == unshared.generate(prompts, 4))
+        assert shared.pool.peak_allocated < unshared.pool.peak_allocated
+
+    def test_cross_batch_prefix_sharing(self, dense_setup):
+        """A later request shares a resident slot's frozen full blocks."""
+        cfg, _, sp = dense_setup
+        eng = _engine(cfg, sp, max_slots=1, paged=True, pool_blocks=12)
+        ref = _engine(cfg, sp, max_slots=1, paged=True, pool_blocks=12,
+                      share_prefix=False)
+        prompts = [[11] * 20, [11] * 20]  # slot reused: admissions sequential
+        assert eng.generate(prompts, 4) == ref.generate(prompts, 4)
+
+    def test_state_bits_and_verification_surface(self, dense_setup):
+        """packed_state_bits / artifact verification see through the paged
+        container exactly like the dense one."""
+        from repro.kvcache import packed_state_bits, verify_state_bits
+
+        cfg, api, sp = dense_setup
+        params = api.init(cfg, jax.random.key(0))
+        specs = qapply.layer_specs(params, cfg)
+        sp_infos = state_layer_infos(cfg, 3, 64)
+        state_policy = BitPolicy.from_bits(
+            sp_infos, {l.name: (4 if l.name.endswith(".k") else 8)
+                       for l in sp_infos})
+        art = PolicyArtifact.build(BitPolicy.uniform(specs, 8),
+                                   backend="shift_add",
+                                   state_policy=state_policy)
+        eng = _engine(cfg, sp, state_bits=state_policy, paged=True,
+                      pool_blocks=12)
+        assert eng.state_bits == state_policy.bits
+        assert packed_state_bits(eng.state) == state_policy.bits
+        verify_state_bits(eng.state, art,
+                          surface=state_layer_infos(cfg, 3, 64))
+
+
+# ---------------------------------------------------------------------------
+# artifact v3 pool geometry
+# ---------------------------------------------------------------------------
+
+
+class TestArtifactPoolGeometry:
+    def _pool_artifact(self, cfg, params, num_blocks=12):
+        specs = qapply.layer_specs(params, cfg)
+        sp_infos = state_layer_infos(cfg, 2, 64, allocated_tokens=96)
+        state_policy = BitPolicy.from_bits(
+            sp_infos, {l.name: 4 for l in sp_infos})
+        return PolicyArtifact.build(
+            BitPolicy.uniform(specs, 8), backend="shift_add",
+            state_policy=state_policy,
+            pool={"block": 16, "num_blocks": num_blocks})
+
+    def test_roundtrip_and_engine_deployment(self, dense_setup):
+        cfg, api, sp = dense_setup
+        params = api.init(cfg, jax.random.key(0))
+        art = self._pool_artifact(cfg, params)
+        back = PolicyArtifact.from_json(art.to_json())
+        assert back.version == 3 and back.pool == art.pool
+        qp = qapply.quantize_for_serve(sp, art, cfg)
+        eng = ServeEngine(cfg, qp, max_slots=2, max_seq=64, artifact=art,
+                          qimpl="xla")
+        assert eng.paged and eng.pool.num_blocks == 12
+        assert eng.state[0].block == 16
+        outs = eng.generate([[5, 6, 7], [1, 2]], max_new_tokens=3)
+        assert all(len(o) == 3 for o in outs)
+
+    def test_v2_artifact_still_loads_dense(self, dense_setup):
+        import json
+
+        cfg, api, _ = dense_setup
+        params = api.init(cfg, jax.random.key(0))
+        doc = json.loads(self._pool_artifact(cfg, params).to_json())
+        doc["artifact_version"] = 2
+        doc.pop("pool")
+        back = PolicyArtifact.from_json(json.dumps(doc))
+        assert back.pool is None and back.state_policy is not None
+
+    def test_pool_without_state_policy_rejected(self, dense_setup):
+        cfg, api, _ = dense_setup
+        params = api.init(cfg, jax.random.key(0))
+        specs = qapply.layer_specs(params, cfg)
+        with pytest.raises(ValueError, match="needs a state_policy"):
+            PolicyArtifact.build(BitPolicy.uniform(specs, 8),
+                                 pool={"block": 16, "num_blocks": 4})
+
+    def test_allocated_tokens_pricing(self, dense_setup):
+        """A paged state registry prices allocated coverage, not batch*seq,
+        while keeping the geometry-independent surface hash."""
+        from repro.kvcache import state_surface_hash
+
+        cfg, _, _ = dense_setup
+        dense_infos = state_layer_infos(cfg, 8, 256)
+        paged_infos = state_layer_infos(cfg, 8, 256, allocated_tokens=320)
+        p_dense = BitPolicy.uniform(dense_infos, 4)
+        p_paged = BitPolicy.uniform(paged_infos, 4)
+        assert p_paged.state_bytes() < p_dense.state_bytes()
+        assert p_paged.state_bytes() == p_dense.state_bytes() * 320 // (8 * 256)
+        assert (state_surface_hash(dense_infos)
+                == state_surface_hash(paged_infos))

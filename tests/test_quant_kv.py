@@ -7,7 +7,6 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.packing import VALID_BITS
 from repro.kvcache.cache import init_kv_layer, insert_rows
 from repro.kernels.quant_kv import ops
 
@@ -37,19 +36,9 @@ def _fp_attention(q, k, v, kv_valid):
 
 
 class TestAppendParity:
-    @pytest.mark.parametrize("bits", VALID_BITS)
-    def test_ref_matches_interpret(self, bits):
-        layer, _, _, lens = _filled(bits, bits)
-        rng = np.random.default_rng(1)
-        kn = jnp.asarray(rng.normal(size=(B, 1, H, HD)), jnp.float32)
-        vn = jnp.asarray(rng.normal(size=(B, 1, H, HD)), jnp.float32)
-        ref = ops.quant_kv_append(layer, lens, kn, vn, impl="xla")
-        pal = ops.quant_kv_append(layer, lens, kn, vn, impl="interpret")
-        # levels are bit-exact; scales agree to float rounding
-        assert jnp.array_equal(ref.k_packed, pal.k_packed)
-        assert jnp.array_equal(ref.v_packed, pal.v_packed)
-        assert jnp.allclose(ref.k_scale, pal.k_scale, rtol=1e-6)
-        assert jnp.allclose(ref.v_scale, pal.v_scale, rtol=1e-6)
+    # the (bits x impl) ref-vs-interpret parity sweep moved to the unified
+    # cross-family harness (tests/test_kernel_parity.py); the append
+    # *semantics* (block locality, invariants, broadcasting) stay here.
 
     def test_append_only_touches_current_block(self):
         layer, _, _, _ = _filled()
@@ -90,8 +79,12 @@ class TestAppendParity:
 
 
 class TestAttention:
-    @pytest.mark.parametrize("k_bits,v_bits", [(8, 8), (4, 8), (8, 4), (2, 2)])
-    def test_ref_matches_interpret(self, k_bits, v_bits):
+    # uniform-bits ref-vs-interpret parity moved to test_kernel_parity.py;
+    # the MIXED (k_bits != v_bits) cells — which the harness's per-family
+    # uniform sweep cannot express — stay, with the semantic tests.
+
+    @pytest.mark.parametrize("k_bits,v_bits", [(4, 8), (8, 4)])
+    def test_mixed_bits_ref_matches_interpret(self, k_bits, v_bits):
         layer, _, _, lens = _filled(k_bits, v_bits)
         rng = np.random.default_rng(4)
         q = jnp.asarray(rng.normal(size=(B, HQ, HD)), jnp.float32)

@@ -65,6 +65,19 @@ def test_eos_stops_generation(dense_setup):
     assert out[0] == ref[:3]
 
 
+def test_eos_minus_one_never_early_stops(dense_setup):
+    """eos_id=-1 (the Request default) means "never stop early": every
+    request must run to its full max_new_tokens even though sampled token
+    ids span the whole vocab."""
+    cfg, api, sp = dense_setup
+    eng = ServeEngine(cfg, sp, max_slots=2, max_seq=64, temperature=1.0, seed=7)
+    reqs = [Request(uid=i, prompt=[5, 6, 7, i + 1], max_new_tokens=9,
+                    eos_id=-1) for i in range(4)]
+    out = eng.run(reqs)
+    assert all(len(out[i]) == 9 for i in range(4))
+    assert all(t >= 0 for toks in out.values() for t in toks)
+
+
 def test_quantized_weight_path(dense_setup):
     cfg, api, sp = dense_setup
     specs = qapply.layer_specs(api.init(cfg, jax.random.key(0)), cfg)
