@@ -1,21 +1,28 @@
 """Benchmark harness entry point — one section per paper table/figure.
 
     PYTHONPATH=src python -m benchmarks.run [--full] [--only table3] [--smoke]
+    PYTHONPATH=src python -m benchmarks.run --compare old/BENCH_decode.json
 
 ``--full`` uses the paper-scale controller budgets (slower);
 the default fast mode keeps every section CPU-friendly.
 ``--smoke`` runs every registered section in tiny mode and exits non-zero
 on any failure — the CI step that keeps the BENCH_*.json producers alive.
+``--compare BASELINE.json`` diffs the freshly produced BENCH file of the
+same name against the committed baseline's headline metrics and exits
+non-zero on a >10% regression — run the section first, then compare.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import time
 import traceback
 
 from . import (allocator, decode_throughput, fig3_trajectory, fig5_hw, kvcache,
-               kvcache_paged, roofline, table1_sigma_kl, table2_phases,
-               table3_sota, table4_hparam, table5_bops, table6_mac)
+               kvcache_paged, roofline, speculative, table1_sigma_kl,
+               table2_phases, table3_sota, table4_hparam, table5_bops,
+               table6_mac)
 
 SECTIONS = {
     "decode": ("Decode throughput (BENCH_decode.json)", decode_throughput.run),
@@ -24,6 +31,9 @@ SECTIONS = {
     "kvcache_paged": ("Paged KV cache: allocated vs dense state bytes, pool "
                       "utilization (BENCH_kvcache_paged.json)",
                       kvcache_paged.run),
+    "speculative": ("Self-speculative decoding: acceptance + tokens/s vs "
+                    "non-speculative (BENCH_speculative.json)",
+                    speculative.run),
     "allocator": ("Allocator: wall-time + budget satisfaction x backends "
                   "(BENCH_allocator.json)", allocator.run),
     "table1": ("Table I: sigma vs KL vs final bits", table1_sigma_kl.run),
@@ -38,15 +48,94 @@ SECTIONS = {
 }
 
 
+#: headline metrics per BENCH file: (dotted key, "higher"/"lower" is better).
+#: --compare flags a >10% move in the WORSE direction; other drift is
+#: reported but tolerated (CI machines are noisy, counts/ratios are not).
+HEADLINES = {
+    "BENCH_decode.json": [("speedup", "higher"),
+                          ("runs.optimized.tokens_per_s", "higher")],
+    "BENCH_kvcache.json": [("state_bytes.reduction_x", "higher"),
+                           ("tokens_per_s_ratio", "higher")],
+    "BENCH_kvcache_paged.json": [("state_bytes.reduction_vs_dense_x", "higher"),
+                                 ("pool.utilization", "higher")],
+    "BENCH_speculative.json": [("acceptance.accepted_per_verify_step", "higher"),
+                               ("steps_ratio", "higher"),
+                               ("tokens_per_s_ratio", "higher")],
+    "BENCH_allocator.json": [("by_backend.shift_add.satisfaction_rate", "higher"),
+                             ("by_backend.roofline.satisfaction_rate", "higher")],
+}
+
+#: fractional move in the bad direction that fails --compare
+REGRESSION_TOLERANCE = 0.10
+
+
+def _dig(doc, dotted: str):
+    for part in dotted.split("."):
+        if not isinstance(doc, dict) or part not in doc:
+            return None
+        doc = doc[part]
+    return doc
+
+
+def compare(baseline_path: str) -> int:
+    """Diff the fresh BENCH file against a committed baseline's headlines."""
+    name = os.path.basename(baseline_path)
+    specs = HEADLINES.get(name)
+    if specs is None:
+        print(f"no headline registry for {name!r} (known: "
+              f"{sorted(HEADLINES)})")
+        return 2
+    current_path = os.path.join(os.path.dirname(__file__), "..", name)
+    if not os.path.exists(current_path):
+        print(f"{name} not found at the repo root — run the section first "
+              f"(python -m benchmarks.run --only <section>)")
+        return 2
+    with open(baseline_path) as f:
+        base = json.load(f)
+    with open(current_path) as f:
+        cur = json.load(f)
+    failures = []
+    print(f"comparing {name}: current vs baseline ({baseline_path})")
+    for key, direction in specs:
+        b, c = _dig(base, key), _dig(cur, key)
+        if b is None:
+            print(f"  {key:>42}: (not in baseline — skipped)")
+            continue
+        if c is None:
+            print(f"  {key:>42}: MISSING from current file")
+            failures.append(key)
+            continue
+        change = (c - b) / abs(b) if b else (0.0 if c == b else float("inf"))
+        bad = -change if direction == "higher" else change
+        flag = "REGRESSED" if bad > REGRESSION_TOLERANCE else "ok"
+        print(f"  {key:>42}: {b:g} -> {c:g}  ({change:+.1%}, {direction} "
+              f"is better) {flag}")
+        if bad > REGRESSION_TOLERANCE:
+            failures.append(key)
+    if failures:
+        print(f"REGRESSION (> {REGRESSION_TOLERANCE:.0%}) in: {failures}")
+        return 1
+    print("no headline regression")
+    return 0
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--full", action="store_true", help="paper-scale budgets")
     ap.add_argument("--only", default=None, choices=sorted(SECTIONS))
     ap.add_argument("--smoke", action="store_true",
                     help="tiny-mode pass over every registered section (CI)")
+    ap.add_argument("--compare", default=None, metavar="BASELINE.json",
+                    help="diff the repo-root BENCH file of the same name "
+                         "against this committed baseline; exit non-zero on "
+                         "a >10%% headline regression")
     args = ap.parse_args(argv)
     if args.smoke and args.full:
         ap.error("--smoke and --full are mutually exclusive")
+    if args.compare:
+        if args.smoke or args.full or args.only:
+            ap.error("--compare is a standalone mode")
+        return compare(args.compare)
 
     # --smoke pins fast=True explicitly so the CI job keeps its tiny-mode
     # guarantee even if the default mode ever changes

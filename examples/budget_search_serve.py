@@ -16,11 +16,17 @@ serving stack.
      budget bought and the engine deploys block tables + on-demand
      allocation, serving the same requests on strictly fewer state bytes.
 
+With ``--speculate`` a 4th condition searches a strictly-cheaper *draft*
+re-packing of the condition-3 deployment (DESIGN.md §13) and serves the
+same requests self-speculatively: the v4 artifact carries weights + state
++ pool + draft, and the engine auto-enables ``speculate=K`` from it.
+
 Each condition writes a versioned ``PolicyArtifact``; conditions 1-2 deploy
 via ``launch/serve.py --policy`` (the CLI path), condition 3 additionally
 verifies the engine's packed state against the artifact.
 
-    PYTHONPATH=src python examples/budget_search_serve.py [--tiny] [--paged]
+    PYTHONPATH=src python examples/budget_search_serve.py [--tiny] [--paged] \
+        [--speculate]
 
 ``--tiny`` shrinks the pretraining/search budgets so the whole demo smoke-
 runs in CI (tests/test_examples.py).
@@ -43,7 +49,8 @@ from repro.core.policy import BitPolicy, Budget
 from repro.cost import RooflineCostModel, ShiftAddCostModel
 from repro.kvcache.env import KVQuantEnv
 from repro.launch import serve as serve_mod
-from repro.launch.search import search_policy, state_controller_config
+from repro.launch.search import (attach_draft, search_draft_policy,
+                                 search_policy, state_controller_config)
 from repro.models import registry
 from repro.quant import apply as qapply
 from repro.quant.env import LMQuantEnv
@@ -66,6 +73,10 @@ def main(argv=None):
     ap.add_argument("--paged", action="store_true",
                     help="condition 3 prices + deploys a paged KV block pool "
                          "(DESIGN.md §12) instead of dense per-slot caches")
+    ap.add_argument("--speculate", action="store_true",
+                    help="condition 4: search a strictly-cheaper DRAFT policy "
+                         "for the condition-3 artifact and serve the same "
+                         "requests self-speculatively (DESIGN.md §13)")
     args = ap.parse_args(argv)
     pretrain = 8 if args.tiny else 40
     iters = 4 if args.tiny else 10
@@ -157,6 +168,44 @@ def main(argv=None):
               f"{dense_bytes} B "
               f"({dense_bytes / max(eng.allocated_state_bytes(), 1):.1f}x "
               f"less state memory for the same requests)")
+
+    # ---- condition 4: self-speculative serving (DESIGN.md §13) ------------
+    # the condition-3 artifact grows a searched DRAFT policy — a strictly
+    # cheaper re-packing of the same weights whose argmax agrees with the
+    # deployment — and the engine auto-enables speculate=K from it: the
+    # same requests, the same (possibly paged, quantized) KV cache, fewer
+    # full-policy weight passes per emitted token
+    if args.speculate:
+        calib = np.random.default_rng(1).integers(1, cfg.vocab_size, (8, 12))
+        dres, denv, dep_cost = search_draft_policy(
+            env.params, cfg, art_kv.policy, metric="size_mib", calib=calib,
+            cost_model=ShiftAddCostModel(), draft_frac=0.8, draft_accept=0.4)
+        draft_cost = denv.costs(dres.policy)["size_mib"]
+        if not (dres.success and draft_cost < dep_cost):
+            # same invariant launch/search.py enforces: a draft rides an
+            # artifact only when strictly cheaper than the deployment
+            raise SystemExit(
+                f"[speculative] draft search failed (success={dres.success}, "
+                f"{draft_cost:.3f} vs deployed {dep_cost:.3f} MiB)")
+        art_spec = attach_draft(art_kv, dres.policy, 2, slots=slots)
+        art_spec.meta.update(draft_success=True,
+                             draft_agreement=denv.agreement(dres.policy))
+        spec_path = os.path.join(out_dir, "policy_speculative.json")
+        art_spec.save(spec_path)
+        eng_spec = ServeEngine(cfg, qp, max_slots=slots, max_seq=max_seq,
+                               artifact=art_spec)
+        outs = eng_spec.generate([[5, 6, 7, 8], [1, 2, 9], [4, 4, 4, 4, 4]],
+                                 max_new_tokens=8)
+        st = eng_spec.stats
+        print(f"[speculative] draft mean_bits="
+              f"{dres.policy.mean_bits():.2f} (deployed "
+              f"{art_kv.policy.mean_bits():.2f}, size "
+              f"{draft_cost:.3f} vs {dep_cost:.3f} MiB) "
+              f"K={art_spec.draft_k}; served "
+              f"{sum(len(o) for o in outs)} tokens in {st['decode_steps']} "
+              f"verify steps, accept rate "
+              f"{st['spec_accepted'] / max(st['spec_proposed'], 1):.2f} "
+              f"-> {spec_path}")
 
     # ---- deploy conditions 1-2 through the serving CLI --------------------
     for path in (mem_path, lat_path):

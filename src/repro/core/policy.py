@@ -369,11 +369,12 @@ def classify_zone(acc: float, res, t: "Targets | Budget") -> Zone:
 # ---------------------------------------------------------------------------
 
 #: bump when the artifact JSON layout changes incompatibly
-ARTIFACT_VERSION = 3
+ARTIFACT_VERSION = 4
 
 #: versions this build can still read (v1 artifacts have no KV policy,
-#: v1/v2 have no paged pool geometry — both load with those fields None)
-READABLE_ARTIFACT_VERSIONS = (1, 2, 3)
+#: v1/v2 have no paged pool geometry, v1-v3 have no draft policy — all
+#: load with those fields None/0)
+READABLE_ARTIFACT_VERSIONS = (1, 2, 3, 4)
 
 
 def layer_registry_hash(layers: Iterable[LayerInfo]) -> str:
@@ -405,6 +406,13 @@ class PolicyArtifact:
                    ``block`` (sequence positions per physical block) and
                    ``num_blocks`` (usable blocks the state_bytes budget
                    bought).  None: the dense per-slot containers.
+    draft_policy   per-layer *draft* weight bitwidths for self-speculative
+                   decoding (v4, DESIGN.md §13): a second policy over the
+                   SAME weight registry, strictly cheaper than ``policy``,
+                   that the engine re-packs the deployed weights under to
+                   propose tokens.  None: no speculation.
+    draft_k        tokens the draft proposes per verify step (> 0 iff
+                   ``draft_policy`` is set) — the searched burst length.
     meta           free-form provenance (arch, controller stats, wall time)
     """
 
@@ -416,13 +424,16 @@ class PolicyArtifact:
     state_policy: BitPolicy | None = None
     state_registry_hash: str = ""
     pool: dict | None = None
+    draft_policy: BitPolicy | None = None
+    draft_k: int = 0
     meta: dict = dataclasses.field(default_factory=dict)
     version: int = ARTIFACT_VERSION
 
     @classmethod
     def build(cls, policy: BitPolicy, *, backend: str = "", report: Mapping | None = None,
               budget: Budget | None = None, state_policy: "BitPolicy | None" = None,
-              pool: Mapping | None = None, meta: Mapping | None = None) -> "PolicyArtifact":
+              pool: Mapping | None = None, draft_policy: "BitPolicy | None" = None,
+              draft_k: int = 0, meta: Mapping | None = None) -> "PolicyArtifact":
         if pool is not None:
             if state_policy is None:
                 raise ValueError("pool geometry needs a state_policy (the "
@@ -430,12 +441,22 @@ class PolicyArtifact:
             missing = {"block", "num_blocks"} - set(pool)
             if missing:
                 raise ValueError(f"pool geometry missing keys: {sorted(missing)}")
+        if (draft_policy is not None) != (draft_k > 0):
+            raise ValueError("draft_policy and draft_k > 0 go together "
+                             f"(got draft_k={draft_k}, draft_policy="
+                             f"{'set' if draft_policy is not None else 'None'})")
+        if draft_policy is not None and (
+                layer_registry_hash(draft_policy.layers)
+                != layer_registry_hash(policy.layers)):
+            raise ValueError("draft_policy must cover the same weight "
+                             "registry as the deployed policy")
         return cls(policy=policy, registry_hash=layer_registry_hash(policy.layers),
                    backend=backend, report=dict(report or {}), budget=budget,
                    state_policy=state_policy,
                    state_registry_hash=(layer_registry_hash(state_policy.layers)
                                         if state_policy is not None else ""),
                    pool=dict(pool) if pool is not None else None,
+                   draft_policy=draft_policy, draft_k=int(draft_k),
                    meta=dict(meta or {}))
 
     # -- validation ----------------------------------------------------------
@@ -470,6 +491,9 @@ class PolicyArtifact:
                                  if self.state_policy is not None else None),
                 "state_registry_hash": self.state_registry_hash,
                 "pool": self.pool,
+                "draft_policy": (json.loads(self.draft_policy.to_json())
+                                 if self.draft_policy is not None else None),
+                "draft_k": self.draft_k,
                 "meta": self.meta,
                 "policy": json.loads(self.policy.to_json()),
             },
@@ -493,6 +517,9 @@ class PolicyArtifact:
             state_policy=state_policy,
             state_registry_hash=d.get("state_registry_hash", ""),
             pool=dict(d["pool"]) if d.get("pool") else None,
+            draft_policy=(BitPolicy.from_json(json.dumps(d["draft_policy"]))
+                          if d.get("draft_policy") else None),
+            draft_k=int(d.get("draft_k", 0)),
             meta=dict(d.get("meta") or {}),
             version=version)
 

@@ -20,10 +20,21 @@ Any subset of cost metrics may be constrained simultaneously (repeat
 backend, in that backend's units (DESIGN.md §10).  A ``state_bytes`` limit
 runs the state-bitwidth phase after the weight phase and versions the KV
 policy in the same artifact.
+
+``--draft`` runs a third phase: the same controller searches a strictly-
+cheaper *draft* weight policy maximizing a predicted-acceptance proxy
+(one-step argmax agreement vs the deployed packing, smoothed by the logit
+divergence) for self-speculative decoding; the v4 artifact records
+``draft_policy`` + K and the serve engine auto-enables ``speculate=K``
+from it (DESIGN.md §13):
+
+    PYTHONPATH=src python -m repro.launch.search --arch gemma-2b --reduced \
+        --limit size_mib=0.5 --draft --speculate-k 3 --out policy.json
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 
 import jax
@@ -99,6 +110,74 @@ def search_policy(env: LMQuantEnv, budget: Budget, *,
     return artifact, result
 
 
+def search_draft_policy(params: dict, cfg, deployed_policy, *, metric: str,
+                        calib, cost_model=None, qimpl: str = "auto",
+                        draft_frac: float = 0.6, draft_accept: float = 0.6,
+                        config: ControllerConfig | None = None, log=None):
+    """Search the self-speculation *draft* policy for a deployed policy.
+
+    The controller that allocated the deployed bitwidths runs again over a
+    ``spec.env.DraftQuantEnv``: quality is the predicted-acceptance proxy
+    (one-step argmax agreement of the draft re-packing vs the deployed
+    packing, divergence-smoothed; ``draft_accept`` is the minimum) and the
+    budget caps the draft's ``metric`` cost at ``draft_frac`` of the
+    deployed policy's — so a successful draft is strictly cheaper under the
+    chosen cost metric (DESIGN.md §13).  ``params`` is the train-layout
+    float tree.  Returns ``(SigmaQuantResult, DraftQuantEnv,
+    deployed_cost)``.
+    """
+    from repro.core.packing import VALID_BITS
+    from repro.spec.env import DraftQuantEnv
+
+    api = registry.get_api(cfg)
+    serve_params = api.unstack(params, cfg)
+    denv = DraftQuantEnv(params, serve_params, cfg, deployed_policy, calib,
+                         cost_model=cost_model, qimpl=qimpl)
+    deployed_cost = float(denv.costs(deployed_policy)[metric])
+    budget = Budget.of(draft_accept, acc_buffer=0.1, buffer=0.08,
+                       **{metric: draft_frac * deployed_cost})
+    # the draft's bit ladder sits strictly BELOW the deployed maximum: the
+    # controller then *starts* at "deployed minus one level" — the natural
+    # draft ansatz — and refines downward with the env's probe ordering;
+    # on the size metrics the result is strictly cheaper by construction
+    dep_max = max(deployed_policy.bits.values())
+    ladder = tuple(b for b in sorted(VALID_BITS) if b < dep_max) \
+        or (min(VALID_BITS),)
+    cc = config or dataclasses.replace(
+        state_controller_config(len(denv.layer_infos())), bit_set=ladder)
+    result = SigmaQuantController(denv, budget, cc, log=log).run()
+    return result, denv, deployed_cost
+
+
+def attach_draft(artifact: PolicyArtifact, draft_policy, draft_k: int, *,
+                 slots: int | None = None) -> PolicyArtifact:
+    """Return a copy of ``artifact`` carrying a draft policy + K (v4).
+
+    When the artifact also carries paged-pool geometry, the pool grows by
+    ``slots * ceil(K / block)`` burst-scratch blocks: a speculative burst
+    transiently writes up to K positions past the committed one and the
+    engine's admission reservations pre-count that headroom (DESIGN.md
+    §13), so a pool sized for the non-speculative demand alone would push
+    the same workload into backpressure — or reject a single large request
+    outright.  The ``state_bytes`` budget still bounds LIVE tokens; the
+    scratch blocks are transient state the deployment must nonetheless
+    hold, and the growth is recorded in ``meta``.
+    """
+    out = dataclasses.replace(artifact, draft_policy=draft_policy,
+                              draft_k=int(draft_k),
+                              report=dict(artifact.report),
+                              meta=dict(artifact.meta))
+    if artifact.pool is not None:
+        if slots is None:
+            raise ValueError("attach_draft on a pooled artifact needs the "
+                             "serving slot count (burst-scratch headroom)")
+        headroom = slots * -(-int(draft_k) // int(artifact.pool["block"]))
+        out.pool = dict(artifact.pool,
+                        num_blocks=int(artifact.pool["num_blocks"]) + headroom)
+        out.meta["draft_pool_headroom_blocks"] = headroom
+    return out
+
+
 def state_controller_config(n_entries: int) -> ControllerConfig:
     """Controller budgets for the post-training state phase.
 
@@ -160,6 +239,23 @@ def main(argv=None) -> int:
                     help="--paged: expected live KV tokens across slots the "
                          "budget prices (default: slots * kv-max-seq, the "
                          "dense worst case)")
+    # self-speculation draft phase (DESIGN.md §13) — used with --draft
+    ap.add_argument("--draft", action="store_true",
+                    help="also search a strictly-cheaper DRAFT weight policy "
+                         "maximizing a predicted-acceptance proxy; the "
+                         "artifact (v4) records it + K and the engine "
+                         "auto-enables speculate=K from it")
+    ap.add_argument("--draft-frac", type=float, default=0.6,
+                    help="draft budget: fraction of the deployed policy's "
+                         "primary-metric cost the draft may spend")
+    ap.add_argument("--draft-accept", type=float, default=0.6,
+                    help="minimum predicted first-token acceptance (one-step "
+                         "argmax agreement of draft vs deployed packing)")
+    ap.add_argument("--draft-calib", type=int, default=16,
+                    help="calibration prompts for the acceptance proxy")
+    ap.add_argument("--speculate-k", type=int, default=3,
+                    help="--draft: tokens the draft proposes per verify step "
+                         "(recorded in the artifact)")
     args = ap.parse_args(argv)
     if not args.limit:
         ap.error("pass at least one --limit metric=value")
@@ -228,6 +324,36 @@ def main(argv=None) -> int:
         log=print, meta={"arch": cfg.name, "backend": args.backend},
         state_env=state_env, state_budget=state_budget, state_config=state_cc,
         pool=pool_req)
+
+    if args.draft:
+        metric = budget.primary_metric
+        calib = np.random.default_rng(args.seed + 1).integers(
+            1, cfg.vocab_size, (args.draft_calib, args.kv_calib_len))
+        print(f"draft search: {metric} <= {args.draft_frac:g} x deployed, "
+              f"predicted acceptance >= {args.draft_accept:g}")
+        dres, denv, dep_cost = search_draft_policy(
+            env.params, cfg, artifact.policy, metric=metric, calib=calib,
+            cost_model=env.cost_model, draft_frac=args.draft_frac,
+            draft_accept=args.draft_accept, log=print)
+        draft_cost = float(env.costs(dres.policy)[metric])
+        if dres.success and draft_cost < dep_cost:
+            # a draft rides the artifact ONLY when strictly cheaper than the
+            # deployed policy under the chosen metric — the invariant the
+            # engine's speculation win rests on
+            artifact = attach_draft(artifact, dres.policy, args.speculate_k,
+                                    slots=args.slots)
+            artifact.report[f"draft_{metric}"] = draft_cost
+            artifact.meta.update(draft_success=True,
+                                 draft_agreement=denv.agreement(dres.policy),
+                                 draft_divergence=denv.divergence(dres.policy),
+                                 draft_mean_bits=dres.policy.mean_bits(),
+                                 draft_k=args.speculate_k)
+        else:
+            artifact.meta.update(draft_success=False)
+            print(f"draft search failed ({metric} {draft_cost:g} vs deployed "
+                  f"{dep_cost:g}, success={dres.success}); artifact carries "
+                  f"no draft policy")
+
     artifact.save(args.out)
     print(f"policy artifact -> {args.out}  (success={result.success} "
           f"mean_bits={result.policy.mean_bits():.2f} backend={args.backend})")
@@ -238,6 +364,10 @@ def main(argv=None) -> int:
     if artifact.pool is not None:
         print(f"  paged pool: {artifact.pool['num_blocks']} blocks x "
               f"{artifact.pool['block']} positions")
+    if artifact.draft_policy is not None:
+        print(f"  draft policy: mean_bits={artifact.draft_policy.mean_bits():.2f} "
+              f"K={artifact.draft_k} "
+              f"predicted_acceptance={artifact.meta['draft_agreement']:.3f}")
     for metric, value in artifact.report.items():
         print(f"  {metric:>16} = {value:g}")
 

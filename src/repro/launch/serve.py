@@ -65,6 +65,10 @@ def main(argv=None) -> int:
             print(f"  quantized KV state: mean_bits="
                   f"{artifact.state_policy.mean_bits():.2f} "
                   f"({len(artifact.state_policy.layers)} entries)")
+        if artifact.draft_policy is not None:
+            print(f"  self-speculative draft: K={artifact.draft_k} "
+                  f"mean_bits={artifact.draft_policy.mean_bits():.2f} "
+                  f"(DESIGN.md §13)")
     elif args.wbits != "float":
         specs = qapply.layer_specs(params, cfg)
         if args.wbits.endswith(".json"):

@@ -321,6 +321,51 @@ def prefill_sp(params, cfg, tokens, *, mesh, qimpl="auto"):
     return logits_all[:, -1:], caches
 
 
+def decode_verify(params, cfg, caches, tokens, pos, *, qimpl="auto"):
+    """Speculative verify: T burst tokens per slot through ONE weight pass.
+
+    ``tokens``: (B, T) — the pending token followed by T-1 draft proposals;
+    ``pos``: (B,) — per-slot write position of burst index 0.  Returns
+    ``(logits (B, T, V), caches, burst_kv)`` where ``burst_kv`` is the
+    per-layer fp K/V of the burst (``[(k, v), ...]``, each (B, T, H, hd))
+    the engine's commit pass replays for the accepted prefix (DESIGN.md §13).
+
+    Token-exactness contract: the linear ops (projections, wo, MLP, logits)
+    batch all T positions — the speculative win, the weights are read once —
+    while the cache append + attend runs SEQUENTIALLY over the burst, so a
+    quantized cache sees exactly the non-speculative append/requantize
+    sequence (evolving block scales included) and the per-position logits
+    are bitwise those of T consecutive ``decode_step`` calls.
+    """
+    b, t = tokens.shape
+    x = embed_tokens(params, tokens, cfg)                     # (B, T, d)
+    pos = jnp.asarray(pos, jnp.int32).reshape(-1)
+    positions = pos[:, None] + jnp.arange(t, dtype=jnp.int32)  # (B, T)
+    new_caches, burst_kv = [], []
+    for lp, cache in zip(params["layers"], caches):
+        xn = layers.norm(lp["ln1"], x, cfg.norm, cfg.norm_eps)
+        q, k_new, v_new = layers._qkv(lp["attn"], xn, cfg, positions, qimpl=qimpl)
+        burst_kv.append((k_new, v_new))
+        outs = []
+        for j in range(t):                                    # static unroll
+            att, cache = layers.decode_attend_one(
+                cache, q[:, j : j + 1], k_new[:, j : j + 1], v_new[:, j : j + 1],
+                pos + j, cfg, qimpl=qimpl)
+            outs.append(att.astype(x.dtype))
+        o = jnp.concatenate(outs, axis=1)                     # (B, T, hq, hd)
+        y = layers.qdense(lp["attn"]["wo"], o.reshape(b, t, -1), qimpl=qimpl)
+        new_caches.append(cache)
+        h = x + y
+        hn = layers.norm(lp["ln2"], h, cfg.norm, cfg.norm_eps)
+        if cfg.family == "moe":
+            x = h + moe.moe_mlp(lp["mlp"], hn, cfg, qimpl=qimpl)
+        else:
+            x = h + layers.mlp(lp["mlp"], hn, cfg.mlp, qimpl=qimpl)
+    hidden = layers.norm(params["final_norm"], x, cfg.norm, cfg.norm_eps)
+    logits = logits_fn(params, hidden, cfg, qimpl=qimpl)
+    return logits, new_caches, burst_kv
+
+
 def decode_step(params, cfg, caches, token, pos, *, embeds=None, qimpl="auto"):
     """One token through unrolled layers with cache update at ``pos``.
 

@@ -459,6 +459,58 @@ def cross_kv(p: dict, ctx: jax.Array, cfg, *, bits=None, qimpl: str = "auto"):
     return k, v
 
 
+def decode_attend_one(
+    cache,                        # {"k","v"} dict | QuantizedKVLayer | PagedKVLayer
+    q: jax.Array,                 # (B, 1, hq, hd) post-RoPE query
+    k_new: jax.Array,             # (B, 1, n_kv, hd) post-RoPE key
+    v_new: jax.Array,
+    pos: jax.Array,               # () or (B,) int32 — write/attend position
+    cfg,
+    *,
+    window: int = 0,
+    qimpl: str = "auto",
+):
+    """Write ONE position's K/V at ``pos`` and attend over cache[: pos+1].
+
+    The append+attend core shared by the per-token decode step
+    (:func:`attention_decode` / :func:`attention_decode_quant`) and the
+    speculative verify burst (models/decoder.decode_verify) — one code path,
+    so a burst position is bitwise the decode step it replaces (DESIGN.md
+    §13).  Returns ``(o (B, 1, hq, hd), cache)``.
+    """
+    from repro.kernels.quant_kv.ops import quant_kv_append, quant_kv_attention
+
+    b = q.shape[0]
+    if isinstance(cache, dict):
+        cache_k, cache_v = cache["k"], cache["v"]
+        skv = cache_k.shape[1]
+        if jnp.ndim(pos) == 0:
+            cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k_new.astype(cache_k.dtype), pos, axis=1)
+            cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v_new.astype(cache_v.dtype), pos, axis=1)
+            kv_valid = jnp.arange(skv) <= pos
+            if window:
+                kv_valid &= jnp.arange(skv) > pos - window
+        else:  # per-slot positions
+            upd = jax.vmap(lambda c, n, p_: jax.lax.dynamic_update_slice_in_dim(c, n, p_, axis=0))
+            cache_k = upd(cache_k, k_new.astype(cache_k.dtype), pos)
+            cache_v = upd(cache_v, v_new.astype(cache_v.dtype), pos)
+            kv_valid = jnp.arange(skv)[None, :] <= pos[:, None]
+            if window:
+                kv_valid &= jnp.arange(skv)[None, :] > (pos[:, None] - window)
+        o = _direct_attention(q, cache_k, cache_v, cfg.n_kv_heads,
+                              causal=False, kv_valid=kv_valid)
+        return o, {"k": cache_k, "v": cache_v}
+    cache = quant_kv_append(cache, pos, k_new, v_new, impl=qimpl)
+    skv = cache.seq
+    posv = jnp.asarray(pos, jnp.int32).reshape(-1)[:, None]   # (B or 1, 1)
+    kv_valid = jnp.broadcast_to(jnp.arange(skv)[None, :] <= posv, (b, skv))
+    if window:
+        kv_valid &= jnp.broadcast_to(jnp.arange(skv)[None, :] > (posv - window),
+                                     (b, skv))
+    o = quant_kv_attention(q, cache, kv_valid, impl=qimpl, out_dtype=q.dtype)
+    return o, cache
+
+
 def attention_decode(
     p: dict,
     x: jax.Array,                 # (B, 1, d) — one new token
@@ -476,28 +528,13 @@ def attention_decode(
     ``pos`` may be a scalar (lockstep batch — the dry-run serve_step) or a
     (B,) vector (continuous batching: every slot at its own position).
     """
-    hd = cfg.resolved_head_dim
     b = x.shape[0]
     positions = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1, 1), (b, 1))
     q, k_new, v_new = _qkv(p, x, cfg, positions, bits=bits, qimpl=qimpl)
-    skv = cache_k.shape[1]
-    if jnp.ndim(pos) == 0:
-        cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k_new.astype(cache_k.dtype), pos, axis=1)
-        cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v_new.astype(cache_v.dtype), pos, axis=1)
-        kv_valid = jnp.arange(skv) <= pos
-        if window:
-            kv_valid &= jnp.arange(skv) > pos - window
-    else:  # per-slot positions
-        upd = jax.vmap(lambda c, n, p_: jax.lax.dynamic_update_slice_in_dim(c, n, p_, axis=0))
-        cache_k = upd(cache_k, k_new.astype(cache_k.dtype), pos)
-        cache_v = upd(cache_v, v_new.astype(cache_v.dtype), pos)
-        kv_valid = jnp.arange(skv)[None, :] <= pos[:, None]
-        if window:
-            kv_valid &= jnp.arange(skv)[None, :] > (pos[:, None] - window)
-    o = _direct_attention(q, cache_k, cache_v, cfg.n_kv_heads,
-                          causal=False, kv_valid=kv_valid)
+    o, cache = decode_attend_one({"k": cache_k, "v": cache_v}, q, k_new, v_new,
+                                 pos, cfg, window=window, qimpl=qimpl)
     y = qdense(p["wo"], o.reshape(b, 1, -1), bits=_b(bits, "wo"), qimpl=qimpl)
-    return y, (cache_k, cache_v)
+    return y, (cache["k"], cache["v"])
 
 
 def attention_decode_quant(
@@ -519,19 +556,12 @@ def attention_decode_quant(
     lanes are the only state bytes the step moves.  ``qimpl`` carries over:
     "xla" runs the jnp reference, "pallas"/"interpret" the fused kernels.
     """
-    from repro.kernels.quant_kv.ops import quant_kv_append, quant_kv_attention
-
     b = x.shape[0]
     positions = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1, 1), (b, 1))
     q, k_new, v_new = _qkv(p, x, cfg, positions, bits=bits, qimpl=qimpl)
-    cache = quant_kv_append(cache, pos, k_new, v_new, impl=qimpl)
-    skv = cache.seq
-    posv = jnp.asarray(pos, jnp.int32).reshape(-1)[:, None]   # (B or 1, 1)
-    kv_valid = jnp.broadcast_to(jnp.arange(skv)[None, :] <= posv, (b, skv))
-    if window:
-        kv_valid &= jnp.broadcast_to(jnp.arange(skv)[None, :] > (posv - window),
-                                     (b, skv))
-    o = quant_kv_attention(q, cache, kv_valid, impl=qimpl, out_dtype=x.dtype)
+    o, cache = decode_attend_one(cache, q, k_new, v_new, pos, cfg,
+                                 window=window, qimpl=qimpl)
+    o = o.astype(x.dtype)
     y = qdense(p["wo"], o.reshape(b, 1, -1), bits=_b(bits, "wo"), qimpl=qimpl)
     return y, cache
 

@@ -74,6 +74,10 @@ class ModelAPI:
     # state_bits = per-KV-entry [(k_bits, v_bits), ...] packs the caches as
     # kvcache.QuantizedKVLayer (families without KV entries reject it)
     init_decode_state: Callable
+    # speculative verify: (params, cfg, state, tokens (B,T), pos (B,)) ->
+    # (logits (B,T,V), state, burst_kv); None where the family's state cannot
+    # rewind a burst (SSM/hybrid recurrent state, enc-dec cross-attention)
+    decode_verify: Callable | None = None
 
 
 def _decoder_state(cfg, batch, seq, dtype=jnp.bfloat16, abstract=False, *,
@@ -121,6 +125,7 @@ _DECODER_API = ModelAPI(
     prefill=decoder.prefill,
     decode_step=decoder.decode_step,
     init_decode_state=_decoder_state,
+    decode_verify=decoder.decode_verify,
 )
 
 _REGISTRY: dict[str, ModelAPI] = {

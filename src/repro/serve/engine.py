@@ -50,6 +50,14 @@ Padded prefill is exact for every family: attention masks pad positions via
 the per-slot ``kv_valid``, and SSM/hybrid prefills mask pad tokens out of
 the recurrent-state update (``lengths`` threaded through ``api.prefill``),
 so the decode state never depends on the pad length.
+
+``speculate=K`` (with a ``draft_policy``, or auto-enabled by a v4 artifact
+carrying one) turns each decode round into a self-speculative burst
+(DESIGN.md §13): a strictly-cheaper re-packing of the SAME weights
+proposes K tokens, the deployed policy verifies all K+1 positions in one
+batched weight pass, and the cache rewinds bitwise-exactly to the accepted
+prefix — greedy output is token-identical to the non-speculative engine on
+fp, quantized and paged caches, at up to K+1 tokens per full weight read.
 """
 from __future__ import annotations
 
@@ -66,6 +74,8 @@ from repro.configs.base import ArchConfig
 from repro.core.policy import PolicyArtifact
 from repro.models import registry
 from repro.quant import apply as qapply
+from repro.spec import loop as spec_loop
+from repro.spec.draft import build_draft_params
 from .sampling import sample
 
 
@@ -101,6 +111,7 @@ class ServeEngine:
                  state_bits=None, kv_block: int | None = None,
                  paged: bool = False, pool_blocks: int | None = None,
                  share_prefix: bool = True,
+                 speculate: int | None = None, draft_policy=None,
                  artifact: PolicyArtifact | None = None):
         if cfg.family in ("audio", "encdec"):
             raise NotImplementedError(
@@ -118,6 +129,39 @@ class ServeEngine:
         # the decode fast path; exact-output-preserving (no requantization)
         self.params = qapply.fuse_projections(params) if fuse_projections else params
         self.api = registry.get_api(cfg)
+        # self-speculative decoding (DESIGN.md §13): a searched low-bit draft
+        # re-packing of the SAME weights proposes K tokens per step; explicit
+        # speculate/draft_policy win, else a draft-carrying v4 artifact
+        # auto-enables speculation at its searched K
+        explicit_draft = draft_policy is not None
+        if draft_policy is None and artifact is not None \
+                and artifact.draft_policy is not None:
+            draft_policy = artifact.draft_policy
+            if speculate is None:
+                speculate = artifact.draft_k
+        if explicit_draft and speculate is None:
+            # symmetric with the speculate-without-draft error below: a
+            # draft that silently never drafts is a misconfiguration
+            raise ValueError("draft_policy given without speculate=K "
+                             "(pass speculate, or deploy a v4 artifact "
+                             "that records K)")
+        self.speculate = int(speculate or 0)
+        self.draft_params = None
+        self.draft_bits: dict[str, int] = {}
+        if self.speculate:
+            if draft_policy is None:
+                raise ValueError("speculate=K needs a draft_policy (or a "
+                                 "draft-carrying v4 artifact)")
+            if self.api.decode_verify is None:
+                raise NotImplementedError(
+                    f"family {cfg.family!r} cannot self-speculate: its decode "
+                    f"state has no burst-rewindable KV form (DESIGN.md §13)")
+            # draft containers derive from the UNFUSED tree so a heterogeneous
+            # draft policy never has to split a fused leaf; equal-bit draft
+            # groups re-fuse below exactly like the deployed weights
+            draft, self.draft_bits = build_draft_params(params, draft_policy, cfg)
+            self.draft_params = (qapply.fuse_projections(draft)
+                                 if fuse_projections else draft)
         self.max_slots = max_slots
         self.max_seq = max_seq
         self.prefill_pad = prefill_pad
@@ -178,7 +222,15 @@ class ServeEngine:
                        if artifact.state_policy is not None else None)
             kvcache.verify_state_bits(self.state, artifact, surface=surface)
         self.stats = {"prefill_tokens": 0, "decode_steps": 0, "completed": 0,
-                      "wall_s": 0.0}
+                      "wall_s": 0.0, "spec_steps": 0, "spec_proposed": 0,
+                      "spec_accepted": 0}
+        #: quantized decode-state layers need the burst snapshot/replay
+        #: commit protocol (spec.loop); fp layers rewind for free
+        self._quant_state = any(
+            isinstance(layer, (kvcache.QuantizedKVLayer, kvcache.PagedKVLayer))
+            for layer in (self.state if isinstance(self.state, list) else []))
+        self._spec_jits: dict[int, dict] = {}  # burst length K -> jitted fns
+        self._qimpl = qimpl
 
         api, cfg_ = self.api, cfg
 
@@ -204,6 +256,91 @@ class ServeEngine:
         # instead of silently keeping the init-time value.
         self._decode = jax.jit(decode, donate_argnums=(1,), static_argnums=(5, 6, 7))
         self._prefill = jax.jit(prefill)
+
+    # -- speculative decode (DESIGN.md §13) -------------------------------
+    def _spec_fn(self, k: int):
+        """ONE jitted draft-K / verify / accept / commit step for burst K.
+
+        Cached per K: the burst shrinks near ``max_seq`` (K_eff), so at most
+        ``speculate`` distinct compilations exist.  The whole round is a
+        single dispatch — no host decision exists between its stages, so the
+        snapshot, the K draft steps (low-bit containers, appending into the
+        shared cache), the restore, the batched K+1 verify pass, the
+        accept/reject math, and the bitwise-exact commit replay (spec.loop)
+        all fuse into one donated-state call; the only per-step host
+        transfer is (acc, out_tokens).
+        """
+        if k in self._spec_jits:
+            return self._spec_jits[k]
+        api, cfg_, qimpl = self.api, self.cfg, self._qimpl
+        quant = self._quant_state
+
+        def spec_step(params, dparams, state, tokens, pos, key,
+                      temperature, top_k, top_p):
+            saved = spec_loop.snapshot_state(state, pos, k) if quant else None
+            tok, d_toks, d_logits = tokens, [], []
+            for j in range(k):
+                logits, state = api.decode_step(dparams, cfg_, state, tok,
+                                                pos + j, qimpl=qimpl)
+                last = logits[:, -1]
+                if temperature > 0.0:
+                    key, sub = jax.random.split(key)
+                    t = sample(last, sub, temperature=temperature, top_k=top_k,
+                               top_p=top_p)
+                else:
+                    t = sample(last)
+                d_toks.append(t)
+                d_logits.append(last)
+                tok = t[:, None]
+            d_toks = jnp.stack(d_toks, axis=1)
+            d_logits = jnp.stack(d_logits, axis=1)
+            if quant:
+                state = spec_loop.restore_state(state, saved, pos, k)
+            burst = jnp.concatenate([tokens, d_toks], axis=1)   # (B, K+1)
+            logits, state, burst_kv = api.decode_verify(params, cfg_, state,
+                                                        burst, pos, qimpl=qimpl)
+            if temperature > 0.0:
+                key, sub = jax.random.split(key)
+                acc, out = spec_loop.accept_tokens(
+                    logits, d_toks, d_logits, sub, temperature=temperature,
+                    top_k=top_k, top_p=top_p)
+            else:
+                acc, out = spec_loop.accept_tokens(logits, d_toks, d_logits,
+                                                   None)
+            if quant:
+                state = spec_loop.commit_state(state, saved, pos, acc,
+                                               burst_kv, k, qimpl=qimpl)
+            return acc, out, state, key
+
+        fn = jax.jit(spec_step, donate_argnums=(2,), static_argnums=(6, 7, 8))
+        self._spec_jits[k] = fn
+        return fn
+
+    def _burst_len(self, active: list[int]) -> int:
+        """Burst K for this step: the configured K, shrunk so no slot's
+        burst can write past ``max_seq - 1`` (active slots sit at
+        ``pos <= max_seq - 2``, so this is always >= 1)."""
+        max_pos = max(self.slots[i].pos for i in active)
+        return max(min(self.speculate, self.max_seq - 1 - max_pos), 0)
+
+    def _spec_step(self, active: list[int], tokens_h, pos_h,
+                   k: int) -> dict[int, list[int]]:
+        """One draft-K / verify / accept / commit round -> emitted tokens
+        per active slot (1..K+1 each: accepted draft prefix + bonus)."""
+        acc, out, self.state, self._key = self._spec_fn(k)(
+            self.params, self.draft_params, self.state,
+            jnp.asarray(tokens_h), jnp.asarray(pos_h), self._key,
+            self.temperature, self.top_k, self.top_p)
+        acc_h = np.asarray(acc)      # the step's ONLY host transfer:
+        out_h = np.asarray(out)      # (B,) accepts + (B, K+1) tokens
+        self.stats["spec_steps"] += 1
+        emitted: dict[int, list[int]] = {}
+        for i in active:
+            a = int(acc_h[i])
+            emitted[i] = [int(t) for t in out_h[i, : a + 1]]
+            self.stats["spec_proposed"] += k
+            self.stats["spec_accepted"] += a
+        return emitted
 
     # -- state surgery ---------------------------------------------------
     def _insert_rows(self, slot_ids: list[int], st_new: Any,
@@ -251,9 +388,14 @@ class ServeEngine:
         tb_first = (length - 1) // blk          # block the replay append hits
         # highest position this request can ever write: at least the replay
         # append at length-1 (even for max_new_tokens <= 0 the decode loop
-        # runs one step), at most max_seq - 2 (run()'s stop condition)
+        # runs one step), at most max_seq - 2 (run()'s stop condition) — plus
+        # speculate burst headroom: a draft/verify burst transiently writes
+        # up to K positions past the committed one (capped at max_seq - 1),
+        # and reserving it here is what keeps a speculative step from ever
+        # stranding an admitted request mid-decode (DESIGN.md §13)
         last_pos = min(max(length - 1, length - 2 + req.max_new_tokens),
                        self.max_seq - 2)
+        last_pos = min(last_pos + self.speculate, self.max_seq - 1)
         tb_last = last_pos // blk
         donor, common = None, 0
         if self.share_prefix:
@@ -307,25 +449,29 @@ class ServeEngine:
             self._reserved[slot_id] = n - 1
         return self.pool.alloc()
 
-    def _ensure_append_blocks(self, active: list[int]) -> None:
-        """Before a decode step: every active slot's write block must be
-        mapped (allocate on demand at block boundaries) and exclusively
-        owned (copy-on-write when a shared prefix diverges)."""
+    def _ensure_append_blocks(self, active: list[int], span: int = 1) -> None:
+        """Before a decode step: every block an active slot can write this
+        step — positions ``[pos, pos + span - 1]``, span = K_eff + 1 under
+        speculation — must be mapped (allocate on demand at block
+        boundaries) and exclusively owned (copy-on-write when a shared
+        prefix diverges)."""
         cow_src, cow_dst = [], []
         for i in active:
-            tb = self.slots[i].pos // self._kv_blk
-            bid = int(self._host_tables[i, tb])
-            if bid < 0:
-                self._host_tables[i, tb] = self._grow_alloc(i)
-                self._tables_dirty = True
-            elif self.pool.refcount(bid) > 1:
-                fresh = self._grow_alloc(i)
-                self.pool.cow_copies += 1
-                self.pool.decref(bid)
-                self._host_tables[i, tb] = fresh
-                cow_src.append(bid)
-                cow_dst.append(fresh)
-                self._tables_dirty = True
+            pos = self.slots[i].pos
+            last = min(pos + span - 1, self.max_seq - 1)
+            for tb in range(pos // self._kv_blk, last // self._kv_blk + 1):
+                bid = int(self._host_tables[i, tb])
+                if bid < 0:
+                    self._host_tables[i, tb] = self._grow_alloc(i)
+                    self._tables_dirty = True
+                elif self.pool.refcount(bid) > 1:
+                    fresh = self._grow_alloc(i)
+                    self.pool.cow_copies += 1
+                    self.pool.decref(bid)
+                    self._host_tables[i, tb] = fresh
+                    cow_src.append(bid)
+                    cow_dst.append(fresh)
+                    self._tables_dirty = True
         if cow_src:
             self.state = [kvcache.paged.copy_blocks(layer, cow_src, cow_dst)
                           for layer in self.state]
@@ -439,9 +585,11 @@ class ServeEngine:
                         f"holds ({self.pool.num_blocks}); raise pool_blocks "
                         f"or the state_bytes budget")
             act = active()
+            k_eff = self._burst_len(act) if (self.speculate and act) else 0
             if self.paged:
-                # map/CoW every active slot's write block before the step
-                self._ensure_append_blocks(act)
+                # map/CoW every block an active slot can write this step
+                # (the whole K_eff+1 burst span under speculation)
+                self._ensure_append_blocks(act, span=k_eff + 1)
             # one lock-step decode over all slots (idle slots step harmlessly;
             # paged idle slots append into the reserved trash block)
             for i in act:
@@ -449,26 +597,35 @@ class ServeEngine:
                 tokens_h[i, 0] = self._pending_token.get(
                     i, s.generated[-1] if s.generated else 0)
                 pos_h[i] = s.pos
-            toks_dev, self.state, self._key = self._decode(
-                self.params, self.state, jnp.asarray(tokens_h),
-                jnp.asarray(pos_h), self._key, self.temperature, self.top_k,
-                self.top_p)
-            toks = np.asarray(toks_dev)  # ONE (B,) int32 host transfer
+            if k_eff > 0:
+                emitted = self._spec_step(act, tokens_h, pos_h, k_eff)
+            else:
+                toks_dev, self.state, self._key = self._decode(
+                    self.params, self.state, jnp.asarray(tokens_h),
+                    jnp.asarray(pos_h), self._key, self.temperature,
+                    self.top_k, self.top_p)
+                toks = np.asarray(toks_dev)  # ONE (B,) int32 host transfer
+                emitted = {i: [int(toks[i])] for i in act}
             self.stats["decode_steps"] += 1
             for i in act:
                 s = self.slots[i]
                 self._pending_token.pop(i, None)
-                tok = int(toks[i])
-                s.generated.append(tok)
-                s.pos += 1
-                done = (tok == s.req.eos_id or len(s.generated) >= s.req.max_new_tokens
-                        or s.pos >= self.max_seq - 1)
-                if done:
-                    results[s.req.uid] = list(s.generated)
-                    self.stats["completed"] += 1
-                    if self.paged:
-                        self._free_slot_blocks(i)
-                    self.slots[i] = _Slot()
+                for tok in emitted[i]:
+                    s.generated.append(tok)
+                    s.pos += 1
+                    done = (tok == s.req.eos_id
+                            or len(s.generated) >= s.req.max_new_tokens
+                            or s.pos >= self.max_seq - 1)
+                    if done:
+                        # a burst stops at its first terminal token: the rest
+                        # of the accepted prefix is DROPPED, the slot (and
+                        # its paged blocks) frees this very step
+                        results[s.req.uid] = list(s.generated)
+                        self.stats["completed"] += 1
+                        if self.paged:
+                            self._free_slot_blocks(i)
+                        self.slots[i] = _Slot()
+                        break
         self.stats["wall_s"] += time.perf_counter() - t0
         return results
 

@@ -5,19 +5,17 @@ import jax
 import jax.numpy as jnp
 
 
-def sample(logits: jax.Array, key: jax.Array | None = None, *,
-           temperature: float = 0.0, top_k: int = 0,
-           top_p: float = 1.0) -> jax.Array:
-    """logits (..., V) -> token ids (...,).  temperature==0 -> greedy.
+def filtered_logits(logits: jax.Array, *, temperature: float, top_k: int = 0,
+                    top_p: float = 1.0) -> jax.Array:
+    """Temperature-scaled logits with -inf outside the top-k/top-p support.
 
-    Filters compose in the standard order: temperature scaling, then top-k,
-    then top-p (nucleus) over whatever support top-k left.  All ops are
-    shape-static (sort/cumsum), so the function jits with ``temperature``,
-    ``top_k`` and ``top_p`` as static arguments.
+    The distribution :func:`sample` actually draws from, exposed so the
+    speculative accept/reject math (repro.spec.loop) can score draft and
+    verify probabilities under EXACTLY the engine's sampling filters —
+    temperature scaling, then top-k, then top-p, in that order.  Requires
+    ``temperature > 0`` (greedy has no distribution to filter).
     """
-    if temperature <= 0.0:
-        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-    assert key is not None, "sampling with temperature needs a PRNG key"
+    assert temperature > 0.0, "filtered_logits is for stochastic sampling"
     logits = logits.astype(jnp.float32) / temperature
     if top_k:
         kth = jnp.sort(logits, axis=-1)[..., -top_k][..., None]
@@ -34,6 +32,24 @@ def sample(logits: jax.Array, key: jax.Array | None = None, *,
         kth = jnp.maximum(jnp.sum(keep, axis=-1) - 1, 0)  # last kept rank
         thr = jnp.take_along_axis(sorted_desc, kth[..., None], axis=-1)
         logits = jnp.where(logits < thr, -jnp.inf, logits)
+    return logits
+
+
+def sample(logits: jax.Array, key: jax.Array | None = None, *,
+           temperature: float = 0.0, top_k: int = 0,
+           top_p: float = 1.0) -> jax.Array:
+    """logits (..., V) -> token ids (...,).  temperature==0 -> greedy.
+
+    Filters compose in the standard order: temperature scaling, then top-k,
+    then top-p (nucleus) over whatever support top-k left.  All ops are
+    shape-static (sort/cumsum), so the function jits with ``temperature``,
+    ``top_k`` and ``top_p`` as static arguments.
+    """
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    assert key is not None, "sampling with temperature needs a PRNG key"
+    logits = filtered_logits(logits, temperature=temperature, top_k=top_k,
+                             top_p=top_p)
     flat = logits.reshape(-1, logits.shape[-1])
     keys = jax.random.split(key, flat.shape[0])
     toks = jax.vmap(jax.random.categorical)(keys, flat)

@@ -1,0 +1,13 @@
+"""Self-speculative decoding (DESIGN.md §13): an ultra-low-bit *draft*
+re-packing of the SAME weights proposes K tokens per step, the deployed
+policy verifies them in one batched pass, and the engine rewinds the shared
+KV cache to the accepted prefix.
+
+* ``draft``  — derive draft weight containers from a second ``BitPolicy``
+* ``loop``   — accept/reject math + quantized-cache snapshot/replay commit
+
+The draft-policy *search* environment (``spec.env.DraftQuantEnv``) is kept
+out of this package root on purpose: it pulls in the training stack
+(``quant.env``), which the serve path must not import.
+"""
+from .draft import build_draft_params  # noqa: F401

@@ -1,0 +1,97 @@
+"""Draft-weight containers for self-speculative decoding (DESIGN.md §13).
+
+The draft model IS the deployed model at lower weight bitwidths: every
+quantizable leaf of the serve tree re-packs under a second ``BitPolicy``
+(the *draft policy*), while norms, biases and any leaf the policy does not
+name are shared by reference — no second set of fp parameters, and the
+draft reads the very same (possibly quantized, possibly paged) KV cache the
+deployed policy maintains, so speculation adds no duplicate state.
+
+``build_draft_params`` accepts the deployed tree in either form:
+
+* packed ``QuantizedTensor`` leaves (the engine's case) dequantize and
+  re-pack — bit-exactly what a deployment that only holds packed weights
+  can do, and exactly what ``spec.env.DraftQuantEnv`` scores;
+* float leaves (search-side calibration on fp params) quantize directly,
+  with the same embed-layout transpose ``quant.apply.quantize_for_serve``
+  applies.
+
+``materialize`` is an execution-backend detail: the XLA reference path
+dequantizes packed weights on every call, so a CPU draft gains nothing
+from low bits — ``"auto"`` materializes the draft containers to float
+arrays once at build time off-TPU (same values: the fp view of the packed
+levels), keeping the draft pass cheap where the fused kernels are absent.
+On TPU the packed lanes stay packed and the Pallas kernels read them
+directly — the memory-bandwidth win the draft exists for.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policy import BitPolicy, PolicyArtifact
+from repro.quant.apply import QUANT_KEYS, _serve_name
+from repro.quant.tensor import QuantizedTensor, quantize_tensor
+
+
+def _resolve_bits(spec, name: str) -> int | None:
+    if isinstance(spec, int):
+        return spec
+    return spec.bits.get(name)
+
+
+def build_draft_params(params: dict, spec, cfg, *,
+                       materialize: str | bool = "auto"):
+    """Serve-layout tree -> (draft tree, draft-bits mapping).
+
+    ``spec``: an int (uniform draft bits), a ``BitPolicy`` over the weight
+    registry, or a ``PolicyArtifact`` (its ``draft_policy`` is used).
+    Returns ``(draft_params, draft_bits)`` where ``draft_bits`` maps policy
+    names to the packed draft bitwidths (the analogue of
+    ``quant.apply.packed_policy_bits``, reported by stats/benchmarks).
+    """
+    if isinstance(spec, PolicyArtifact):
+        if spec.draft_policy is None:
+            raise ValueError("artifact carries no draft policy")
+        spec = spec.draft_policy
+    if not isinstance(spec, (int, BitPolicy)):
+        raise TypeError(f"cannot resolve draft bits from {type(spec).__name__}")
+    if materialize == "auto":
+        materialize = jax.default_backend() != "tpu"
+    draft_bits: dict[str, int] = {}
+
+    def pack(fp, name: str, bits: int, *, embed: bool):
+        draft_bits[name] = int(bits)
+        qt = quantize_tensor(fp, bits)
+        if not materialize:
+            return qt
+        w = qt.dequantize(jnp.float32)
+        # the fp view of an embed keeps the (V, d) take-rows layout; packed
+        # embeds live transposed (d, V) like the lm_head (decoder.embed_tokens)
+        return w.T if embed else w
+
+    def rec(tree, path):
+        if isinstance(tree, dict):
+            return {k: rec(v, path + (k,)) for k, v in tree.items()}
+        if isinstance(tree, list):
+            return [rec(v, path + (str(i),)) for i, v in enumerate(tree)]
+        name = _serve_name(path)
+        embed = path[-1] == "embed"
+        if isinstance(tree, QuantizedTensor):
+            bits = _resolve_bits(spec, name)
+            if bits is None:
+                return tree                      # share the deployed container
+            return pack(tree.dequantize(jnp.float32), name, bits, embed=embed)
+        if path[-1] in QUANT_KEYS and hasattr(tree, "ndim") and tree.ndim >= 2:
+            bits = _resolve_bits(spec, name)
+            if bits is None:
+                return tree
+            fp = jnp.asarray(tree, jnp.float32).T if embed else tree
+            return pack(fp, name, bits, embed=embed)
+        return tree                              # norms etc: shared by reference
+
+    draft = rec(params, ())
+    if not draft_bits:
+        raise ValueError("draft policy matched no quantizable leaves "
+                         "(wrong layer registry for this tree?)")
+    return draft, draft_bits

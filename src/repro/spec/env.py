@@ -1,0 +1,137 @@
+"""DraftQuantEnv — the calibration environment for draft-policy search.
+
+The controller that allocated the deployed weight bitwidths searches the
+*draft* policy too, under a different objective: not end-task quality but
+**predicted acceptance** from a one-step comparison of the draft re-packing
+against the deployed packing of the same weights.  Greedy self-speculation
+accepts a draft token iff it equals the verify argmax, so the proxy is the
+one-step argmax AGREEMENT rate over calibration prompts, smoothed by a
+small relative-logit-divergence term (agreement alone plateaus between
+calibration rows; the divergence supplies the within-plateau ordering the
+controller's accept/reject needs).  The Budget bounds the draft's weight
+cost (any metric the injected CostModel prices), which is what makes the
+draft pass cheap enough to pay for itself (DESIGN.md §13).
+
+Kept out of ``spec/__init__`` on purpose: it pulls in the training stack
+(``quant.env``), which the serve-path modules must not import.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.policy import BitPolicy
+from repro.quant import apply as apply_mod
+from repro.quant.env import QuantEnvBase
+
+from .draft import build_draft_params
+
+
+#: weight of the smooth divergence term next to the [0, 1] agreement rate
+DIVERGENCE_WEIGHT = 0.05
+
+
+class DraftQuantEnv(QuantEnvBase):
+    """QuantEnv over draft re-packings of one deployed model.
+
+    quality(policy) = argmax-agreement - 0.05 * relative logit divergence
+    of one decode step on calibration prompts, with the draft containers
+    built from the DEPLOYED packed weights (dequantize -> re-pack) —
+    bit-exactly the containers the engine will run, so the proxy scores
+    the deployment.  A perfect draft scores 1.0; ``Budget.acc_t`` is the
+    minimum predicted first-token acceptance rate.
+    """
+
+    def __init__(self, params: dict, serve_params: dict, cfg, deployed_policy,
+                 calib_tokens, *, cost_model=None, qimpl: str = "auto"):
+        from repro.cost import ShiftAddCostModel
+        from repro.models import registry
+
+        self.params = params                 # train layout: stats + registry
+        self.cfg = cfg
+        self.qimpl = qimpl
+        self.cost_model = cost_model or ShiftAddCostModel()
+        self._specs = apply_mod.layer_specs(params, cfg)
+        self._api = registry.get_api(cfg)
+        if self._api.decode_verify is None:
+            raise ValueError(f"family {cfg.family!r} cannot self-speculate "
+                             f"(no burst-rewindable decode state)")
+        self._deployed = apply_mod.quantize_for_serve(serve_params,
+                                                      deployed_policy, cfg)
+
+        # one calibration prefill with the deployed packing, then an fp-state
+        # reference step replaying the last token (the engine's decode shape)
+        toks = jnp.asarray(calib_tokens, jnp.int32)
+        bc, sc = toks.shape
+        _, caches = self._api.prefill(self._deployed, cfg, tokens=toks,
+                                      qimpl=qimpl)
+        state = self._api.init_decode_state(cfg, bc, sc + 1, jnp.float32)
+        self._state = jax.tree.map(
+            lambda c, new: jax.lax.dynamic_update_slice(
+                c, new.astype(c.dtype), (0,) * c.ndim),
+            state, caches)
+        self._next_tok = toks[:, -1:]
+        self._pos = jnp.full((bc,), sc, jnp.int32)
+        self._ref_logits = self._step_logits(self._deployed)
+        self._ref_argmax = jnp.argmax(self._ref_logits, axis=-1)
+        self._scale = float(jnp.mean(jnp.abs(self._ref_logits))) or 1.0
+        self._probe = None
+
+    def _step_logits(self, packed_params):
+        logits, _ = self._api.decode_step(packed_params, self.cfg, self._state,
+                                          self._next_tok, self._pos,
+                                          qimpl=self.qimpl)
+        return logits[:, -1]
+
+    # -- QuantEnv protocol ---------------------------------------------------
+    def _weight(self, name: str):
+        return apply_mod.get_weight(self.params, name)
+
+    def divergence(self, policy: BitPolicy) -> float:
+        """Relative one-step logit divergence of the draft re-packing."""
+        draft, _ = build_draft_params(self._deployed, policy, self.cfg,
+                                      materialize=False)
+        lq = self._step_logits(draft)
+        return float(jnp.mean(jnp.abs(lq - self._ref_logits))) / self._scale
+
+    def agreement(self, policy: BitPolicy) -> float:
+        """One-step argmax agreement rate — predicted greedy acceptance."""
+        draft, _ = build_draft_params(self._deployed, policy, self.cfg,
+                                      materialize=False)
+        lq = self._step_logits(draft)
+        return float(jnp.mean((jnp.argmax(lq, axis=-1)
+                               == self._ref_argmax).astype(jnp.float32)))
+
+    def evaluate(self, policy: BitPolicy) -> float:
+        draft, _ = build_draft_params(self._deployed, policy, self.cfg,
+                                      materialize=False)
+        lq = self._step_logits(draft)
+        agree = jnp.mean((jnp.argmax(lq, axis=-1)
+                          == self._ref_argmax).astype(jnp.float32))
+        div = jnp.mean(jnp.abs(lq - self._ref_logits)) / self._scale
+        return float(agree - DIVERGENCE_WEIGHT * div)
+
+    def sensitivities(self, policy: BitPolicy) -> np.ndarray:
+        """Per-layer probe divergence: drop ONE layer to 4 bits, measure.
+
+        The weight-statistics sensitivity the base class offers ranks by
+        how much a layer's *weight distribution* distorts — the wrong
+        ordering for drafting, where what matters is how much one layer's
+        distortion moves the LOGITS (the embedding is statistics-robust but
+        acceptance-critical).  The probe is measured once against the
+        deployed packing and cached: it is exactly the "which layers does
+        drafting tolerate at low bits" analogue of the paper's sigma/KL
+        allocation signal.
+        """
+        del policy  # probe ordering is policy-independent (measured at 4b)
+        if self._probe is None:
+            vals = []
+            for spec in self._specs:
+                one = BitPolicy.uniform(self._specs, 8).with_bits(spec.name, 4)
+                vals.append(self.divergence(one))
+            self._probe = np.asarray(vals)
+        return self._probe
+
+    def calibrate_and_qat(self, policy: BitPolicy, epochs: int) -> None:
+        pass  # post-training: the draft re-packing needs no retraining

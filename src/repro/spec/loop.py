@@ -1,0 +1,268 @@
+"""Speculative accept/reject + quantized-cache burst rewind (DESIGN.md §13).
+
+Two independent concerns live here:
+
+**Acceptance.**  ``accept_tokens`` turns a verify pass's logits and the
+draft's proposals into per-slot accepted counts and the emitted tokens.
+Greedy (``temperature == 0``) accepts the longest prefix where the draft
+token equals the verify argmax — emitted tokens are the verify argmaxes
+themselves, so the stream is token-exact to non-speculative decoding.
+Stochastic mode is distribution-preserving speculative sampling (Leviathan
+et al.): draft token ``d_j`` (sampled from the *filtered* draft
+distribution q) is accepted with probability ``min(1, p(d_j)/q(d_j))``
+where p is the *filtered* verify distribution — the same
+temperature/top-k/top-p pipeline ``serve.sampling`` applies — and the
+first rejection resamples from the residual ``max(p - q, 0)``.  Padding q
+with zeros at burst index K makes the all-accepted bonus draw exactly a
+sample from p_K, so every emitted token is marginally a direct sample
+from p.
+
+**Rewind.**  A quantized cache cannot simply step ``pos`` back: every
+append requantizes its whole sequence block under a fresh scale, so the
+rejected tail of a burst perturbs the *accepted* positions' levels
+(path-dependent rounding).  The commit protocol therefore brackets the
+burst:
+
+  1. ``snapshot_state`` saves the <= ceil(K/block)+1 blocks per slot the
+     burst can touch (a few KiB, not the cache);
+  2. the draft appends freely (its K/V values are draft-quality anyway)
+     and ``restore_state`` rewinds before the verify pass runs;
+  3. the verify pass appends the full burst sequentially — producing
+     logits bitwise equal to K+1 non-speculative steps — and
+     ``commit_state`` restores the snapshot again, then *replays* only the
+     accepted appends from the verify's saved fp K/V.  The replayed
+     sequence is exactly the append sequence the non-speculative engine
+     would have executed, so the cache state is bitwise identical.
+
+fp caches skip all three steps: a positional write touches nothing else,
+rejected positions are masked by ``kv_valid`` and overwritten in place.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.quant_kv.ops import quant_kv_append
+from repro.kvcache.cache import QuantizedKVLayer
+from repro.kvcache.paged import PagedKVLayer, TRASH_BLOCK, with_table
+from repro.serve.sampling import filtered_logits
+
+
+# ---------------------------------------------------------------------------
+# acceptance
+# ---------------------------------------------------------------------------
+
+
+def accept_tokens(verify_logits: jax.Array,   # (B, K+1, V)
+                  draft_tokens: jax.Array,    # (B, K)
+                  draft_logits: jax.Array,    # (B, K, V)
+                  key: jax.Array | None, *,
+                  temperature: float = 0.0, top_k: int = 0,
+                  top_p: float = 1.0):
+    """-> (acc (B,) int32 in [0, K], out_tokens (B, K+1) int32).
+
+    ``out_tokens[:, : acc + 1]`` are the step's emitted tokens: the accepted
+    draft prefix plus one bonus token from the verify distribution (greedy:
+    simply the verify argmaxes).  Static sampling params; jit-friendly.
+    """
+    k = draft_tokens.shape[1]
+    if temperature <= 0.0:
+        v_toks = jnp.argmax(verify_logits, axis=-1).astype(jnp.int32)
+        match = (v_toks[:, :k] == draft_tokens).astype(jnp.int32)
+        acc = jnp.cumprod(match, axis=1).sum(axis=1)
+        return acc, v_toks
+    assert key is not None, "stochastic acceptance needs a PRNG key"
+    k_acc, k_bonus = jax.random.split(key)
+    p = jax.nn.softmax(filtered_logits(verify_logits[:, :k], temperature=temperature,
+                                       top_k=top_k, top_p=top_p), axis=-1)
+    q = jax.nn.softmax(filtered_logits(draft_logits, temperature=temperature,
+                                       top_k=top_k, top_p=top_p), axis=-1)
+    d = draft_tokens[..., None]
+    p_d = jnp.take_along_axis(p, d, axis=-1)[..., 0]          # (B, K)
+    q_d = jnp.take_along_axis(q, d, axis=-1)[..., 0]
+    u = jax.random.uniform(k_acc, p_d.shape)
+    ok = (u * q_d <= p_d).astype(jnp.int32)   # accept w.p. min(1, p/q); q_d > 0
+    acc = jnp.cumprod(ok, axis=1).sum(axis=1)                 # (B,)
+    # bonus at burst index acc: residual max(p - q, 0) after a rejection,
+    # plain p_K after a fully accepted burst (q padded with zeros there)
+    p_k = jax.nn.softmax(filtered_logits(verify_logits[:, k:], temperature=temperature,
+                                         top_k=top_k, top_p=top_p), axis=-1)
+    p_full = jnp.concatenate([p, p_k], axis=1)                # (B, K+1, V)
+    q_pad = jnp.concatenate([q, jnp.zeros_like(p_k)], axis=1)
+    idx = acc[:, None, None]
+    p_at = jnp.take_along_axis(p_full, idx, axis=1)[:, 0]     # (B, V)
+    q_at = jnp.take_along_axis(q_pad, idx, axis=1)[:, 0]
+    resid = jnp.maximum(p_at - q_at, 0.0)
+    resid = resid / jnp.maximum(resid.sum(axis=-1, keepdims=True), 1e-20)
+    keys = jax.random.split(k_bonus, resid.shape[0])
+    bonus = jax.vmap(jax.random.categorical)(keys, jnp.log(
+        jnp.maximum(resid, 1e-38))).astype(jnp.int32)
+    draft_pad = jnp.concatenate(
+        [draft_tokens, jnp.zeros((draft_tokens.shape[0], 1), jnp.int32)], axis=1)
+    out = jnp.where(jnp.arange(k + 1)[None, :] < acc[:, None],
+                    draft_pad, bonus[:, None])
+    return acc, out
+
+
+# ---------------------------------------------------------------------------
+# quantized-cache burst snapshot / restore / commit
+# ---------------------------------------------------------------------------
+
+
+def _span_blocks(k: int, block: int, nb: int) -> int:
+    """Blocks a K+1-position burst can touch, incl. a partial start block."""
+    return min((k + block - 1) // block + 1, nb)
+
+
+def _start_block(pos: jax.Array, k: int, block: int, nb: int) -> jax.Array:
+    """First snapshot block per slot — clamped so the span stays in range."""
+    nt = _span_blocks(k, block, nb)
+    return jnp.minimum(pos // block, nb - nt).astype(jnp.int32)
+
+
+def _snapshot_dense(layer: QuantizedKVLayer, pos: jax.Array, k: int) -> dict:
+    nb = layer.seq // layer.block
+    nt = _span_blocks(k, layer.block, nb)
+    start = _start_block(pos, k, layer.block, nb)
+
+    def cut(buf, per_block):  # buf (B, H, nb*per_block, ...) over the seq axis
+        b, h = buf.shape[:2]
+        view = buf.reshape(b, h, nb, per_block, *buf.shape[3:]) \
+            if per_block != 1 else buf.reshape(b, h, nb, *buf.shape[3:])
+        sl = jax.vmap(lambda xb, s: jax.lax.dynamic_slice_in_dim(xb, s, nt, axis=1))
+        return sl(view, start)
+
+    return {"k_packed": cut(layer.k_packed, layer.block),
+            "k_scale": cut(layer.k_scale, 1),
+            "v_packed": cut(layer.v_packed, layer.block),
+            "v_scale": cut(layer.v_scale, 1)}
+
+
+def _restore_dense(layer: QuantizedKVLayer, saved: dict, pos: jax.Array,
+                   k: int) -> QuantizedKVLayer:
+    nb = layer.seq // layer.block
+    start = _start_block(pos, k, layer.block, nb)
+
+    def put(buf, sv, per_block):
+        b, h = buf.shape[:2]
+        shape = buf.shape
+        view = buf.reshape(b, h, nb, per_block, *buf.shape[3:]) \
+            if per_block != 1 else buf.reshape(b, h, nb, *buf.shape[3:])
+        up = jax.vmap(
+            lambda xb, sb, s: jax.lax.dynamic_update_slice_in_dim(xb, sb, s, axis=1))
+        return up(view, sv, start).reshape(shape)
+
+    return dataclasses.replace(
+        layer,
+        k_packed=put(layer.k_packed, saved["k_packed"], layer.block),
+        k_scale=put(layer.k_scale, saved["k_scale"], 1),
+        v_packed=put(layer.v_packed, saved["v_packed"], layer.block),
+        v_scale=put(layer.v_scale, saved["v_scale"], 1))
+
+
+def _touched_phys(layer: PagedKVLayer, pos: jax.Array, k: int) -> jax.Array:
+    """(B, nt) physical ids the burst can touch (unmapped -> trash)."""
+    nb = layer.seq // layer.block
+    nt = _span_blocks(k, layer.block, nb)
+    start = _start_block(pos, k, layer.block, nb)
+    logical = start[:, None] + jnp.arange(nt)[None, :]        # (B, nt)
+    phys = jnp.take_along_axis(layer.block_table, logical, axis=1)
+    return jnp.maximum(phys, TRASH_BLOCK)
+
+
+def _snapshot_paged(layer: PagedKVLayer, pos: jax.Array, k: int) -> dict:
+    phys = _touched_phys(layer, pos, k).reshape(-1)
+    take = lambda buf: jnp.take(buf, phys, axis=0)
+    return {"phys": phys, "k_packed": take(layer.k_packed),
+            "k_scale": take(layer.k_scale), "v_packed": take(layer.v_packed),
+            "v_scale": take(layer.v_scale)}
+
+
+def _restore_paged(layer: PagedKVLayer, saved: dict) -> PagedKVLayer:
+    # duplicate ids (several slots' unmapped entries clamp to the trash
+    # block) scatter identical snapshot content — last write wins, same bytes
+    phys = saved["phys"]
+    put = lambda buf, sv: buf.at[phys].set(sv)
+    return dataclasses.replace(
+        layer,
+        k_packed=put(layer.k_packed, saved["k_packed"]),
+        k_scale=put(layer.k_scale, saved["k_scale"]),
+        v_packed=put(layer.v_packed, saved["v_packed"]),
+        v_scale=put(layer.v_scale, saved["v_scale"]))
+
+
+def snapshot_state(state, pos: jax.Array, k: int):
+    """Per-layer snapshot of the blocks a K+1 burst can touch (fp: None)."""
+    out = []
+    for layer in state:
+        if isinstance(layer, QuantizedKVLayer):
+            out.append(_snapshot_dense(layer, pos, k))
+        elif isinstance(layer, PagedKVLayer):
+            out.append(_snapshot_paged(layer, pos, k))
+        else:
+            out.append(None)
+    return out
+
+
+def restore_state(state, saved, pos: jax.Array, k: int):
+    """Scatter a burst snapshot back — the cache as if the burst never ran."""
+    out = []
+    for layer, sv in zip(state, saved):
+        if isinstance(layer, QuantizedKVLayer):
+            out.append(_restore_dense(layer, sv, pos, k))
+        elif isinstance(layer, PagedKVLayer):
+            out.append(_restore_paged(layer, sv))
+        else:
+            out.append(layer)
+    return out
+
+
+def _masked_append(layer, pos_j: jax.Array, k_new: jax.Array, v_new: jax.Array,
+                   mask: jax.Array, qimpl: str):
+    """Append one burst position's K/V only where ``mask`` (B,) holds.
+
+    Dense: slots are container rows, so a row-wise select after the append
+    is exact.  Paged: masked slots' table entries read -1 for the append,
+    clamping their write to the trash block (the idle-slot mechanism).
+    """
+    if isinstance(layer, PagedKVLayer):
+        table = layer.block_table
+        appended = quant_kv_append(
+            with_table(layer, jnp.where(mask[:, None], table, -1)),
+            pos_j, k_new, v_new, impl=qimpl)
+        return with_table(appended, table)
+    appended = quant_kv_append(layer, pos_j, k_new, v_new, impl=qimpl)
+    sel = mask[:, None, None, None]
+    pick = lambda new, old: jnp.where(sel, new, old)
+    return dataclasses.replace(
+        layer,
+        k_packed=pick(appended.k_packed, layer.k_packed),
+        k_scale=pick(appended.k_scale, layer.k_scale),
+        v_packed=pick(appended.v_packed, layer.v_packed),
+        v_scale=pick(appended.v_scale, layer.v_scale))
+
+
+def commit_state(state, saved, pos: jax.Array, acc: jax.Array, burst_kv,
+                 k: int, *, qimpl: str = "auto"):
+    """Rewind the burst and replay exactly the accepted appends.
+
+    ``burst_kv``: the verify pass's per-layer fp K/V ``[(k, v), ...]`` with
+    (B, K+1, H, hd) each; ``acc``: per-slot accepted draft counts — burst
+    indices ``0..acc`` replay (index 0 is the committed pending token).
+    """
+    state = restore_state(state, saved, pos, k)
+    for j in range(k + 1):
+        mask = j <= acc
+        new_state = []
+        for layer, sv, kv in zip(state, saved, burst_kv):
+            if sv is None:          # fp layer: verify's in-place writes stand
+                new_state.append(layer)
+                continue
+            k_new, v_new = kv
+            new_state.append(_masked_append(
+                layer, pos + j, k_new[:, j : j + 1], v_new[:, j : j + 1],
+                mask, qimpl))
+        state = new_state
+    return state

@@ -19,7 +19,7 @@ def test_budget_search_serve_tiny(capsys):
     finally:
         sys.path.pop(0)
 
-    out_dir = budget_search_serve.main(["--tiny", "--paged"])
+    out_dir = budget_search_serve.main(["--tiny", "--paged", "--speculate"])
     stdout = capsys.readouterr().out
     # all three conditions produced artifacts on disk
     for name in ("policy_memory_tight.json", "policy_latency_tight.json",
@@ -41,4 +41,14 @@ def test_budget_search_serve_tiny(capsys):
     assert art.report["state_bytes"] > 0
     # v3: the pool geometry the state budget bought rides in the artifact
     assert art.pool is not None and art.pool["num_blocks"] >= 1
-    assert art.version == 3
+    assert art.version == 4  # v4: draft-policy fields ride along (None here)
+    # --speculate: the condition-4 artifact additionally carries the draft,
+    # and the engine served speculatively from it
+    assert "[speculative] draft mean_bits=" in stdout
+    spec = PolicyArtifact.load(os.path.join(out_dir, "policy_speculative.json"))
+    assert spec.draft_policy is not None and spec.draft_k == 2
+    assert spec.state_policy is not None
+    # the pool grew by the burst-scratch headroom (attach_draft)
+    assert spec.pool["block"] == art.pool["block"]
+    assert spec.pool["num_blocks"] > art.pool["num_blocks"]
+    assert spec.meta["draft_pool_headroom_blocks"] > 0

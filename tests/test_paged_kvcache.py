@@ -5,7 +5,7 @@ import jax
 import pytest
 
 from repro.configs import gemma_2b, zamba2_2p7b
-from repro.core.policy import BitPolicy, PolicyArtifact
+from repro.core.policy import ARTIFACT_VERSION, BitPolicy, PolicyArtifact
 from repro.kvcache import (BlockPool, pool_blocks_for_budget,
                            state_layer_infos)
 from repro.kvcache import paged as pg
@@ -266,7 +266,7 @@ class TestArtifactPoolGeometry:
         params = api.init(cfg, jax.random.key(0))
         art = self._pool_artifact(cfg, params)
         back = PolicyArtifact.from_json(art.to_json())
-        assert back.version == 3 and back.pool == art.pool
+        assert back.version == ARTIFACT_VERSION and back.pool == art.pool
         qp = qapply.quantize_for_serve(sp, art, cfg)
         eng = ServeEngine(cfg, qp, max_slots=2, max_seq=64, artifact=art,
                           qimpl="xla")

@@ -51,6 +51,62 @@ class TestRoundTrip:
         assert PolicyArtifact.from_json(art.to_json()).budget is None
 
 
+class TestDraftPolicyV4:
+    def test_roundtrip_with_draft(self):
+        art = make_artifact()
+        draft = BitPolicy.from_bits(layers(), {"blk0.w": 2, "blk1.w": 2, "embed": 4})
+        art4 = PolicyArtifact.build(art.policy, backend=art.backend,
+                                    report=art.report, budget=art.budget,
+                                    draft_policy=draft, draft_k=3)
+        back = PolicyArtifact.from_json(art4.to_json())
+        assert back.version == ARTIFACT_VERSION == 4
+        assert back.draft_k == 3
+        assert back.draft_policy.bits == draft.bits
+        assert back.draft_policy.layers == draft.layers
+
+    def test_draft_k_and_policy_go_together(self):
+        art = make_artifact()
+        with pytest.raises(ValueError, match="go together"):
+            PolicyArtifact.build(art.policy, draft_policy=art.policy)  # k=0
+        with pytest.raises(ValueError, match="go together"):
+            PolicyArtifact.build(art.policy, draft_k=2)  # no policy
+
+    def test_draft_must_share_registry(self):
+        art = make_artifact()
+        other = (LayerInfo("other.w", (8, 8), macs=1),)
+        with pytest.raises(ValueError, match="same weight registry"):
+            PolicyArtifact.build(art.policy, draft_k=2,
+                                 draft_policy=BitPolicy.uniform(other, 2))
+
+    def test_attach_draft_grows_pooled_artifact(self):
+        from repro.launch.search import attach_draft
+
+        art = make_artifact()
+        draft = BitPolicy.uniform(layers(), 4)
+        plain = attach_draft(art, draft, 3)
+        assert plain.draft_k == 3 and plain.pool is None
+        assert art.draft_policy is None  # the input artifact is untouched
+        pooled = PolicyArtifact.build(art.policy, state_policy=art.policy,
+                                      pool={"block": 16, "num_blocks": 10})
+        out = attach_draft(pooled, draft, 3, slots=4)
+        # burst scratch: slots * ceil(K/block) extra blocks, recorded in meta
+        assert out.pool["num_blocks"] == 10 + 4
+        assert out.meta["draft_pool_headroom_blocks"] == 4
+        assert pooled.pool["num_blocks"] == 10
+        with pytest.raises(ValueError, match="slot count"):
+            attach_draft(pooled, draft, 3)
+
+    def test_v3_json_loads_without_draft(self):
+        """Pre-v4 artifacts (no draft keys at all) load with draft fields
+        empty — the draftless forward-compat contract."""
+        doc = json.loads(make_artifact().to_json())
+        doc["artifact_version"] = 3
+        del doc["draft_policy"], doc["draft_k"]
+        back = PolicyArtifact.from_json(json.dumps(doc))
+        assert back.version == 3
+        assert back.draft_policy is None and back.draft_k == 0
+
+
 class TestRegistryHash:
     def test_stable_and_order_sensitive(self):
         assert layer_registry_hash(layers()) == layer_registry_hash(layers())

@@ -78,6 +78,28 @@ def test_eos_minus_one_never_early_stops(dense_setup):
     assert all(t >= 0 for toks in out.values() for t in toks)
 
 
+def test_eos_inside_accepted_burst_stops_that_step(dense_setup):
+    """Speculative regression: when an accepted burst contains the eos
+    token, the request stops AT the eos — trailing accepted tokens are
+    dropped — and its slot (and paged blocks) frees that same step, not
+    after finishing out the burst."""
+    cfg, api, sp = dense_setup
+    for paged in (False, True):
+        kw = dict(max_slots=2, max_seq=64)
+        if paged:
+            kw.update(state_bits=8, paged=True, pool_blocks=16)
+        ref = ServeEngine(cfg, sp, **kw).generate([[5, 6, 7, 8]], 8)[0]
+        eos = ref[2]  # mid-stream: with speculate=4 it lands inside a burst
+        eng = ServeEngine(cfg, sp, speculate=4, draft_policy=4, **kw)
+        out = eng.run([Request(uid=0, prompt=[5, 6, 7, 8], max_new_tokens=8,
+                               eos_id=eos)])
+        assert out[0] == ref[: ref.index(eos) + 1]
+        assert eng.stats["completed"] == 1
+        assert all(s.free for s in eng.slots)
+        if paged:  # blocks released the step eos was accepted
+            assert eng.pool.allocated == 0 and eng.pool.reserved == 0
+
+
 def test_quantized_weight_path(dense_setup):
     cfg, api, sp = dense_setup
     specs = qapply.layer_specs(api.init(cfg, jax.random.key(0)), cfg)

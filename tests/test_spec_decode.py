@@ -1,0 +1,276 @@
+"""Self-speculative decoding (DESIGN.md §13): greedy token-exactness against
+the non-speculative engine on every cache form, distribution-preserving
+stochastic acceptance, draft container derivation, and the engine guards."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import gemma_2b, mamba2_2p7b
+from repro.core.policy import BitPolicy
+from repro.models import registry
+from repro.quant import apply as qapply
+from repro.quant.tensor import QuantizedTensor
+from repro.serve.engine import Request, ServeEngine
+from repro.serve.sampling import filtered_logits, sample
+from repro.spec.draft import build_draft_params
+from repro.spec.loop import accept_tokens
+
+#: variable-length batch: longer than the slot count, prompts from 1 token
+#: to past one KV scale block, so admission waves + block crossings happen
+PROMPTS = [[5, 6, 7, 8], [1, 2, 9, 4, 7, 3], [9] * 19, [2], [3, 1, 4, 1, 5]]
+
+
+@pytest.fixture(scope="module")
+def dense_setup():
+    cfg = gemma_2b.CONFIG.reduced()
+    api = registry.get_api(cfg)
+    params = api.init(cfg, jax.random.key(0))
+    sp = api.unstack(params, cfg)
+    specs = qapply.layer_specs(params, cfg)
+    qp = qapply.quantize_for_serve(sp, BitPolicy.uniform(specs, 8), cfg)
+    return cfg, api, qp
+
+
+# ---------------------------------------------------------------------------
+# greedy token-exactness (the property the whole subsystem is pinned to)
+# ---------------------------------------------------------------------------
+
+
+class TestGreedyTokenExact:
+    """speculate=K greedy streams are EXACTLY the speculate=0 streams —
+    same emitted tokens, including eos-mid-burst truncation — for fp,
+    quantized-dense, and paged caches."""
+
+    def _run_pair(self, cfg, qp, *, speculate, draft_bits, max_new, **kw):
+        base = ServeEngine(cfg, qp, **kw)
+        ref = base.generate(PROMPTS, max_new_tokens=max_new)
+        spec = ServeEngine(cfg, qp, speculate=speculate,
+                           draft_policy=draft_bits, **kw)
+        out = spec.generate(PROMPTS, max_new_tokens=max_new)
+        return ref, out, spec
+
+    def test_fp_cache(self, dense_setup):
+        cfg, api, qp = dense_setup
+        ref, out, spec = self._run_pair(
+            cfg, qp, speculate=3, draft_bits=4, max_new=8,
+            max_slots=2, max_seq=64, prefill_pad=8)
+        assert out == ref
+        # speculation actually ran and bought multi-token steps
+        assert spec.stats["spec_steps"] == spec.stats["decode_steps"] > 0
+        assert spec.stats["spec_accepted"] > 0
+        total = sum(len(o) for o in out)
+        assert spec.stats["decode_steps"] < total  # > 1 token per verify step
+
+    def test_quantized_dense_cache(self, dense_setup):
+        cfg, api, qp = dense_setup
+        ref, out, spec = self._run_pair(
+            cfg, qp, speculate=3, draft_bits=4, max_new=8, state_bits=8,
+            max_slots=2, max_seq=64, prefill_pad=8)
+        assert out == ref
+
+    def test_paged_cache(self, dense_setup):
+        cfg, api, qp = dense_setup
+        ref, out, spec = self._run_pair(
+            cfg, qp, speculate=3, draft_bits=4, max_new=9, state_bits=6,
+            paged=True, pool_blocks=24, max_slots=3, max_seq=64, prefill_pad=8)
+        assert out == ref
+        # the burst crossed block boundaries and freed everything at the end
+        assert spec.pool.allocated == 0 and spec.pool.peak_allocated > 0
+
+    def test_burst_shrinks_at_max_seq(self, dense_setup):
+        """A slot near max_seq caps the burst (K_eff) instead of writing
+        past the cache end; the stream still matches non-speculative."""
+        cfg, api, qp = dense_setup
+        kw = dict(max_slots=2, max_seq=24, prefill_pad=8)
+        base = ServeEngine(cfg, qp, **kw)
+        ref = base.generate([[5, 6, 7, 8], [1, 2]], max_new_tokens=30)
+        spec = ServeEngine(cfg, qp, speculate=3, draft_policy=4, **kw)
+        out = spec.generate([[5, 6, 7, 8], [1, 2]], max_new_tokens=30)
+        assert out == ref
+        # every stream hit the max_seq guard, exercising K_eff < speculate
+        assert all(len(o) < 30 for o in ref)
+
+
+# ---------------------------------------------------------------------------
+# stochastic speculative sampling: accept/reject marginals
+# ---------------------------------------------------------------------------
+
+
+class TestStochasticAcceptance:
+    V = 5
+
+    def _marginal(self, verify_row, draft_row, *, temperature=1.0, top_k=0,
+                  top_p=1.0, n=4000, seed=0):
+        """Empirical marginal of the FIRST emitted token with K=1, against
+        direct sampling from the filtered verify distribution."""
+        verify = jnp.tile(jnp.asarray(verify_row)[None, None, :], (n, 2, 1))
+        draft_logits = jnp.tile(jnp.asarray(draft_row)[None, None, :], (n, 1, 1))
+        d_toks = sample(draft_logits[:, 0], jax.random.key(seed),
+                        temperature=temperature, top_k=top_k, top_p=top_p)[:, None]
+        acc, out = accept_tokens(verify, d_toks, draft_logits,
+                                 jax.random.key(seed + 1),
+                                 temperature=temperature, top_k=top_k,
+                                 top_p=top_p)
+        first = np.asarray(out[:, 0])
+        emp = np.bincount(first, minlength=self.V) / n
+        p = np.asarray(jax.nn.softmax(filtered_logits(
+            jnp.asarray(verify_row), temperature=temperature, top_k=top_k,
+            top_p=top_p)))
+        return emp, p
+
+    def test_marginal_matches_direct_sampling(self):
+        verify = [2.0, 1.0, 0.5, -1.0, 0.0]
+        draft = [1.0, 2.0, 0.0, 0.0, -2.0]   # deliberately different from p
+        emp, p = self._marginal(verify, draft)
+        np.testing.assert_allclose(emp, p, atol=0.03)
+
+    def test_marginal_with_filters(self):
+        """Acceptance composes with the engine's top-k/top-p pipeline: the
+        emitted marginal matches direct sampling from the FILTERED p."""
+        verify = [2.0, 1.5, 0.5, -1.0, 0.0]
+        draft = [0.5, 2.0, 1.0, 0.0, -2.0]
+        emp, p = self._marginal(verify, draft, temperature=0.8, top_k=3,
+                                top_p=0.9)
+        assert p[3] == 0 and p[4] == 0  # the filters really cut support
+        np.testing.assert_allclose(emp, p, atol=0.03)
+
+    def test_identical_distributions_accept_everything(self):
+        row = [1.0, 0.5, -0.5, 0.0, 2.0]
+        n = 512
+        verify = jnp.tile(jnp.asarray(row)[None, None, :], (n, 2, 1))
+        draft_logits = verify[:, :1]
+        d = sample(draft_logits[:, 0], jax.random.key(3), temperature=1.0)[:, None]
+        acc, out = accept_tokens(verify, d, draft_logits, jax.random.key(4),
+                                 temperature=1.0)
+        assert int(jnp.sum(acc)) == n  # p == q: min(1, p/q) = 1 everywhere
+        assert jnp.array_equal(out[:, 0], d[:, 0])
+
+    def test_greedy_accept_prefix(self):
+        verify = jnp.zeros((1, 3, 4)).at[0, 0, 1].set(5.0) \
+            .at[0, 1, 2].set(5.0).at[0, 2, 3].set(5.0)
+        draft = jnp.asarray([[1, 0]])  # first matches argmax, second not
+        acc, out = accept_tokens(verify, draft, jnp.zeros((1, 2, 4)), None)
+        assert int(acc[0]) == 1
+        assert out[0].tolist() == [1, 2, 3]  # verify argmaxes
+
+    def test_stochastic_engine_runs(self, dense_setup):
+        """The stochastic draft/accept path works end to end in the engine
+        (no token-parity claim: RNG streams differ from non-speculative)."""
+        cfg, api, qp = dense_setup
+        eng = ServeEngine(cfg, qp, max_slots=2, max_seq=64, temperature=1.0,
+                          seed=7, speculate=2, draft_policy=4)
+        out = eng.run([Request(uid=i, prompt=[5, 6, 7, i + 1], max_new_tokens=6)
+                       for i in range(3)])
+        assert all(len(out[i]) == 6 for i in range(3))
+        assert eng.stats["spec_steps"] > 0
+
+
+# ---------------------------------------------------------------------------
+# draft containers
+# ---------------------------------------------------------------------------
+
+
+class TestDraftContainers:
+    def test_packed_tree_repacks_at_draft_bits(self, dense_setup):
+        cfg, api, qp = dense_setup
+        draft, bits = build_draft_params(qp, 2, cfg, materialize=False)
+        assert bits == {n: 2 for n in qapply.packed_policy_bits(qp)}
+        assert qapply.packed_policy_bits(draft) == bits
+        # non-quantized leaves (norms) are SHARED by reference, not copied
+        assert draft["final_norm"] is qp["final_norm"]
+
+    def test_heterogeneous_policy(self, dense_setup):
+        cfg, api, qp = dense_setup
+        names = sorted(qapply.packed_policy_bits(qp))
+        rng = np.random.default_rng(0)
+        want = {n: int(rng.choice([2, 4])) for n in names}
+        specs = qapply.layer_specs(registry.get_api(cfg).init(
+            cfg, jax.random.key(0)), cfg)
+        policy = BitPolicy.from_bits(specs, want)
+        _, bits = build_draft_params(qp, policy, cfg, materialize=False)
+        assert bits == want
+
+    def test_materialized_draft_same_tokens(self, dense_setup):
+        """materialize=True swaps packed draft leaves for their fp views —
+        same values, so the engine's draft proposes identical tokens."""
+        cfg, api, qp = dense_setup
+        kw = dict(max_slots=2, max_seq=48, prefill_pad=8)
+        packed = ServeEngine(cfg, qp, speculate=2, draft_policy=4, **kw)
+        assert isinstance(
+            packed.draft_params["layers"][0]["attn"].get("wqkv")
+            or packed.draft_params["layers"][0]["attn"]["wq"],
+            (QuantizedTensor, jax.Array))
+        out = packed.generate(PROMPTS[:3], max_new_tokens=5)
+        base = ServeEngine(cfg, qp, **kw).generate(PROMPTS[:3], max_new_tokens=5)
+        assert out == base
+
+    def test_fp_tree_input(self, dense_setup):
+        cfg, api, _ = dense_setup
+        sp = api.unstack(api.init(cfg, jax.random.key(0)), cfg)
+        draft, bits = build_draft_params(sp, 4, cfg, materialize=False)
+        assert all(b == 4 for b in bits.values())
+        emb = draft["embed"]
+        assert isinstance(emb, QuantizedTensor)
+        # embed packs transposed to the (d, V) lm_head layout
+        assert emb.shape == (cfg.d_model, cfg.vocab_size)
+
+    def test_artifact_without_draft_rejected(self, dense_setup):
+        from repro.core.policy import PolicyArtifact
+
+        cfg, api, qp = dense_setup
+        specs = qapply.layer_specs(api.init(cfg, jax.random.key(0)), cfg)
+        art = PolicyArtifact.build(BitPolicy.uniform(specs, 8))
+        with pytest.raises(ValueError, match="no draft policy"):
+            build_draft_params(qp, art, cfg)
+
+
+# ---------------------------------------------------------------------------
+# engine guards + draft env
+# ---------------------------------------------------------------------------
+
+
+def test_speculate_needs_draft_policy(dense_setup):
+    cfg, api, qp = dense_setup
+    with pytest.raises(ValueError, match="draft_policy"):
+        ServeEngine(cfg, qp, max_slots=2, max_seq=48, speculate=2)
+
+
+def test_draft_policy_needs_speculate(dense_setup):
+    """The converse misconfiguration must not silently serve draft-less."""
+    cfg, api, qp = dense_setup
+    with pytest.raises(ValueError, match="without speculate"):
+        ServeEngine(cfg, qp, max_slots=2, max_seq=48, draft_policy=4)
+
+
+def test_ssm_cannot_speculate():
+    cfg = mamba2_2p7b.CONFIG.reduced()
+    api = registry.get_api(cfg)
+    sp = api.unstack(api.init(cfg, jax.random.key(0)), cfg)
+    with pytest.raises(NotImplementedError, match="cannot self-speculate"):
+        ServeEngine(cfg, sp, max_slots=2, max_seq=48, speculate=2,
+                    draft_policy=4)
+
+
+def test_draft_env_proxy_orders_with_bits(dense_setup):
+    """The acceptance proxy is monotone where it must be: an 8-bit draft of
+    an 8-bit deployment is a perfect draft (agreement 1, divergence 0 ->
+    quality 1.0), a 2-bit draft scores strictly worse."""
+    from repro.spec.env import DraftQuantEnv
+
+    cfg = gemma_2b.CONFIG.reduced()
+    api = registry.get_api(cfg)
+    params = api.init(cfg, jax.random.key(1))
+    sp = api.unstack(params, cfg)
+    specs = qapply.layer_specs(params, cfg)
+    deployed = BitPolicy.uniform(specs, 8)
+    calib = np.random.default_rng(0).integers(1, cfg.vocab_size, (2, 8))
+    env = DraftQuantEnv(params, sp, cfg, deployed, calib)
+    u8 = BitPolicy.uniform(specs, 8)
+    assert env.divergence(u8) == pytest.approx(0.0, abs=1e-6)
+    assert env.agreement(u8) == 1.0
+    assert env.evaluate(u8) == pytest.approx(1.0, abs=1e-6)
+    assert env.evaluate(BitPolicy.uniform(specs, 2)) < 1.0
+    # the probe sensitivity ranks every layer by its own logit damage
+    sens = env.sensitivities(u8)
+    assert sens.shape == (len(specs),) and (sens >= 0).all() and sens.max() > 0
