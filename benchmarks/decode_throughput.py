@@ -59,7 +59,7 @@ def measure() -> dict:
     eng.generate(prompts, max_new_tokens=BENCH["max_new_tokens"])  # compile warmup
     best = None
     for _ in range(BENCH["repeats"]):
-        steps0 = eng.stats["decode_steps"]
+        steps0 = eng.stats()["decode_steps"]
         t0 = time.perf_counter()
         outs = eng.generate(prompts, max_new_tokens=BENCH["max_new_tokens"])
         dt = time.perf_counter() - t0
@@ -67,7 +67,7 @@ def measure() -> dict:
         rec = {
             "wall_s": round(dt, 4),
             "generated_tokens": n_tokens,
-            "decode_steps": eng.stats["decode_steps"] - steps0,
+            "decode_steps": eng.stats()["decode_steps"] - steps0,
             "tokens_per_s": round(n_tokens / dt, 2),
         }
         if best is None or rec["tokens_per_s"] > best["tokens_per_s"]:

@@ -19,10 +19,10 @@ import os
 import time
 import traceback
 
-from . import (allocator, decode_throughput, fig3_trajectory, fig5_hw, kvcache,
-               kvcache_paged, roofline, speculative, table1_sigma_kl,
-               table2_phases, table3_sota, table4_hparam, table5_bops,
-               table6_mac)
+from . import (allocator, decode_throughput, degradation, fig3_trajectory,
+               fig5_hw, kvcache, kvcache_paged, roofline, speculative,
+               table1_sigma_kl, table2_phases, table3_sota, table4_hparam,
+               table5_bops, table6_mac)
 
 SECTIONS = {
     "decode": ("Decode throughput (BENCH_decode.json)", decode_throughput.run),
@@ -34,6 +34,9 @@ SECTIONS = {
     "speculative": ("Self-speculative decoding: acceptance + tokens/s vs "
                     "non-speculative (BENCH_speculative.json)",
                     speculative.run),
+    "degradation": ("Graceful degradation under pool pressure: shed tiers + "
+                    "preemption vs indefinite wait (BENCH_degradation.json)",
+                    degradation.run),
     "allocator": ("Allocator: wall-time + budget satisfaction x backends "
                   "(BENCH_allocator.json)", allocator.run),
     "table1": ("Table I: sigma vs KL vs final bits", table1_sigma_kl.run),
@@ -63,6 +66,11 @@ HEADLINES = {
                                ("tokens_per_s_ratio", "higher")],
     "BENCH_allocator.json": [("by_backend.shift_add.satisfaction_rate", "higher"),
                              ("by_backend.roofline.satisfaction_rate", "higher")],
+    # counts, not wall times: completion must hold at 1.0 and the shed
+    # machinery must actually fire — latency percentiles are informational
+    "BENCH_degradation.json": [("completion.degrade.rate", "higher"),
+                               ("completion.baseline.rate", "higher"),
+                               ("degradation.preemptions", "higher")],
 }
 
 #: fractional move in the bad direction that fails --compare

@@ -92,13 +92,13 @@ def _measure_pair(engines: dict, prompts) -> dict:
     best = {k: None for k in engines}
     for _ in range(BENCH["repeats"]):
         for key, eng in engines.items():
-            steps0 = eng.stats["decode_steps"]
+            steps0 = eng.stats()["decode_steps"]
             t0 = time.perf_counter()
             outs = eng.generate(prompts, max_new_tokens=BENCH["max_new_tokens"])
             dt = time.perf_counter() - t0
             n_tokens = sum(len(o) for o in outs)
             rec = {"wall_s": round(dt, 4), "generated_tokens": n_tokens,
-                   "decode_steps": eng.stats["decode_steps"] - steps0,
+                   "decode_steps": eng.stats()["decode_steps"] - steps0,
                    "tokens_per_s": round(n_tokens / dt, 2)}
             if best[key] is None or rec["tokens_per_s"] > best[key]["tokens_per_s"]:
                 best[key] = rec
@@ -123,7 +123,7 @@ def run(fast: bool = True) -> dict:
     recs = _measure_pair({"baseline": eng_base, "speculative": eng_spec},
                          prompts)
     rec_b, rec_s = recs["baseline"], recs["speculative"]
-    st = eng_spec.stats
+    st = eng_spec.stats()
     accept_rate = st["spec_accepted"] / max(st["spec_proposed"], 1)
     # accepted tokens per verify step, per REQUEST actually decoding in it:
     # every accepted token is one deployed-weight pass that never ran

@@ -196,7 +196,7 @@ def main(argv=None):
                                artifact=art_spec)
         outs = eng_spec.generate([[5, 6, 7, 8], [1, 2, 9], [4, 4, 4, 4, 4]],
                                  max_new_tokens=8)
-        st = eng_spec.stats
+        st = eng_spec.stats()
         print(f"[speculative] draft mean_bits="
               f"{dres.policy.mean_bits():.2f} (deployed "
               f"{art_kv.policy.mean_bits():.2f}, size "

@@ -1,4 +1,5 @@
 from .store import (  # noqa: F401
+    ArtifactError,
     CheckpointStore,
     latest_step,
     load_policy_artifact,

@@ -37,6 +37,34 @@ ARTIFACT_KEY = "policy_artifact"
 ARTIFACT_FILE = "policy_artifact.json"
 
 
+class ArtifactError(RuntimeError):
+    """A checkpoint's policy-artifact payload is unreadable.
+
+    Raised instead of a raw ``JSONDecodeError`` / ``KeyError`` traceback:
+    the message names the offending file and the field that failed, which
+    is what restore-time triage actually needs (is the checkpoint corrupt,
+    truncated mid-write, or from an incompatible build?).
+    """
+
+
+def _parse_artifact(payload: str, src: str) -> PolicyArtifact:
+    """Decode an artifact JSON payload with failures attributed to ``src``."""
+    try:
+        json.loads(payload)
+    except json.JSONDecodeError as e:
+        raise ArtifactError(
+            f"{src}: corrupted or truncated artifact JSON ({e})") from e
+    try:
+        return PolicyArtifact.from_json(payload)
+    except KeyError as e:
+        raise ArtifactError(
+            f"{src}: policy artifact is missing required field "
+            f"{e.args[0]!r}") from e
+    except (TypeError, ValueError) as e:
+        raise ArtifactError(
+            f"{src}: invalid policy artifact field value ({e})") from e
+
+
 def _to_savable(arr: np.ndarray) -> np.ndarray:
     """npz can't round-trip ml_dtypes (bf16/f8 load back as void): store a
     same-width unsigned view; restore views it back through the target dtype."""
@@ -119,16 +147,38 @@ def latest_step(root: str) -> int | None:
 
 
 def load_policy_artifact(root: str, *, step: int | None = None) -> PolicyArtifact | None:
-    """The policy artifact saved with a step, or None if the step has none."""
+    """The policy artifact saved with a step, or None if the step has none.
+
+    Corrupted payloads raise :class:`ArtifactError` naming the file and the
+    failed field.  If the manifest lost its embedded copy (hand-edited,
+    partial restore) the human-readable ``policy_artifact.json`` sidecar is
+    read as a fallback.
+    """
     if step is None:
         step = latest_step(root)
         if step is None:
             raise FileNotFoundError(f"no checkpoints under {root}")
-    with open(os.path.join(_step_dir(root, step), "MANIFEST.json")) as f:
-        extra = json.load(f).get("extra", {})
-    if ARTIFACT_KEY not in extra:
-        return None
-    return PolicyArtifact.from_json(json.dumps(extra[ARTIFACT_KEY]))
+    d = _step_dir(root, step)
+    mpath = os.path.join(d, "MANIFEST.json")
+    try:
+        with open(mpath) as f:
+            manifest = json.load(f)
+    except json.JSONDecodeError as e:
+        raise ArtifactError(
+            f"{mpath}: corrupted or truncated manifest JSON ({e})") from e
+    extra = manifest.get("extra", {})
+    if not isinstance(extra, dict):
+        raise ArtifactError(
+            f"{mpath}: manifest field 'extra' is "
+            f"{type(extra).__name__}, expected an object")
+    if ARTIFACT_KEY in extra:
+        return _parse_artifact(json.dumps(extra[ARTIFACT_KEY]),
+                               f"{mpath} (field {ARTIFACT_KEY!r})")
+    sidecar = os.path.join(d, ARTIFACT_FILE)
+    if os.path.exists(sidecar):
+        with open(sidecar) as f:
+            return _parse_artifact(f.read(), sidecar)
+    return None
 
 
 def restore(root: str, like: Any, *, step: int | None = None, host_id: int = 0

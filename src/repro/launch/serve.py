@@ -95,9 +95,12 @@ def main(argv=None) -> int:
     results = eng.run(reqs)
     dt = time.perf_counter() - t0
     new_tokens = sum(len(v) for v in results.values())
+    st = eng.stats()
     print(f"{len(results)} requests, {new_tokens} new tokens in {dt:.2f}s "
-          f"({new_tokens / dt:.1f} tok/s); decode_steps={eng.stats['decode_steps']} "
-          f"slot_efficiency={new_tokens / (eng.stats['decode_steps'] * args.slots):.2f}")
+          f"({new_tokens / dt:.1f} tok/s); decode_steps={st['decode_steps']} "
+          f"slot_efficiency={new_tokens / (st['decode_steps'] * args.slots):.2f} "
+          f"step_median={st['health']['step_time_median_s'] * 1e3:.1f}ms "
+          f"stragglers={st['health']['straggler_flagged']}")
     for uid in sorted(results)[:4]:
         print(f"  req {uid}: {results[uid][:10]}")
     return 0

@@ -1,2 +1,4 @@
 from .engine import Request, ServeEngine  # noqa: F401
+from .lifecycle import (LifecycleError, RequestLifecycle,  # noqa: F401
+                        RequestState, ShedPolicy, spec_ladder)
 from .sampling import sample  # noqa: F401

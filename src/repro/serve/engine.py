@@ -58,6 +58,21 @@ proposes K tokens, the deployed policy verifies all K+1 positions in one
 batched weight pass, and the cache rewinds bitwise-exactly to the accepted
 prefix — greedy output is token-identical to the non-speculative engine on
 fp, quantized and paged caches, at up to K+1 tokens per full weight read.
+
+Every request runs a full lifecycle (DESIGN.md §14, serve/lifecycle.py):
+QUEUED -> PREFILL -> DECODE -> DONE | FAILED | CANCELLED | TIMED_OUT, with
+per-request deadlines/TTFT budgets, explicit ``cancel(uid)``, and
+finalize-exactly-once resource accounting.  Under pool pressure the engine
+degrades through a tiered shed ladder (speculation K -> smaller K -> off,
+releasing burst-headroom reservations; then priority-gated preemption that
+snapshots a victim's progress back into the queue) instead of waiting
+indefinitely.  Non-finite logits are detected per slot INSIDE the fused
+decode/speculate dispatch and quarantine only the offending request; in
+speculate mode a poisoned draft falls back to the verify (non-speculative)
+path for that slot before anything is failed.  A ``FailureInjector``
+drives the same paths offline and ``debug_invariants=True`` re-checks pool
+refcount conservation, reservation accounting, and zero-beyond-write after
+every loop turn.
 """
 from __future__ import annotations
 
@@ -74,8 +89,12 @@ from repro.configs.base import ArchConfig
 from repro.core.policy import PolicyArtifact
 from repro.models import registry
 from repro.quant import apply as qapply
+from repro.runtime.resilience import (FailureInjector, SimulatedFailure,
+                                      StepTimer, StragglerMonitor)
 from repro.spec import loop as spec_loop
 from repro.spec.draft import build_draft_params
+from .lifecycle import (LifecycleError, RequestLifecycle, RequestState,
+                        ShedPolicy, spec_ladder)
 from .sampling import sample
 
 
@@ -85,6 +104,9 @@ class Request:
     prompt: list[int]
     max_new_tokens: int = 16
     eos_id: int = -1              # -1: never stop early
+    priority: int = 0             # higher admits first / preempts lower
+    deadline_s: float | None = None      # end-to-end budget from submission
+    ttft_budget_s: float | None = None   # first-token budget from submission
 
 
 @dataclasses.dataclass
@@ -112,18 +134,33 @@ class ServeEngine:
                  paged: bool = False, pool_blocks: int | None = None,
                  share_prefix: bool = True,
                  speculate: int | None = None, draft_policy=None,
-                 artifact: PolicyArtifact | None = None):
+                 artifact: PolicyArtifact | None = None,
+                 shed: ShedPolicy | None = ShedPolicy(),
+                 fault_injector: FailureInjector | None = None,
+                 debug_invariants: bool = False):
         if cfg.family in ("audio", "encdec"):
             raise NotImplementedError(
                 "enc-dec serving goes through registry.prefill/decode_step directly "
                 "(cross-attention KV needs the frames input at admission)")
         self.cfg = cfg
+        self._injector = fault_injector
+        self._debug_invariants = debug_invariants
         # the searched policy this engine claims to serve: refuse to start if
         # the packed leaf bitwidths disagree with the artifact (the end of the
         # search -> artifact -> packed deployment pipeline, DESIGN.md §10)
         self.artifact = artifact
         self.packed_bits = qapply.packed_policy_bits(params)
         if artifact is not None:
+            if self._fault("artifact_mismatch", step=0):
+                # drive the real verification path with tampered bits so the
+                # deploy-time refusal (not a bypassable shim) is what fires
+                name = next(iter(self.packed_bits), None)
+                bad = dict(self.packed_bits)
+                if name is not None:
+                    bad[name] = -1
+                raise ValueError(
+                    f"packed leaf bitwidths disagree with the policy artifact "
+                    f"(injected artifact_mismatch fault): {name}={bad.get(name)}")
             qapply.verify_packed_bits(params, artifact)
         # fuse packed Q/K/V + gate/up groups: one kernel launch per group on
         # the decode fast path; exact-output-preserving (no requantization)
@@ -221,9 +258,22 @@ class ServeEngine:
             surface = (kvcache.state_layer_infos(cfg, max_slots, max_seq)
                        if artifact.state_policy is not None else None)
             kvcache.verify_state_bits(self.state, artifact, surface=surface)
-        self.stats = {"prefill_tokens": 0, "decode_steps": 0, "completed": 0,
-                      "wall_s": 0.0, "spec_steps": 0, "spec_proposed": 0,
-                      "spec_accepted": 0}
+        self._stats = {"prefill_tokens": 0, "decode_steps": 0, "completed": 0,
+                       "wall_s": 0.0, "spec_steps": 0, "spec_proposed": 0,
+                       "spec_accepted": 0, "preemptions": 0, "failed": 0,
+                       "cancelled": 0, "timed_out": 0, "nan_quarantined": 0,
+                       "nan_draft_fallbacks": 0, "shed_events": []}
+        # graceful degradation (DESIGN.md §14): the live burst K walks the
+        # shed ladder under pool pressure; tier index 0 = full service
+        self._shed_policy = shed
+        self._spec_ladder = spec_ladder(self.speculate)
+        self._shed_tier = 0
+        self._k_live = self.speculate
+        self._straggler = StragglerMonitor()
+        self.lifecycles: dict[int, RequestLifecycle] = {}
+        self._queue: list[Request] = []
+        self._cancel_requested: set[int] = set()
+        self._pending_token: dict[int, int] = {}
         #: quantized decode-state layers need the burst snapshot/replay
         #: commit protocol (spec.loop); fp layers rewind for free
         self._quant_state = any(
@@ -234,16 +284,25 @@ class ServeEngine:
 
         api, cfg_ = self.api, cfg
 
-        def decode(params, state, tokens, pos, key, temperature, top_k, top_p):
+        def decode(params, state, tokens, pos, key, inject, temperature,
+                   top_k, top_p):
             logits, state = api.decode_step(params, cfg_, state, tokens, pos, qimpl=qimpl)
-            last = logits[:, -1]
+            # numerical anomaly guard (DESIGN.md §14): detect non-finite
+            # logits per slot INSIDE the dispatch — the host sees one (B,)
+            # bool, never the (B, V) logits — and sample from a zeroed row
+            # so a poisoned slot cannot derail the batch's sampling math.
+            # ``inject`` is the chaos harness's per-slot NaN needle (zeros
+            # in production; an array arg, so injection never retraces).
+            last = logits[:, -1] + inject[:, None]
+            bad = ~jnp.isfinite(last).all(axis=-1)
+            last = jnp.where(bad[:, None], 0.0, last)
             if temperature > 0.0:  # static arg: greedy never touches the key
                 key, sub = jax.random.split(key)
                 toks = sample(last, sub, temperature=temperature, top_k=top_k,
                               top_p=top_p)
             else:
                 toks = sample(last)
-            return toks, state, key
+            return toks, state, key, bad
 
         def prefill(params, tokens, lengths):
             _, st = api.prefill(params, cfg_, tokens=tokens, lengths=lengths,
@@ -254,8 +313,17 @@ class ServeEngine:
         # instead of being copied every token.  temperature/top_k/top_p ride
         # as static args so mutating engine.temperature between runs retraces
         # instead of silently keeping the init-time value.
-        self._decode = jax.jit(decode, donate_argnums=(1,), static_argnums=(5, 6, 7))
+        self._decode = jax.jit(decode, donate_argnums=(1,), static_argnums=(6, 7, 8))
         self._prefill = jax.jit(prefill)
+
+    # -- fault injection (runtime/resilience.py) ---------------------------
+    def _fault(self, site: str, step: int | None = None) -> bool:
+        """Consume-once poll of the injector at a serve fault site."""
+        if self._injector is None:
+            return False
+        if step is None:
+            step = self._stats["decode_steps"]
+        return self._injector.fires(site, step)
 
     # -- speculative decode (DESIGN.md §13) -------------------------------
     def _spec_fn(self, k: int):
@@ -275,14 +343,23 @@ class ServeEngine:
         api, cfg_, qimpl = self.api, self.cfg, self._qimpl
         quant = self._quant_state
 
-        def spec_step(params, dparams, state, tokens, pos, key,
-                      temperature, top_k, top_p):
+        def spec_step(params, dparams, state, tokens, pos, key, inject_draft,
+                      inject_verify, temperature, top_k, top_p):
             saved = spec_loop.snapshot_state(state, pos, k) if quant else None
             tok, d_toks, d_logits = tokens, [], []
+            # per-slot draft anomaly flag (DESIGN.md §14): sticky across the
+            # burst; a poisoned slot's draft logits zero out so its (garbage)
+            # proposals stay finite, and forcing acc=0 below makes the round
+            # degrade to the exact non-speculative verify token for that slot
+            draft_bad = jnp.zeros((tokens.shape[0],), bool)
             for j in range(k):
                 logits, state = api.decode_step(dparams, cfg_, state, tok,
                                                 pos + j, qimpl=qimpl)
                 last = logits[:, -1]
+                if j == 0:
+                    last = last + inject_draft[:, None]
+                draft_bad = draft_bad | ~jnp.isfinite(last).all(axis=-1)
+                last = jnp.where(draft_bad[:, None], 0.0, last)
                 if temperature > 0.0:
                     key, sub = jax.random.split(key)
                     t = sample(last, sub, temperature=temperature, top_k=top_k,
@@ -299,6 +376,9 @@ class ServeEngine:
             burst = jnp.concatenate([tokens, d_toks], axis=1)   # (B, K+1)
             logits, state, burst_kv = api.decode_verify(params, cfg_, state,
                                                         burst, pos, qimpl=qimpl)
+            logits = logits + inject_verify[:, None, None]
+            verify_bad = ~jnp.isfinite(logits).all(axis=(1, 2))
+            logits = jnp.where(verify_bad[:, None, None], 0.0, logits)
             if temperature > 0.0:
                 key, sub = jax.random.split(key)
                 acc, out = spec_loop.accept_tokens(
@@ -307,40 +387,47 @@ class ServeEngine:
             else:
                 acc, out = spec_loop.accept_tokens(logits, d_toks, d_logits,
                                                    None)
+            # poisoned slots accept nothing: with acc=0 the emitted token is
+            # the verify pass's position-0 output — byte-for-byte the token
+            # the non-speculative engine would have produced (draft fallback)
+            acc = jnp.where(draft_bad | verify_bad, 0, acc)
             if quant:
                 state = spec_loop.commit_state(state, saved, pos, acc,
                                                burst_kv, k, qimpl=qimpl)
-            return acc, out, state, key
+            return acc, out, state, key, draft_bad, verify_bad
 
-        fn = jax.jit(spec_step, donate_argnums=(2,), static_argnums=(6, 7, 8))
+        fn = jax.jit(spec_step, donate_argnums=(2,), static_argnums=(8, 9, 10))
         self._spec_jits[k] = fn
         return fn
 
     def _burst_len(self, active: list[int]) -> int:
-        """Burst K for this step: the configured K, shrunk so no slot's
-        burst can write past ``max_seq - 1`` (active slots sit at
-        ``pos <= max_seq - 2``, so this is always >= 1)."""
+        """Burst K for this step: the LIVE K (configured K minus any shed
+        tiers), shrunk so no slot's burst can write past ``max_seq - 1``
+        (active slots sit at ``pos <= max_seq - 2``, so this is >= 1
+        whenever speculation is live)."""
         max_pos = max(self.slots[i].pos for i in active)
-        return max(min(self.speculate, self.max_seq - 1 - max_pos), 0)
+        return max(min(self._k_live, self.max_seq - 1 - max_pos), 0)
 
-    def _spec_step(self, active: list[int], tokens_h, pos_h,
-                   k: int) -> dict[int, list[int]]:
-        """One draft-K / verify / accept / commit round -> emitted tokens
-        per active slot (1..K+1 each: accepted draft prefix + bonus)."""
-        acc, out, self.state, self._key = self._spec_fn(k)(
+    def _spec_step(self, active: list[int], tokens_h, pos_h, k: int,
+                   inject_draft, inject_verify):
+        """One draft-K / verify / accept / commit round -> (emitted tokens
+        per active slot (1..K+1 each: accepted draft prefix + bonus),
+        per-slot draft/verify non-finite flags)."""
+        acc, out, self.state, self._key, draft_bad, verify_bad = self._spec_fn(k)(
             self.params, self.draft_params, self.state,
             jnp.asarray(tokens_h), jnp.asarray(pos_h), self._key,
+            jnp.asarray(inject_draft), jnp.asarray(inject_verify),
             self.temperature, self.top_k, self.top_p)
         acc_h = np.asarray(acc)      # the step's ONLY host transfer:
-        out_h = np.asarray(out)      # (B,) accepts + (B, K+1) tokens
-        self.stats["spec_steps"] += 1
+        out_h = np.asarray(out)      # (B,) accepts + (B, K+1) tokens + flags
+        self._stats["spec_steps"] += 1
         emitted: dict[int, list[int]] = {}
         for i in active:
             a = int(acc_h[i])
             emitted[i] = [int(t) for t in out_h[i, : a + 1]]
-            self.stats["spec_proposed"] += k
-            self.stats["spec_accepted"] += a
-        return emitted
+            self._stats["spec_proposed"] += k
+            self._stats["spec_accepted"] += a
+        return emitted, np.asarray(draft_bad), np.asarray(verify_bad)
 
     # -- state surgery ---------------------------------------------------
     def _insert_rows(self, slot_ids: list[int], st_new: Any,
@@ -395,7 +482,7 @@ class ServeEngine:
         # stranding an admitted request mid-decode (DESIGN.md §13)
         last_pos = min(max(length - 1, length - 2 + req.max_new_tokens),
                        self.max_seq - 2)
-        last_pos = min(last_pos + self.speculate, self.max_seq - 1)
+        last_pos = min(last_pos + self._k_live, self.max_seq - 1)
         tb_last = last_pos // blk
         donor, common = None, 0
         if self.share_prefix:
@@ -486,6 +573,222 @@ class ServeEngine:
         self._shared_blocks.pop(slot_id, None)
         self._tables_dirty = True
 
+    # -- graceful degradation (DESIGN.md §14) -----------------------------
+    def _required_growth(self, slot_id: int, k: int) -> int:
+        """Blocks an active slot still needs reserved to finish under burst
+        headroom ``k``: unmapped logical blocks in its remaining write span,
+        plus one copy-on-write split per still-shared mapped block there.
+        Mirrors ``_map_slot_blocks``'s admission-time formula evaluated at
+        the current write position — ``_reserved[slot] == this`` is the
+        reservation-accounting invariant ``check_invariants`` pins."""
+        slot = self.slots[slot_id]
+        req, blk = slot.req, self._kv_blk
+        length = len(req.prompt)
+        last_pos = min(max(length - 1, length - 2 + req.max_new_tokens),
+                       self.max_seq - 2)
+        last_pos = min(last_pos + k, self.max_seq - 1)
+        need = 0
+        for tb in range(slot.pos // blk, last_pos // blk + 1):
+            bid = int(self._host_tables[slot_id, tb])
+            if bid < 0 or self.pool.refcount(bid) > 1:
+                need += 1
+        return need
+
+    def _set_live_k(self, k: int) -> bool:
+        """Change the live speculation burst length, resyncing every active
+        slot's growth reservation to the new headroom.  Shrinking always
+        succeeds (it releases reservations back to the pool — that is the
+        shed ladder's whole point); growing back is refused (False) when the
+        pool cannot re-secure the larger headroom for ALL active slots, so
+        restoring speculation can never strand an admitted request."""
+        if k == self._k_live:
+            return True
+        if self.paged:
+            deltas: dict[int, int] = {}
+            for i, s in enumerate(self.slots):
+                if s.free:
+                    continue
+                deltas[i] = self._required_growth(i, k) - self._reserved.get(i, 0)
+            grow = sum(d for d in deltas.values() if d > 0)
+            shrink = -sum(d for d in deltas.values() if d < 0)
+            if grow > self.pool.available + shrink:
+                return False
+            for i, d in sorted(deltas.items(), key=lambda kv: kv[1]):
+                if d < 0:                  # releases first: frees headroom
+                    self.pool.unreserve(-d)
+                elif d > 0:
+                    self.pool.reserve(d)
+                self._reserved[i] = self._reserved.get(i, 0) + d
+        self._k_live = k
+        return True
+
+    def _shed_event(self, action: str, **extra) -> None:
+        self._stats["shed_events"].append(
+            {"action": action, "step": self._stats["decode_steps"],
+             "tier": self._shed_tier, "k": self._k_live, **extra})
+
+    def _maybe_shed(self, waiting: list[Request]) -> bool:
+        """ONE degradation action for this loop turn (True if state changed):
+        walk the speculation ladder down a tier (releasing draft burst
+        headroom reservations), then — ladder exhausted — preempt the
+        lowest-priority resident strictly below the best waiting priority.
+        Neither applies -> fall back to plain backpressure waiting."""
+        pol = self._shed_policy
+        if pol is None:
+            return False
+        if pol.spec_tiers and self._shed_tier < len(self._spec_ladder) - 1:
+            if self._set_live_k(self._spec_ladder[self._shed_tier + 1]):
+                self._shed_tier += 1
+                self._shed_event("spec_shed")
+                return True
+        return self._preempt_for(waiting)
+
+    def _preempt_for(self, waiting: list[Request]) -> bool:
+        """Preempt the lowest-priority resident strictly below the best
+        waiting priority (equal priorities never thrash).  Fires from the
+        shed ladder under block-pool pressure AND directly under slot
+        pressure (all slots busy, a higher-priority request waiting)."""
+        pol = self._shed_policy
+        if pol is None or not pol.preempt or not waiting:
+            return False
+        best = max(r.priority for r in waiting)
+        victims = [i for i, s in enumerate(self.slots)
+                   if not s.free and s.req.priority < best]
+        if not victims:
+            return False
+        # lowest priority first; ties preempt the least-progressed slot
+        # (least replayed work)
+        victim = min(victims, key=lambda i: (
+            self.slots[i].req.priority, len(self.slots[i].generated)))
+        self._preempt(victim)
+        return True
+
+    def _relax_shed(self) -> None:
+        """Pressure-free turn: climb back one ladder tier if the pool can
+        re-secure the bigger burst headroom for every active slot."""
+        pol = self._shed_policy
+        if (pol is None or not pol.restore or self._shed_tier == 0):
+            return
+        if self._set_live_k(self._spec_ladder[self._shed_tier - 1]):
+            self._shed_tier -= 1
+            self._shed_event("restore")
+
+    def _preempt(self, slot_id: int) -> None:
+        """Snapshot a victim's progress and send it back to QUEUED: its
+        prompt + generated tokens become the resumed request's prompt, which
+        replays through the normal prefill/shared-prefix path; the remaining
+        token budget shrinks by what was already produced, so the resumed
+        stream picks up exactly where the victim stopped."""
+        s = self.slots[slot_id]
+        req = s.req
+        lc = self.lifecycles.get(req.uid)
+        now = time.monotonic()
+        if lc is not None:
+            lc.transition(RequestState.QUEUED, now,
+                          diagnostic="preempted under pool pressure")
+            lc.preemptions += 1
+            lc.resume_tokens.extend(s.generated)
+        self._stats["preemptions"] += 1
+        self._shed_event("preempt", uid=req.uid, at_tokens=len(s.generated))
+        resumed = dataclasses.replace(
+            req, prompt=req.prompt + s.generated,
+            max_new_tokens=req.max_new_tokens - len(s.generated))
+        self._release_slot(slot_id)
+        self._queue.append(resumed)
+
+    # -- lifecycle bookkeeping (serve/lifecycle.py) -----------------------
+    def submit(self, req: Request) -> RequestLifecycle:
+        """Enqueue a request (usable mid-``run`` from a step hook).  Creates
+        the lifecycle record; admission order is priority-first, FIFO within
+        a priority class."""
+        lc = RequestLifecycle(uid=req.uid, priority=req.priority,
+                              deadline_s=req.deadline_s,
+                              ttft_budget_s=req.ttft_budget_s,
+                              enqueued_t=time.monotonic())
+        existing = self.lifecycles.get(req.uid)
+        if existing is not None and not existing.terminal:
+            raise LifecycleError(
+                f"request uid {req.uid} is already live ({existing.state.value})")
+        self.lifecycles[req.uid] = lc
+        self._queue.append(req)
+        return lc
+
+    def cancel(self, uid: int) -> None:
+        """Request cancellation; takes effect at the next loop turn (the
+        request may still complete first — cancelling a terminal request is
+        a no-op, never an error)."""
+        self._cancel_requested.add(uid)
+
+    def _release_slot(self, slot_id: int) -> None:
+        """Free a slot's compute + paged resources (no lifecycle change)."""
+        if self.paged:
+            self._free_slot_blocks(slot_id)
+        self.slots[slot_id] = _Slot()
+        self._pending_token.pop(slot_id, None)
+
+    def _finalize(self, slot_id: int | None, req: Request,
+                  state: RequestState, results: dict[int, list[int]],
+                  diagnostic: str = "") -> None:
+        """Move a request to a terminal state and free its resources.
+
+        The lifecycle transition is the free-exactly-once guard: a second
+        finalization of the same request raises ``LifecycleError`` before
+        any slot/block/reservation is touched twice.
+        """
+        lc = self.lifecycles.get(req.uid)
+        gen = list(self.slots[slot_id].generated) if slot_id is not None else []
+        if lc is not None:
+            lc.transition(state, time.monotonic(), diagnostic)
+            lc.tokens = lc.resume_tokens + gen
+            results[req.uid] = lc.tokens
+        else:
+            results[req.uid] = gen
+        if slot_id is not None:
+            self._release_slot(slot_id)
+        self._stats[{RequestState.DONE: "completed",
+                     RequestState.FAILED: "failed",
+                     RequestState.CANCELLED: "cancelled",
+                     RequestState.TIMED_OUT: "timed_out"}[state]] += 1
+
+    def _reap(self, now: float, results: dict[int, list[int]]) -> None:
+        """Apply pending cancellations and deadline/TTFT expiries, queued
+        and resident alike, before this turn's admission."""
+        for uid in sorted(self._cancel_requested):
+            lc = self.lifecycles.get(uid)
+            if lc is None or lc.terminal:
+                self._cancel_requested.discard(uid)
+                continue
+            qi = next((j for j, r in enumerate(self._queue) if r.uid == uid),
+                      None)
+            if qi is not None:
+                self._finalize(None, self._queue.pop(qi),
+                               RequestState.CANCELLED, results,
+                               diagnostic="cancelled while queued")
+            else:
+                si = next((i for i, s in enumerate(self.slots)
+                           if not s.free and s.req.uid == uid), None)
+                if si is not None:
+                    self._finalize(si, self.slots[si].req,
+                                   RequestState.CANCELLED, results,
+                                   diagnostic="cancelled mid-decode")
+            self._cancel_requested.discard(uid)
+        for j in range(len(self._queue) - 1, -1, -1):
+            req = self._queue[j]
+            lc = self.lifecycles.get(req.uid)
+            why = lc.expired(now) if lc is not None else None
+            if why is not None:
+                self._finalize(None, self._queue.pop(j),
+                               RequestState.TIMED_OUT, results,
+                               diagnostic=f"{why} budget exceeded while queued")
+        for i, s in enumerate(self.slots):
+            if s.free:
+                continue
+            lc = self.lifecycles.get(s.req.uid)
+            why = lc.expired(now) if lc is not None else None
+            if why is not None:
+                self._finalize(i, s.req, RequestState.TIMED_OUT, results,
+                               diagnostic=f"{why} budget exceeded mid-decode")
+
     def _row_tables(self, with_head: list[tuple[int, list[int]]],
                     pad: int) -> np.ndarray:
         """Physical write destinations per (prefill row, logical block).
@@ -521,71 +824,135 @@ class ServeEngine:
         """
         with_head: list[tuple[int, list[int]]] = []
         rejected: list[Request] = []
+        admitted: list[Request] = []
+        now = time.monotonic()
         for slot_id, req in assignments:
             prompt = req.prompt
             assert 1 <= len(prompt) < self.max_seq, (len(prompt), self.max_seq)
+            lc = self.lifecycles.get(req.uid)
+            if lc is not None:
+                lc.transition(RequestState.PREFILL, now)
             slot = self.slots[slot_id]
             slot.req, slot.generated = req, []
             slot.pos = len(prompt) - 1
             if self.paged and not self._map_slot_blocks(slot_id, req):
                 self.slots[slot_id] = _Slot()
+                if lc is not None:   # pool too full: back to the queue
+                    lc.transition(RequestState.QUEUED, now)
                 rejected.append(req)
                 continue
+            admitted.append(req)
             self._pending_token[slot_id] = prompt[-1]  # replayed next step
             if len(prompt) > 1:
                 with_head.append((slot_id, prompt[:-1]))
         if self.paged:
             self._push_tables()
-        if not with_head:
-            return rejected
-        pad = min(_round_up(max(len(h) for _, h in with_head), self.prefill_pad),
-                  self.max_seq)
-        toks = np.zeros((len(with_head), pad), np.int32)
-        for row, (_, head) in enumerate(with_head):
-            toks[row, : len(head)] = head
-        lengths = jnp.asarray([len(h) for _, h in with_head], jnp.int32)
-        st = self._prefill(self.params, jnp.asarray(toks), lengths)
-        if self.paged:
-            self._insert_rows_paged(with_head, st, lengths, pad)
-        else:
-            self._insert_rows([slot_id for slot_id, _ in with_head], st, lengths)
-        self.stats["prefill_tokens"] += sum(len(h) for _, h in with_head)
+        if with_head:
+            pad = min(_round_up(max(len(h) for _, h in with_head),
+                                self.prefill_pad), self.max_seq)
+            toks = np.zeros((len(with_head), pad), np.int32)
+            for row, (_, head) in enumerate(with_head):
+                toks[row, : len(head)] = head
+            lengths = jnp.asarray([len(h) for _, h in with_head], jnp.int32)
+            st = self._prefill(self.params, jnp.asarray(toks), lengths)
+            if self.paged:
+                self._insert_rows_paged(with_head, st, lengths, pad)
+            else:
+                self._insert_rows([slot_id for slot_id, _ in with_head], st,
+                                  lengths)
+            self._stats["prefill_tokens"] += sum(len(h) for _, h in with_head)
+        now = time.monotonic()
+        for req in admitted:
+            lc = self.lifecycles.get(req.uid)
+            if lc is not None:
+                lc.transition(RequestState.DECODE, now)
         return rejected
 
     # -- main loop -----------------------------------------------------------
-    def run(self, requests: list[Request]) -> dict[int, list[int]]:
-        """Continuous-batching loop until every request completes."""
+    def run(self, requests: list[Request] = (), *,
+            step_hook=None) -> dict[int, list[int]]:
+        """Continuous-batching loop until every submitted request reaches a
+        terminal lifecycle state.  Returns ``{uid: token stream}`` for every
+        request that terminated during this call — partial streams for
+        FAILED / CANCELLED / TIMED_OUT / never-admitted requests (consult
+        ``engine.lifecycles[uid]`` for the terminal state and diagnostic).
+
+        ``step_hook(engine, step)`` fires once per loop turn before
+        admission; the chaos harness uses it for mid-run ``submit`` /
+        ``cancel`` at deterministic steps.
+        """
         t0 = time.perf_counter()
-        queue = list(requests)
+        for req in requests:
+            self.submit(req)
         results: dict[int, list[int]] = {}
-        self._pending_token: dict[int, int] = {}
+        self._pending_token = {}
         tokens_h = np.zeros((self.max_slots, 1), np.int32)
         pos_h = np.zeros((self.max_slots,), np.int32)
 
         def active() -> list[int]:
             return [i for i, s in enumerate(self.slots) if not s.free]
 
-        while queue or active():
-            # fill free slots: one batched admission per loop turn
+        while self._queue or active():
+            if step_hook is not None:
+                step_hook(self, self._stats["decode_steps"])
+            # cancellations + deadline/TTFT expiry, queued and resident alike
+            self._reap(time.monotonic(), results)
+            # fill free slots: one batched admission per loop turn, highest
+            # priority first (stable sort: FIFO within a priority class)
             free = [i for i, s in enumerate(self.slots) if s.free]
-            if free and queue:
-                assignments = [(i, queue.pop(0)) for i in free[: len(queue)]]
-                if self.batch_admission:
-                    rejected = self._admit(assignments)
-                else:  # reference path: one padded prefill per request
-                    rejected = []
-                    for pair in assignments:
-                        rejected += self._admit([pair])
-                # paged backpressure: requests the pool could not cover wait
-                # for completions to free blocks
-                queue[:0] = rejected
-                if rejected and not active():
-                    raise RuntimeError(
-                        f"request needs more KV blocks than the whole pool "
-                        f"holds ({self.pool.num_blocks}); raise pool_blocks "
-                        f"or the state_bytes budget")
+            pressure = False
+            if free and self._queue:
+                self._queue.sort(key=lambda r: -r.priority)
+                if self._fault("pool_exhaustion"):
+                    # injected pool pressure: refuse the whole admission turn
+                    # so the shed ladder reacts exactly as it would to a
+                    # genuinely full pool
+                    pressure = True
+                else:
+                    assignments = [(i, self._queue.pop(0))
+                                   for i in free[: len(self._queue)]]
+                    if self.batch_admission:
+                        rejected = self._admit(assignments)
+                    else:  # reference path: one padded prefill per request
+                        rejected = []
+                        for pair in assignments:
+                            rejected += self._admit([pair])
+                    # paged backpressure: requests the pool could not cover
+                    # wait (shedding below) for completions to free blocks
+                    self._queue[:0] = rejected
+                    pressure = bool(rejected)
+                    if rejected and not active():
+                        # an idle pool that still rejects can never admit:
+                        # shedding has nothing left to reclaim
+                        raise RuntimeError(
+                            f"request needs more KV blocks than the whole pool "
+                            f"holds ({self.pool.num_blocks}); raise pool_blocks "
+                            f"or the state_bytes budget")
+            if pressure:
+                # tiered degradation instead of indefinite backpressure:
+                # shrink speculation headroom, then priority-gated preemption
+                self._maybe_shed(self._queue)
+            elif self._queue:
+                # slot pressure (every slot busy, nothing rejected): a
+                # strictly-higher-priority waiter may still preempt
+                self._preempt_for(self._queue)
+            else:
+                self._relax_shed()
             act = active()
-            k_eff = self._burst_len(act) if (self.speculate and act) else 0
+            if not act:
+                continue
+            if self.paged and self._fault("append_failure"):
+                # the slot's paged append bookkeeping died: quarantine that
+                # request alone; everyone else decodes this turn as usual
+                victim = act[0]
+                self._finalize(victim, self.slots[victim].req,
+                               RequestState.FAILED, results,
+                               diagnostic="paged append bookkeeping failure "
+                                          "(injected fault)")
+                act = active()
+                if not act:
+                    continue
+            k_eff = self._burst_len(act) if self._k_live else 0
             if self.paged:
                 # map/CoW every block an active slot can write this step
                 # (the whole K_eff+1 burst span under speculation)
@@ -597,20 +964,59 @@ class ServeEngine:
                 tokens_h[i, 0] = self._pending_token.get(
                     i, s.generated[-1] if s.generated else 0)
                 pos_h[i] = s.pos
-            if k_eff > 0:
-                emitted = self._spec_step(act, tokens_h, pos_h, k_eff)
-            else:
-                toks_dev, self.state, self._key = self._decode(
-                    self.params, self.state, jnp.asarray(tokens_h),
-                    jnp.asarray(pos_h), self._key, self.temperature,
-                    self.top_k, self.top_p)
-                toks = np.asarray(toks_dev)  # ONE (B,) int32 host transfer
-                emitted = {i: [int(toks[i])] for i in act}
-            self.stats["decode_steps"] += 1
+            # per-slot NaN needles (zeros in production: array args, so the
+            # chaos harness injects without retracing the dispatch)
+            inject = np.zeros((self.max_slots,), np.float32)
+            if self._fault("nan_logit"):
+                inject[act[0]] = np.float32("nan")
+            step = self._stats["decode_steps"]
+            with StepTimer() as timer:
+                if k_eff > 0:
+                    inj_draft = np.zeros((self.max_slots,), np.float32)
+                    if self._fault("nan_logit_draft"):
+                        inj_draft[act[0]] = np.float32("nan")
+                    emitted, draft_bad, verify_bad = self._spec_step(
+                        act, tokens_h, pos_h, k_eff, inj_draft, inject)
+                else:
+                    toks_dev, self.state, self._key, bad_dev = self._decode(
+                        self.params, self.state, jnp.asarray(tokens_h),
+                        jnp.asarray(pos_h), self._key, jnp.asarray(inject),
+                        self.temperature, self.top_k, self.top_p)
+                    toks = np.asarray(toks_dev)  # ONE (B,) int32 host transfer
+                    verify_bad = np.asarray(bad_dev)
+                    draft_bad = None
+                    emitted = {i: [int(toks[i])] for i in act}
+            self._stats["decode_steps"] += 1
+            # straggler latency signal -> shed one speculation tier (floor
+            # K=1: only real pool pressure turns speculation fully off)
+            if (self._straggler.observe(step, timer.dt)
+                    and self._shed_policy is not None
+                    and self._shed_policy.straggler_sheds_spec
+                    and self._k_live > 1
+                    and self._set_live_k(self._spec_ladder[self._shed_tier + 1])):
+                self._shed_tier += 1
+                self._shed_event("straggler_shed", dt=timer.dt)
+            now = time.monotonic()
             for i in act:
                 s = self.slots[i]
                 self._pending_token.pop(i, None)
+                if verify_bad[i]:
+                    # numerical quarantine: ONLY the poisoned request fails
+                    # (sampling already saw zeroed logits, so neighbours'
+                    # streams are untouched)
+                    self._stats["nan_quarantined"] += 1
+                    self._finalize(i, s.req, RequestState.FAILED, results,
+                                   diagnostic=f"non-finite logits at decode "
+                                              f"step {step}")
+                    continue
+                if draft_bad is not None and draft_bad[i]:
+                    # poisoned draft, healthy verify: this round already fell
+                    # back to the non-speculative token for this slot
+                    self._stats["nan_draft_fallbacks"] += 1
+                lc = self.lifecycles.get(s.req.uid)
                 for tok in emitted[i]:
+                    if lc is not None and lc.first_token_t is None:
+                        lc.first_token_t = now
                     s.generated.append(tok)
                     s.pos += 1
                     done = (tok == s.req.eos_id
@@ -620,14 +1026,114 @@ class ServeEngine:
                         # a burst stops at its first terminal token: the rest
                         # of the accepted prefix is DROPPED, the slot (and
                         # its paged blocks) frees this very step
-                        results[s.req.uid] = list(s.generated)
-                        self.stats["completed"] += 1
-                        if self.paged:
-                            self._free_slot_blocks(i)
-                        self.slots[i] = _Slot()
+                        self._finalize(i, s.req, RequestState.DONE, results)
                         break
-        self.stats["wall_s"] += time.perf_counter() - t0
+            if self._debug_invariants:
+                self.check_invariants()
+        self._stats["wall_s"] += time.perf_counter() - t0
         return results
+
+    # -- debug invariants (DESIGN.md §14) ---------------------------------
+    def check_invariants(self) -> None:
+        """Re-derive the engine's resource-accounting invariants from
+        scratch and raise ``AssertionError`` on the first violation.  Runs
+        after every loop turn under ``debug_invariants=True`` (the chaos
+        harness) — O(slots x blocks) host work plus, for the zero-beyond-
+        write probe, one device readback per active slot's write block.
+
+        * refcount conservation: every usable block's pool refcount equals
+          the number of host-table rows mapping it; allocated + free
+          partitions the pool exactly (no leak, no double-free).
+        * reservation accounting: the pool's reserved total is the sum of
+          the per-slot ledgers, and each active slot's ledger equals its
+          remaining growth requirement at the live burst K (an admitted
+          request can always finish).
+        * zero-beyond-write: in the block holding an active slot's last
+          committed token, every position past the write offset holds zero
+          levels — a freed block's previous occupant can never leak into a
+          later request (kvcache/paged.py's contract).
+        """
+        if not self.paged:
+            return
+        pool = self.pool
+        refs = np.zeros(pool.num_blocks + 1, np.int64)
+        for i in range(self.max_slots):
+            for bid in self._host_tables[i]:
+                if bid >= 0:
+                    refs[int(bid)] += 1
+        for bid in range(1, pool.num_blocks + 1):
+            if pool.refcount(bid) != refs[bid]:
+                raise AssertionError(
+                    f"block {bid}: pool refcount {pool.refcount(bid)} != "
+                    f"{refs[bid]} host-table mappings (leak or double-free)")
+        mapped = int((refs[1:] > 0).sum())
+        if pool.allocated != mapped:
+            raise AssertionError(
+                f"pool accounts {pool.allocated} allocated blocks but the "
+                f"tables map {mapped}")
+        if pool.allocated + pool.free_count != pool.num_blocks:
+            raise AssertionError(
+                f"allocated {pool.allocated} + free {pool.free_count} != "
+                f"pool size {pool.num_blocks}")
+        ledger = sum(self._reserved.values())
+        if pool.reserved != ledger:
+            raise AssertionError(
+                f"pool reserves {pool.reserved} blocks but per-slot ledgers "
+                f"sum to {ledger}")
+        blk = self._kv_blk
+        for i, s in enumerate(self.slots):
+            if s.free:
+                if self._reserved.get(i, 0):
+                    raise AssertionError(
+                        f"free slot {i} still holds a growth reservation "
+                        f"({self._reserved[i]} blocks)")
+                continue
+            need = self._required_growth(i, self._k_live)
+            if self._reserved.get(i, 0) != need:
+                raise AssertionError(
+                    f"slot {i} (uid {s.req.uid}): reserved "
+                    f"{self._reserved.get(i, 0)} blocks but needs {need} to "
+                    f"finish at K={self._k_live}")
+            off = s.pos % blk
+            if s.pos == 0 or off == 0:
+                continue  # last write filled its block exactly
+            bid = int(self._host_tables[i, (s.pos - 1) // blk])
+            if bid < 0 or self.pool.refcount(bid) > 1:
+                continue  # shared blocks are a donor's bytes, not this slot's
+            layer = next((l for l in self.state
+                          if isinstance(l, kvcache.PagedKVLayer)), None)
+            if layer is None:
+                continue
+            # one layer's device readback is probe enough per turn
+            for side in (layer.k_packed, layer.v_packed):
+                tail = np.asarray(side[bid, :, off:, :])
+                if tail.any():
+                    raise AssertionError(
+                        f"slot {i} block {bid}: non-zero levels beyond "
+                        f"write offset {off} (stale bytes would leak "
+                        f"across free/realloc)")
+
+    # -- stats -------------------------------------------------------------
+    def stats(self) -> dict:
+        """Counters plus a ``health`` section (latency + degradation state).
+
+        ``step_time_median_s`` / ``straggler_flagged`` surface the
+        StragglerMonitor's rolling view of the decode loop; ``shed_tier`` /
+        ``speculate_live_k`` show where on the degradation ladder the engine
+        currently sits (0 / configured K = full service).
+        """
+        out = dict(self._stats)
+        out["shed_events"] = list(self._stats["shed_events"])
+        out["health"] = {
+            "step_time_median_s": self._straggler.median(),
+            "straggler_flagged": len(self._straggler.flagged),
+            "shed_tier": self._shed_tier,
+            "speculate_live_k": self._k_live,
+            "queue_depth": len(self._queue),
+            "active_slots": sum(not s.free for s in self.slots),
+            "pool_available": self.pool.available if self.paged else None,
+        }
+        return out
 
     # -- state accounting ----------------------------------------------------
     def state_container_bytes(self) -> int:

@@ -1,0 +1,397 @@
+"""Chaos harness for the serve path (DESIGN.md §14).
+
+Randomized fault schedules — pool exhaustion, NaN logits (decode and draft),
+paged append failures, mid-run cancellation — run against every engine
+configuration (fp / quantized-dense / paged x speculative) and the outcome
+is checked against a fault-free reference run of the same workload:
+
+  * every request reaches exactly one terminal lifecycle state;
+  * every request that survived untouched (DONE, never preempted) has a
+    token stream **bitwise identical** to the fault-free run — faults
+    quarantine, they never perturb neighbours;
+  * requests the faults did touch still behave lawfully: non-preempted
+    casualties' partial streams are a prefix of their reference stream
+    (greedy decode is deterministic up to the fault), preempted-and-resumed
+    requests complete their full budget and carry their pre-preemption
+    tokens verbatim;
+  * post-run pool invariants hold: zero allocated blocks, zero live
+    reservations, refcount conservation (``check_invariants`` also ran
+    after every loop turn via ``debug_invariants=True``).
+
+Preempted requests are excluded from the bitwise check by design: replaying
+a quantized request's prefix through prefill requantizes its blocks along a
+different path than incremental decode appends, so the resumed stream is
+correct-length greedy decode but not bit-identical to an uninterrupted run
+(the same reason dense-vs-paged parity needs identical write paths).
+
+Seeds come from ``CHAOS_SEEDS`` (comma-separated, default "0") so CI can
+fan a matrix across processes without touching the test body.
+"""
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import gemma_2b
+from repro.models import registry
+from repro.runtime.resilience import SERVE_FAULT_SITES, FailureInjector
+from repro.serve import (LifecycleError, Request, RequestState, ServeEngine,
+                         spec_ladder)
+from repro.serve.lifecycle import TERMINAL_STATES, RequestLifecycle
+
+SEEDS = [int(s) for s in os.environ.get("CHAOS_SEEDS", "0").split(",")]
+
+MAX_NEW = 8
+PROMPTS = {
+    0: [5, 6, 7, 8],
+    1: [5, 6, 7, 9, 4],       # shares a prefix with 0 (paged CoW path)
+    2: [9] * 11,
+    3: [2, 3],
+    4: [5, 6, 7, 8, 1, 2],
+}
+
+CONFIGS = {
+    "fp-dense": {},
+    "quant-dense": {"state_bits": 8},
+    "paged": {"state_bits": 4, "paged": True, "pool_blocks": 10},
+    "paged-spec": {"state_bits": 4, "paged": True, "pool_blocks": 12,
+                   "speculate": 2, "draft_policy": 4},
+}
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = gemma_2b.CONFIG.reduced()
+    api = registry.get_api(cfg)
+    sp = api.unstack(api.init(cfg, jax.random.key(0)), cfg)
+    return cfg, sp
+
+
+def _engine(cfg, sp, config_key, **extra):
+    kw = dict(max_slots=3, max_seq=64, prefill_pad=8, qimpl="xla")
+    kw.update(CONFIGS[config_key])
+    kw.update(extra)
+    return ServeEngine(cfg, sp, **kw)
+
+
+def _requests(priorities=None):
+    priorities = priorities or {}
+    return [Request(uid=u, prompt=p, max_new_tokens=MAX_NEW,
+                    priority=priorities.get(u, 0))
+            for u, p in PROMPTS.items()]
+
+
+def _reference(cfg, sp, config_key):
+    """Fault-free streams for the whole workload (admission order/timing
+    never changes a greedy request's own tokens)."""
+    return _engine(cfg, sp, config_key).run(_requests())
+
+
+def _assert_clean(eng):
+    """Post-run resource invariants: nothing leaked, nothing still promised."""
+    assert all(s.free for s in eng.slots)
+    if eng.paged:
+        assert eng.pool.allocated == 0, "leaked blocks"
+        assert eng.pool.reserved == 0, "live reservations after drain"
+    eng.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# the randomized harness
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("config_key", sorted(CONFIGS))
+@pytest.mark.parametrize("seed", SEEDS)
+def test_chaos_matrix(setup, config_key, seed):
+    cfg, sp = setup
+    ref = _reference(cfg, sp, config_key)
+    rng = np.random.default_rng(0xC0FFEE + seed)
+    spec = "speculate" in CONFIGS[config_key]
+    paged = CONFIGS[config_key].get("paged", False)
+
+    schedule = {"nan_logit": tuple(int(s) for s in
+                                   rng.choice(20, size=1, replace=False))}
+    if spec:
+        schedule["nan_logit_draft"] = (int(rng.integers(1, 10)),)
+    if paged:
+        schedule["pool_exhaustion"] = tuple(int(s) for s in
+                                            rng.choice(4, size=1))
+        schedule["append_failure"] = (int(rng.integers(2, 14)),)
+    cancel_uid = int(rng.integers(0, len(PROMPTS)))
+    cancel_step = int(rng.integers(1, 12))
+
+    injector = FailureInjector(schedule=schedule)
+    eng = _engine(cfg, sp, config_key, fault_injector=injector,
+                  debug_invariants=True)
+
+    def hook(engine, step):
+        if step == cancel_step:
+            engine.cancel(cancel_uid)
+
+    out = eng.run(_requests(priorities={4: 1}), step_hook=hook)
+
+    assert set(out) == set(PROMPTS)
+    for uid in PROMPTS:
+        lc = eng.lifecycles[uid]
+        assert lc.state in TERMINAL_STATES
+        assert out[uid] == lc.tokens
+        if lc.state is RequestState.DONE and lc.preemptions == 0:
+            # untouched survivor: bitwise identical to the fault-free run
+            assert out[uid] == ref[uid], (uid, lc.state, lc.diagnostic)
+        elif lc.preemptions == 0:
+            # casualty (failed/cancelled): deterministic up to the fault
+            assert out[uid] == ref[uid][: len(out[uid])], (uid, lc.diagnostic)
+        else:
+            # preempted: full budget served, pre-preemption tokens verbatim
+            if lc.state is RequestState.DONE:
+                assert len(out[uid]) == MAX_NEW
+            assert out[uid][: len(lc.resume_tokens)] == lc.resume_tokens
+    _assert_clean(eng)
+
+
+# ---------------------------------------------------------------------------
+# deterministic fault-site tests
+# ---------------------------------------------------------------------------
+
+
+def test_nan_quarantines_only_the_victim(setup):
+    cfg, sp = setup
+    ref = _reference(cfg, sp, "quant-dense")
+    inj = FailureInjector(schedule={"nan_logit": (2,)})
+    eng = _engine(cfg, sp, "quant-dense", fault_injector=inj,
+                  debug_invariants=True)
+    out = eng.run(_requests())
+    failed = [u for u, lc in eng.lifecycles.items()
+              if lc.state is RequestState.FAILED]
+    assert len(failed) == 1
+    assert "non-finite logits" in eng.lifecycles[failed[0]].diagnostic
+    for uid in PROMPTS:
+        if uid not in failed:
+            assert eng.lifecycles[uid].state is RequestState.DONE
+            assert out[uid] == ref[uid]
+    st = eng.stats()
+    assert st["nan_quarantined"] == 1 and st["failed"] == 1
+    assert inj.exhausted
+
+
+def test_draft_nan_falls_back_not_fails(setup):
+    """A poisoned draft must NOT fail the request: the round degrades to
+    the non-speculative verify token for that slot, so the full workload
+    stays bitwise identical to the fault-free speculative run."""
+    cfg, sp = setup
+    ref = _reference(cfg, sp, "paged-spec")
+    inj = FailureInjector(schedule={"nan_logit_draft": (1,)})
+    eng = _engine(cfg, sp, "paged-spec", fault_injector=inj,
+                  debug_invariants=True)
+    out = eng.run(_requests())
+    assert out == ref
+    st = eng.stats()
+    assert st["nan_draft_fallbacks"] >= 1
+    assert st["failed"] == 0 and st["nan_quarantined"] == 0
+    assert all(lc.state is RequestState.DONE
+               for lc in eng.lifecycles.values())
+    _assert_clean(eng)
+
+
+def test_injected_pool_exhaustion_sheds_speculation_exactly(setup):
+    cfg, sp = setup
+    ref = _reference(cfg, sp, "paged-spec")
+    inj = FailureInjector(schedule={"pool_exhaustion": (0,)})
+    eng = _engine(cfg, sp, "paged-spec", fault_injector=inj,
+                  debug_invariants=True)
+    out = eng.run(_requests())
+    assert out == ref  # K-shedding is token-exact under greedy
+    events = eng.stats()["shed_events"]
+    assert any(e["action"] == "spec_shed" for e in events)
+    assert any(e["action"] == "restore" for e in events)
+    assert eng.stats()["health"]["shed_tier"] == 0  # climbed back down
+    assert inj.exhausted
+    _assert_clean(eng)
+
+
+def test_append_failure_quarantines_one_request(setup):
+    cfg, sp = setup
+    ref = _reference(cfg, sp, "paged")
+    inj = FailureInjector(schedule={"append_failure": (3,)})
+    eng = _engine(cfg, sp, "paged", fault_injector=inj, debug_invariants=True)
+    out = eng.run(_requests())
+    failed = [u for u, lc in eng.lifecycles.items()
+              if lc.state is RequestState.FAILED]
+    assert len(failed) == 1
+    assert "append bookkeeping" in eng.lifecycles[failed[0]].diagnostic
+    for uid in PROMPTS:
+        if uid not in failed:
+            assert out[uid] == ref[uid]
+    _assert_clean(eng)
+
+
+def test_artifact_mismatch_fault_refuses_start(setup):
+    from repro.core.policy import BitPolicy, PolicyArtifact
+    from repro.quant import apply as qapply
+
+    cfg, sp = setup
+    api = registry.get_api(cfg)
+    params = api.init(cfg, jax.random.key(0))
+    specs = qapply.layer_specs(params, cfg)
+    policy = BitPolicy.uniform(specs, 8)
+    artifact = PolicyArtifact.build(policy, backend="shift_add")
+    qp = qapply.quantize_for_serve(sp, policy, cfg)
+    # sanity: the artifact is served fine without the fault
+    ServeEngine(cfg, qp, max_slots=2, max_seq=64, artifact=artifact)
+    inj = FailureInjector(schedule={"artifact_mismatch": (0,)})
+    with pytest.raises(ValueError, match="disagree with the policy artifact"):
+        ServeEngine(cfg, qp, max_slots=2, max_seq=64, artifact=artifact,
+                    fault_injector=inj)
+    assert inj.exhausted
+
+
+def test_cancel_deadline_and_ttft_paths(setup):
+    cfg, sp = setup
+    ref = _reference(cfg, sp, "fp-dense")
+    reqs = [Request(uid=0, prompt=PROMPTS[0], max_new_tokens=MAX_NEW),
+            Request(uid=1, prompt=PROMPTS[1], max_new_tokens=MAX_NEW),
+            # already-blown end-to-end budget: reaped before admission
+            Request(uid=2, prompt=PROMPTS[2], max_new_tokens=MAX_NEW,
+                    deadline_s=0.0),
+            # generous budgets: must NOT fire
+            Request(uid=3, prompt=PROMPTS[3], max_new_tokens=MAX_NEW,
+                    deadline_s=3600.0, ttft_budget_s=3600.0)]
+    eng = _engine(cfg, sp, "fp-dense")
+
+    def hook(engine, step):
+        if step == 3:
+            engine.cancel(1)
+            engine.cancel(999)  # unknown uid: no-op, never an error
+
+    out = eng.run(reqs, step_hook=hook)
+    lcs = eng.lifecycles
+    assert lcs[0].state is RequestState.DONE and out[0] == ref[0]
+    assert lcs[1].state is RequestState.CANCELLED
+    assert out[1] == ref[1][: len(out[1])] and len(out[1]) < MAX_NEW
+    assert lcs[2].state is RequestState.TIMED_OUT and out[2] == []
+    assert "deadline" in lcs[2].diagnostic
+    assert lcs[3].state is RequestState.DONE and out[3] == ref[3]
+    # timing accessors populated for the completed requests
+    assert lcs[0].ttft() is not None and lcs[0].ttlt() >= lcs[0].ttft()
+    assert lcs[2].ttft() is None
+    st = eng.stats()
+    assert st["cancelled"] == 1 and st["timed_out"] == 1 and st["completed"] == 2
+
+
+def test_priority_preemption_snapshots_and_resumes(setup):
+    """Slot pressure + a strictly-higher-priority waiter preempts the
+    lowest-priority resident; the victim re-queues, replays its prefix and
+    finishes its full budget.  Equal priorities never preempt."""
+    cfg, sp = setup
+    ref = _reference(cfg, sp, "paged")
+    eng = _engine(cfg, sp, "paged", debug_invariants=True)
+    hi = Request(uid=4, prompt=PROMPTS[4], max_new_tokens=MAX_NEW, priority=5)
+
+    def hook(engine, step):
+        if step == 2 and 4 not in engine.lifecycles:
+            engine.submit(hi)
+
+    out = eng.run([Request(uid=u, prompt=PROMPTS[u], max_new_tokens=MAX_NEW)
+                   for u in range(3)], step_hook=hook)
+    st = eng.stats()
+    assert st["preemptions"] >= 1
+    assert any(e["action"] == "preempt" for e in st["shed_events"])
+    victims = [u for u, lc in eng.lifecycles.items() if lc.preemptions > 0]
+    assert victims and 4 not in victims  # the high-priority request never is
+    assert eng.lifecycles[4].state is RequestState.DONE
+    assert out[4] == ref[4]  # never preempted -> bitwise identical
+    for u in victims:
+        lc = eng.lifecycles[u]
+        assert lc.state is RequestState.DONE and len(out[u]) == MAX_NEW
+        # pre-preemption progress carried verbatim, and it matches the
+        # deterministic fault-free prefix
+        assert out[u][: len(lc.resume_tokens)] == lc.resume_tokens
+        assert lc.resume_tokens == ref[u][: len(lc.resume_tokens)]
+    _assert_clean(eng)
+
+
+def test_equal_priorities_never_preempt(setup):
+    cfg, sp = setup
+    eng = _engine(cfg, sp, "paged", debug_invariants=True)
+    out = eng.run(_requests())  # 5 equal-priority requests, 3 slots
+    assert eng.stats()["preemptions"] == 0
+    assert all(lc.state is RequestState.DONE
+               for lc in eng.lifecycles.values())
+    assert out == _reference(cfg, sp, "paged")
+    _assert_clean(eng)
+
+
+def test_submit_rejects_live_duplicate_uid(setup):
+    cfg, sp = setup
+    eng = _engine(cfg, sp, "fp-dense")
+    eng.submit(Request(uid=7, prompt=[1, 2], max_new_tokens=2))
+    with pytest.raises(LifecycleError, match="already live"):
+        eng.submit(Request(uid=7, prompt=[3, 4], max_new_tokens=2))
+    eng.run()
+    assert eng.lifecycles[7].state is RequestState.DONE
+    # terminal uid may be resubmitted (fresh lifecycle record)
+    eng.submit(Request(uid=7, prompt=[1, 2], max_new_tokens=2))
+    eng.run()
+
+
+# ---------------------------------------------------------------------------
+# lifecycle state machine (pure host-side unit tests)
+# ---------------------------------------------------------------------------
+
+
+class TestLifecycleMachine:
+    def test_happy_path(self):
+        lc = RequestLifecycle(uid=0, enqueued_t=0.0)
+        for s, t in [(RequestState.PREFILL, 1.0), (RequestState.DECODE, 2.0),
+                     (RequestState.DONE, 3.0)]:
+            lc.transition(s, t)
+        assert lc.terminal and lc.finished_t == 3.0 and lc.admitted_t == 1.0
+        assert [s for s, _ in lc.history] == ["prefill", "decode", "done"]
+
+    def test_illegal_transition_raises(self):
+        lc = RequestLifecycle(uid=0)
+        with pytest.raises(LifecycleError, match="illegal transition"):
+            lc.transition(RequestState.DONE, 0.0)  # QUEUED -> DONE
+
+    def test_terminal_states_absorb(self):
+        """Free-exactly-once: finalizing twice is an error, not a silent
+        second decref."""
+        lc = RequestLifecycle(uid=0)
+        lc.transition(RequestState.CANCELLED, 0.0)
+        for s in RequestState:
+            with pytest.raises(LifecycleError, match="already finalized"):
+                lc.transition(s, 1.0)
+
+    def test_preemption_round_trip(self):
+        lc = RequestLifecycle(uid=0)
+        lc.transition(RequestState.PREFILL, 0.0)
+        lc.transition(RequestState.DECODE, 1.0)
+        lc.transition(RequestState.QUEUED, 2.0)   # preempted
+        lc.transition(RequestState.PREFILL, 3.0)  # re-admitted
+        lc.transition(RequestState.DECODE, 4.0)
+        lc.transition(RequestState.DONE, 5.0)
+        assert lc.terminal
+
+    def test_expiry_budgets(self):
+        lc = RequestLifecycle(uid=0, enqueued_t=0.0, deadline_s=10.0,
+                              ttft_budget_s=2.0)
+        assert lc.expired(1.0) is None
+        assert lc.expired(3.0) == "ttft"
+        lc.first_token_t = 1.5          # first token landed in time
+        assert lc.expired(3.0) is None
+        assert lc.expired(11.0) == "deadline"
+        lc.transition(RequestState.TIMED_OUT, 11.0)
+        assert lc.expired(12.0) is None  # terminal: budgets moot
+
+    def test_spec_ladder(self):
+        assert spec_ladder(4) == [4, 2, 1, 0]
+        assert spec_ladder(3) == [3, 1, 0]
+        assert spec_ladder(1) == [1, 0]
+        assert spec_ladder(0) == [0]
+
+    def test_serve_fault_sites_frozen(self):
+        assert set(SERVE_FAULT_SITES) == {
+            "pool_exhaustion", "nan_logit", "nan_logit_draft",
+            "append_failure", "artifact_mismatch"}

@@ -1,4 +1,5 @@
 """Checkpoint atomicity/retention + fault-tolerant loop (failure injection)."""
+import json
 import os
 
 import jax
@@ -7,6 +8,7 @@ import numpy as np
 import pytest
 
 from repro.checkpoint import store as ck
+from repro.core.policy import BitPolicy, LayerInfo, PolicyArtifact
 from repro.quant.tensor import quantize_tensor
 from repro.runtime import elastic
 from repro.runtime.loop import LoopConfig, TrainLoop
@@ -58,6 +60,108 @@ class TestStore:
         s.wait()
         got, _ = s.restore_latest(_tree(0))
         assert np.allclose(got["nested"]["m"], 2.0)
+
+
+def _artifact():
+    layers = (LayerInfo("w", (8, 8), macs=64),)
+    return PolicyArtifact.build(BitPolicy.uniform(layers, 4), backend="shift_add")
+
+
+class TestArtifactHardening:
+    """Corruption round-trips: every failure names the file + failed field."""
+
+    def _save(self, tmp_path):
+        art = _artifact()
+        d = ck.save(str(tmp_path), 3, _tree(), artifact=art)
+        return art, d
+
+    def test_clean_roundtrip(self, tmp_path):
+        art, _ = self._save(tmp_path)
+        back = ck.load_policy_artifact(str(tmp_path))
+        assert back.policy.bits == art.policy.bits
+        assert back.registry_hash == art.registry_hash
+
+    def test_step_without_artifact_is_none(self, tmp_path):
+        ck.save(str(tmp_path), 0, _tree())
+        assert ck.load_policy_artifact(str(tmp_path)) is None
+
+    def test_truncated_manifest_names_the_file(self, tmp_path):
+        _, d = self._save(tmp_path)
+        mpath = os.path.join(d, "MANIFEST.json")
+        with open(mpath) as f:
+            text = f.read()
+        with open(mpath, "w") as f:
+            f.write(text[: len(text) // 2])  # killed mid-write
+        with pytest.raises(ck.ArtifactError, match="MANIFEST.json.*truncated"):
+            ck.load_policy_artifact(str(tmp_path))
+
+    def test_missing_required_field_is_named(self, tmp_path):
+        _, d = self._save(tmp_path)
+        mpath = os.path.join(d, "MANIFEST.json")
+        with open(mpath) as f:
+            manifest = json.load(f)
+        del manifest["extra"][ck.ARTIFACT_KEY]["registry_hash"]
+        with open(mpath, "w") as f:
+            json.dump(manifest, f)
+        with pytest.raises(ck.ArtifactError, match="'registry_hash'") as ei:
+            ck.load_policy_artifact(str(tmp_path))
+        assert "MANIFEST.json" in str(ei.value)
+
+    def test_bad_version_field(self, tmp_path):
+        _, d = self._save(tmp_path)
+        mpath = os.path.join(d, "MANIFEST.json")
+        with open(mpath) as f:
+            manifest = json.load(f)
+        manifest["extra"][ck.ARTIFACT_KEY]["artifact_version"] = 999
+        with open(mpath, "w") as f:
+            json.dump(manifest, f)
+        with pytest.raises(ck.ArtifactError, match="invalid policy artifact"):
+            ck.load_policy_artifact(str(tmp_path))
+
+    def test_extra_wrong_type(self, tmp_path):
+        _, d = self._save(tmp_path)
+        mpath = os.path.join(d, "MANIFEST.json")
+        with open(mpath) as f:
+            manifest = json.load(f)
+        manifest["extra"] = ["not", "a", "dict"]
+        with open(mpath, "w") as f:
+            json.dump(manifest, f)
+        with pytest.raises(ck.ArtifactError, match="expected an object"):
+            ck.load_policy_artifact(str(tmp_path))
+
+    def test_sidecar_fallback_when_manifest_lost_the_key(self, tmp_path):
+        """Hand-edited manifest without the embedded copy: the sidecar wins."""
+        art, d = self._save(tmp_path)
+        mpath = os.path.join(d, "MANIFEST.json")
+        with open(mpath) as f:
+            manifest = json.load(f)
+        del manifest["extra"][ck.ARTIFACT_KEY]
+        with open(mpath, "w") as f:
+            json.dump(manifest, f)
+        back = ck.load_policy_artifact(str(tmp_path))
+        assert back is not None and back.policy.bits == art.policy.bits
+
+    def test_corrupt_sidecar_names_the_sidecar(self, tmp_path):
+        _, d = self._save(tmp_path)
+        mpath = os.path.join(d, "MANIFEST.json")
+        with open(mpath) as f:
+            manifest = json.load(f)
+        del manifest["extra"][ck.ARTIFACT_KEY]
+        with open(mpath, "w") as f:
+            json.dump(manifest, f)
+        sidecar = os.path.join(d, ck.ARTIFACT_FILE)
+        with open(sidecar) as f:
+            text = f.read()
+        with open(sidecar, "w") as f:
+            f.write(text[: len(text) // 3])
+        with pytest.raises(ck.ArtifactError, match="policy_artifact.json"):
+            ck.load_policy_artifact(str(tmp_path))
+
+    def test_artifact_error_is_exported(self):
+        import repro.checkpoint as ckpkg
+
+        assert ckpkg.ArtifactError is ck.ArtifactError
+        assert issubclass(ck.ArtifactError, RuntimeError)
 
 
 def _counting_step(state, batch):

@@ -268,8 +268,8 @@ class TestEngineQuantizedState:
         tokens = jnp.zeros((2, 1), jnp.int32)
         pos = jnp.zeros((2,), jnp.int32)
         lowered = eng._decode.lower(eng.params, eng.state, tokens, pos,
-                                    eng._key, eng.temperature, eng.top_k,
-                                    eng.top_p)
+                                    eng._key, jnp.zeros((2,), jnp.float32),
+                                    eng.temperature, eng.top_k, eng.top_p)
         txt = lowered.as_text()
         assert "tf.aliasing_output" in txt or "jax.buffer_donor" in txt
 

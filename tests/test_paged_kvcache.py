@@ -77,6 +77,89 @@ class TestBlockPool:
         assert pool.alloc() == a  # freed block is immediately reusable
 
 
+class TestBlockPoolProperty:
+    """Randomized allocator traffic checked against a shadow refcount model:
+    any interleaving of admit (alloc), CoW share (incref), free/preempt
+    release (decref), and growth reservations conserves blocks — no leaks,
+    no double frees, reservations never exceed the free list."""
+
+    N_BLOCKS = 13
+
+    def _check(self, pool, shadow):
+        assert pool.allocated + pool.free_count == self.N_BLOCKS
+        assert pool.allocated == len(shadow)
+        assert pool.reserved <= pool.free_count
+        assert pg.TRASH_BLOCK not in shadow
+        for bid, n in shadow.items():
+            assert pool.refcount(bid) == n
+
+    @pytest.mark.parametrize("seed", range(8))
+    def test_random_traffic_conserves_blocks(self, seed):
+        import numpy as np
+
+        rng = np.random.default_rng(seed)
+        pool = BlockPool(self.N_BLOCKS)
+        shadow = {}  # bid -> refcount over live blocks only
+        for _ in range(400):
+            op = int(rng.integers(0, 5))
+            if op == 0 and pool.available > 0:    # admit: fresh block
+                bid = pool.alloc()
+                assert bid not in shadow and bid != pg.TRASH_BLOCK
+                shadow[bid] = 1
+            elif op == 1 and shadow:              # shared-prefix map (CoW)
+                bid = int(rng.choice(sorted(shadow)))
+                pool.incref(bid)
+                shadow[bid] += 1
+            elif op == 2 and shadow:              # free / preempt release
+                bid = int(rng.choice(sorted(shadow)))
+                pool.decref(bid)
+                shadow[bid] -= 1
+                if shadow[bid] == 0:
+                    del shadow[bid]
+            elif op == 3 and pool.available > 0:  # reserve growth headroom
+                pool.reserve(int(rng.integers(1, pool.available + 1)))
+            elif op == 4 and pool.reserved > 0:   # release headroom
+                pool.unreserve(int(rng.integers(1, pool.reserved + 1)))
+            self._check(pool, shadow)
+        # drain every outstanding reference: the pool must return to full
+        for bid, n in list(shadow.items()):
+            for _ in range(n):
+                pool.decref(bid)
+        pool.unreserve(pool.reserved)
+        assert pool.allocated == 0 and pool.free_count == self.N_BLOCKS
+        with pytest.raises(AssertionError, match="double free"):
+            pool.decref(1)
+
+    def test_engine_random_workload_under_invariant_checker(self, dense_setup):
+        """Randomized admit/cancel/priority traffic through the paged engine
+        with the debug invariant checker on every decode step: host block
+        tables, pool refcounts, and growth reservations stay consistent, and
+        the pool drains clean."""
+        import numpy as np
+
+        cfg, _, sp = dense_setup
+        rng = np.random.default_rng(0xC0FFEE)
+        reqs = [Request(uid=i,
+                        prompt=[int(x) for x in
+                                rng.integers(1, 500, int(rng.integers(2, 24)))],
+                        max_new_tokens=4,
+                        priority=int(rng.integers(0, 3)))
+                for i in range(6)]
+        eng = _engine(cfg, sp, paged=True, pool_blocks=8,
+                      debug_invariants=True)
+
+        def hook(engine, step):
+            if step == 1:
+                engine.cancel(3)  # mid-flight cancellation in the mix
+
+        out = eng.run(reqs, step_hook=hook)
+        assert set(out) == {r.uid for r in reqs}
+        assert eng.pool.allocated == 0 and eng.pool.reserved == 0
+        eng.check_invariants()
+        assert all(lc.state.name in ("DONE", "CANCELLED")
+                   for lc in eng.lifecycles.values())
+
+
 # ---------------------------------------------------------------------------
 # layer geometry
 # ---------------------------------------------------------------------------

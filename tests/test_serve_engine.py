@@ -51,7 +51,7 @@ def test_slot_reuse_and_stats(dense_setup):
     eng = ServeEngine(cfg, sp, max_slots=2, max_seq=64)
     outs = eng.generate([[1, 2]] * 5, max_new_tokens=3)
     assert len(outs) == 5 and all(len(o) == 3 for o in outs)
-    assert eng.stats["completed"] == 5
+    assert eng.stats()["completed"] == 5
     # identical prompts under greedy decoding produce identical outputs
     assert all(o == outs[0] for o in outs)
 
@@ -94,7 +94,7 @@ def test_eos_inside_accepted_burst_stops_that_step(dense_setup):
         out = eng.run([Request(uid=0, prompt=[5, 6, 7, 8], max_new_tokens=8,
                                eos_id=eos)])
         assert out[0] == ref[: ref.index(eos) + 1]
-        assert eng.stats["completed"] == 1
+        assert eng.stats()["completed"] == 1
         assert all(s.free for s in eng.slots)
         if paged:  # blocks released the step eos was accepted
             assert eng.pool.allocated == 0 and eng.pool.reserved == 0
@@ -160,6 +160,7 @@ def test_decode_step_donates_state(dense_setup):
     tokens = jnp.zeros((2, 1), jnp.int32)
     pos = jnp.zeros((2,), jnp.int32)
     lowered = eng._decode.lower(eng.params, eng.state, tokens, pos, eng._key,
+                                jnp.zeros((2,), jnp.float32),
                                 eng.temperature, eng.top_k, eng.top_p)
     txt = lowered.as_text()
     # donation marks the state params as aliased/donated in the lowered HLO
