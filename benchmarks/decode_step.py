@@ -1,0 +1,141 @@
+"""Fused decode-step benchmark -> BENCH_decode_step.json (repo root).
+
+Separates the two costs every serving tokens/s number conflates:
+
+  * **kernel time** — the fused per-layer decode step itself
+    (``quant_kv_decode_step``: dequantize K/V, attend, append the new
+    token, requantize the touched block in ONE dispatch), timed jitted on
+    synthetic buffers at exactly the engine's cache geometry via the
+    autotuner's harness, for both the dense and the paged containers;
+  * **engine time** — a real ``ServeEngine`` decode step (sampling, the
+    lifecycle loop, host transfers, non-attention layers), measured on a
+    pure-decode workload (1-token prompts, so prefill is negligible).
+
+The gap between ``n_layers x kernel`` and the engine step is the overhead
+the serve loop adds on top of the state math — the number to watch when
+optimizing either side.  Timings use the autotuner's winning layout, so
+this file also records what ``PolicyArtifact`` v5 would replay here.
+
+Registered as the "decode_step" section of benchmarks/run.py.
+
+    PYTHONPATH=src python -m benchmarks.decode_step
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+
+from repro.configs import gemma_2b
+from repro.core.policy import BitPolicy
+from repro.kernels import autotune
+from repro.kernels.quant_kv import ops as kv_ops
+from repro.kvcache import kv_entry_names
+from repro.models import registry
+from repro.quant import apply as qapply
+from repro.serve.engine import ServeEngine
+
+OUT_PATH = os.path.join(os.path.dirname(__file__), "..",
+                        "BENCH_decode_step.json")
+
+#: same serving cell as benchmarks/kvcache.py, pure-decode traffic
+BENCH = dict(max_slots=8, max_seq=128, prefill_pad=16, bits=4, state_bits=4,
+             max_new_tokens=48, repeats=3)
+
+
+def _build(seed: int = 0):
+    cfg = gemma_2b.CONFIG.reduced()
+    api = registry.get_api(cfg)
+    params = api.init(cfg, jax.random.key(seed))
+    sp = api.unstack(params, cfg)
+    policy = BitPolicy.uniform(qapply.layer_specs(params, cfg), BENCH["bits"])
+    return cfg, qapply.quantize_for_serve(sp, policy, cfg)
+
+
+def _engine_step_s(eng) -> dict:
+    """Seconds per decode step on a pure-decode workload (best of N)."""
+    prompts = [[3 + i] for i in range(BENCH["max_slots"])]
+    eng.generate(prompts, max_new_tokens=BENCH["max_new_tokens"])  # warmup
+    best = None
+    for _ in range(BENCH["repeats"]):
+        steps0 = eng.stats()["decode_steps"]
+        t0 = time.perf_counter()
+        outs = eng.generate(prompts, max_new_tokens=BENCH["max_new_tokens"])
+        dt = time.perf_counter() - t0
+        steps = eng.stats()["decode_steps"] - steps0
+        n_tokens = sum(len(o) for o in outs)
+        rec = {"wall_s": round(dt, 4), "decode_steps": steps,
+               "step_micros": round(dt / steps * 1e6, 2),
+               "tokens_per_s": round(n_tokens / dt, 2)}
+        if best is None or rec["step_micros"] < best["step_micros"]:
+            best = rec
+    return best
+
+
+def _kernel_micros(cfg, impl: str, *, paged: bool) -> dict:
+    """Autotuned fused decode-step time for the deployed geometry."""
+    blocks = BENCH["max_seq"] // 16  # DEFAULT_BLOCK cache geometry
+    family = "decode_step_paged" if paged else "decode_step"
+    key = autotune.KernelKey(
+        family=family, k_bits=BENCH["state_bits"],
+        v_bits=BENCH["state_bits"], heads=cfg.n_kv_heads,
+        head_dim=cfg.resolved_head_dim, block=16, impl=impl)
+    entry = autotune.autotune_key(key, batch=BENCH["max_slots"],
+                                  blocks=blocks, repeats=20)
+    return entry
+
+
+def run(fast: bool = True) -> dict:
+    del fast  # one CI-sized cell
+    cfg, qp = _build()
+    impl = kv_ops.resolve_impl("auto")
+    eng = ServeEngine(cfg, qp, max_slots=BENCH["max_slots"],
+                      max_seq=BENCH["max_seq"],
+                      prefill_pad=BENCH["prefill_pad"], qimpl="auto",
+                      state_bits=BENCH["state_bits"])
+    step = _engine_step_s(eng)
+
+    n_layers = len(kv_entry_names(cfg))
+    dense = _kernel_micros(cfg, impl, paged=False)
+    paged = _kernel_micros(cfg, impl, paged=True)
+    kernel_total = dense["micros"] * n_layers
+    overhead = step["step_micros"] - kernel_total
+    doc = {
+        "config": dict(BENCH, arch="gemma-2b.reduced", qimpl=impl,
+                       backend=jax.default_backend(), kv_layers=n_layers),
+        "kernel": {
+            "dense": dense,
+            "paged": paged,
+            "dense_total_micros": round(kernel_total, 2),
+        },
+        "engine": step,
+        "overhead": {
+            # engine step minus the n_layers dense fused kernels it contains:
+            # sampling, embedding/MLP/logits, the lifecycle loop, host sync
+            "micros": round(overhead, 2),
+            "fraction_of_step": round(overhead / step["step_micros"], 3),
+        },
+    }
+    with open(OUT_PATH, "w") as f:
+        json.dump(doc, f, indent=1)
+    print(f"fused kernel [{impl}]: dense {dense['micros']}us "
+          f"(cfg {dense['config']}), paged {paged['micros']}us "
+          f"(cfg {paged['config']})")
+    print(f"engine step: {step['step_micros']}us "
+          f"({step['tokens_per_s']} tok/s); kernels {kernel_total:.0f}us "
+          f"across {n_layers} layers -> overhead {overhead:.0f}us "
+          f"({doc['overhead']['fraction_of_step']:.0%} of the step)")
+    return doc
+
+
+def main(argv=None) -> int:
+    argparse.ArgumentParser(description=__doc__).parse_args(argv)
+    run()
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -35,6 +35,7 @@ from repro.core.policy import BitPolicy, Budget
 from repro.cost import ShiftAddCostModel
 from repro.kvcache.env import KVQuantEnv
 from repro.launch.search import state_controller_config
+from repro.kernels.quant_kv import ops as kv_ops
 from repro.models import registry
 from repro.quant import apply as qapply
 from repro.serve.engine import ServeEngine
@@ -116,8 +117,11 @@ def run(fast: bool = True) -> dict:
     prompts = _prompts(BENCH["n_requests"])
 
     state_policy, fp_bytes = _search_state_policy(cfg, qp)
+    # request "auto" and stamp what actually dispatched: the recorded ratio
+    # is meaningless without knowing which impl (xla fallback vs pallas)
+    # produced it
     kw = dict(max_slots=BENCH["max_slots"], max_seq=BENCH["max_seq"],
-              prefill_pad=BENCH["prefill_pad"], qimpl="xla")
+              prefill_pad=BENCH["prefill_pad"], qimpl="auto")
     eng_fp = ServeEngine(cfg, qp, **kw)
     eng_q = ServeEngine(cfg, qp, state_bits=state_policy, **kw)
 
@@ -127,7 +131,8 @@ def run(fast: bool = True) -> dict:
     hist = dict(Counter(state_policy.bits.values()))
 
     doc = {
-        "config": dict(BENCH, arch="gemma-2b.reduced", qimpl="xla",
+        "config": dict(BENCH, arch="gemma-2b.reduced",
+                       qimpl=kv_ops.resolve_impl(kw["qimpl"]),
                        backend=jax.default_backend()),
         "state_bytes": {
             "fp32": fp_bytes,

@@ -29,6 +29,7 @@ import jax
 
 from repro.configs import gemma_2b
 from repro.core.policy import BitPolicy
+from repro.kernels.quant_kv import ops as kv_ops
 from repro.kvcache import pool_blocks_for_budget, resolve_state_bits
 from repro.models import registry
 from repro.quant import apply as qapply
@@ -79,8 +80,9 @@ def run(fast: bool = True) -> dict:
     del fast  # one CI-sized cell
     cfg, qp = _build()
     prompts = _prompts()
+    # "auto" + stamp the dispatched impl (see benchmarks/kvcache.py)
     kw = dict(max_slots=BENCH["max_slots"], max_seq=BENCH["max_seq"],
-              prefill_pad=BENCH["prefill_pad"], qimpl="xla",
+              prefill_pad=BENCH["prefill_pad"], qimpl="auto",
               state_bits=BENCH["state_bits"])
     dense = ServeEngine(cfg, qp, **kw)
 
@@ -96,7 +98,8 @@ def run(fast: bool = True) -> dict:
     peak_bytes = paged.allocated_state_bytes(peak=True)
     pool = paged.pool
     doc = {
-        "config": dict(BENCH, arch="gemma-2b.reduced", qimpl="xla",
+        "config": dict(BENCH, arch="gemma-2b.reduced",
+                       qimpl=kv_ops.resolve_impl(kw["qimpl"]),
                        prompt_lens=list(PROMPT_LENS),
                        backend=jax.default_backend()),
         "state_bytes": {

@@ -19,10 +19,10 @@ import os
 import time
 import traceback
 
-from . import (allocator, decode_throughput, degradation, fig3_trajectory,
-               fig5_hw, kvcache, kvcache_paged, roofline, speculative,
-               table1_sigma_kl, table2_phases, table3_sota, table4_hparam,
-               table5_bops, table6_mac)
+from . import (allocator, decode_step, decode_throughput, degradation,
+               fig3_trajectory, fig5_hw, kvcache, kvcache_paged, roofline,
+               speculative, table1_sigma_kl, table2_phases, table3_sota,
+               table4_hparam, table5_bops, table6_mac)
 
 SECTIONS = {
     "decode": ("Decode throughput (BENCH_decode.json)", decode_throughput.run),
@@ -31,6 +31,8 @@ SECTIONS = {
     "kvcache_paged": ("Paged KV cache: allocated vs dense state bytes, pool "
                       "utilization (BENCH_kvcache_paged.json)",
                       kvcache_paged.run),
+    "decode_step": ("Fused decode step: kernel time vs serve-loop overhead "
+                    "(BENCH_decode_step.json)", decode_step.run),
     "speculative": ("Self-speculative decoding: acceptance + tokens/s vs "
                     "non-speculative (BENCH_speculative.json)",
                     speculative.run),
@@ -60,7 +62,10 @@ HEADLINES = {
     "BENCH_kvcache.json": [("state_bytes.reduction_x", "higher"),
                            ("tokens_per_s_ratio", "higher")],
     "BENCH_kvcache_paged.json": [("state_bytes.reduction_vs_dense_x", "higher"),
-                                 ("pool.utilization", "higher")],
+                                 ("pool.utilization", "higher"),
+                                 ("tokens_per_s_ratio", "higher")],
+    "BENCH_decode_step.json": [("engine.tokens_per_s", "higher"),
+                               ("kernel.dense.micros", "lower")],
     "BENCH_speculative.json": [("acceptance.accepted_per_verify_step", "higher"),
                                ("steps_ratio", "higher"),
                                ("tokens_per_s_ratio", "higher")],

@@ -1,0 +1,240 @@
+"""Offline autotuner for the fused decode-step kernels.
+
+The fused decode step (``kernels/quant_kv/ops.quant_kv_decode_step``) admits
+several data-movement layouts that are *bitwise equivalent* — they produce
+identical packed levels, scales, and attention outputs — but differ in
+dispatch count and memory traffic, and which one wins depends on
+``(k_bits, v_bits, heads, head_dim, block, impl)`` and on the host backend.
+SigmaQuant's pitch is "search once, deploy without re-search"; this module
+applies the same treatment to the kernel layer:
+
+* :class:`KernelKey` names a tuning point.
+* :func:`enumerate_candidates` lists the bitwise-safe layout knobs for it.
+* :func:`autotune_key` times each candidate on synthetic buffers of the
+  keyed geometry and returns the winner (+ timings, for the artifact).
+* :func:`autotune_state` sweeps every distinct key a deployed state policy
+  induces and returns a config table suitable for ``PolicyArtifact`` v5's
+  ``kernel_configs`` field.
+* :func:`set_active_configs` installs a table process-wide; the op
+  dispatcher consults :func:`lookup` at trace time, so tuned configs flow
+  into jitted serve/decode programs without widening any jit signature.
+
+Only layout knobs that cannot change numerics are enumerated (placement of
+the requantized block via full-width select vs. per-slot dynamic-update
+slices; attention reading the re-packed cache vs. substituting the
+pre-pack integer levels).  The parity harness pins every candidate to the
+sequential append→attend composition, so a stale or mis-keyed config can
+degrade speed but never output tokens.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+_FAMILIES = ("decode_step", "decode_step_paged")
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelKey:
+    """Identity of one fused decode-step tuning point."""
+
+    family: str          # "decode_step" | "decode_step_paged"
+    k_bits: int
+    v_bits: int
+    heads: int           # KV heads
+    head_dim: int
+    block: int           # quantization block (tokens per scale group)
+    impl: str            # resolved impl the config was timed on
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "KernelKey":
+        return cls(family=str(d["family"]), k_bits=int(d["k_bits"]),
+                   v_bits=int(d["v_bits"]), heads=int(d["heads"]),
+                   head_dim=int(d["head_dim"]), block=int(d["block"]),
+                   impl=str(d["impl"]))
+
+    def __post_init__(self):
+        if self.family not in _FAMILIES:
+            raise ValueError(f"unknown kernel family {self.family!r}")
+
+
+def resolved_backend_impl() -> str:
+    """The impl ``impl="auto"`` resolves to on this host."""
+    from repro.kernels.quant_kv import ops as kv_ops
+    return kv_ops.resolve_impl("auto")
+
+
+def enumerate_candidates(key: KernelKey) -> list[dict]:
+    """Bitwise-safe layout candidates for one tuning point.
+
+    Knobs (XLA fallback path):
+      ``place``  — how the requantized touched block re-enters the packed
+                   cache: ``"select"`` (full-width where over block rows,
+                   the historical layout) or ``"dus"`` (per-slot dynamic
+                   update slice).  Identical bytes either way.
+      ``attend`` — where attention reads the post-append cache from:
+                   ``"reunpack"`` (unpack the updated packed buffer) or
+                   ``"substitute"`` (unpack the *old* buffer and splice in
+                   the pre-pack integer levels, skipping the pack→unpack
+                   round trip on the touched block).  pack/unpack is exact
+                   on the clipped signed grid, so levels are identical.
+
+    The Pallas kernel builds the updated view in registers/VMEM, so its
+    only knob today is the default layout; it still gets a recorded entry
+    so deploys replay a config instead of re-deriving one.
+    """
+    if key.impl in ("pallas", "interpret"):
+        return [{"place": "dus", "attend": "substitute"}]
+    if key.family == "decode_step_paged":
+        # Paged placement is a pool scatter either way; only the attend
+        # source differs.
+        return [{"place": "scatter", "attend": "reunpack"},
+                {"place": "scatter", "attend": "substitute"}]
+    return [{"place": p, "attend": a}
+            for p in ("select", "dus")
+            for a in ("reunpack", "substitute")]
+
+
+def _synthetic_inputs(key: KernelKey, *, batch: int, blocks: int):
+    """Deterministic synthetic buffers matching the keyed geometry."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kvcache import cache as kvcache
+    from repro.kvcache import paged as kvpaged
+
+    b, h, hd, block = batch, key.heads, key.head_dim, key.block
+    s = block * blocks
+    keys = jax.random.split(jax.random.key(0), 4)
+    q = jax.random.normal(keys[0], (b, 4 * h, hd), jnp.float32)
+    k_new = jax.random.normal(keys[1], (b, 1, h, hd), jnp.float32)
+    v_new = jax.random.normal(keys[2], (b, 1, h, hd), jnp.float32)
+    pos = jnp.full((b,), s // 2 + 1, jnp.int32)
+    kv_valid = jnp.arange(s)[None, :] <= pos[:, None]
+    if key.family == "decode_step_paged":
+        layer = kvpaged.init_paged_layer(
+            b * blocks, b, s, h, hd, k_bits=key.k_bits,
+            v_bits=key.v_bits, block=block)
+        tbl = jnp.arange(1, b * blocks + 1, dtype=jnp.int32).reshape(b, blocks)
+        layer = kvpaged.with_table(layer, tbl)
+    else:
+        layer = kvcache.init_kv_layer(
+            b, s, h, hd, k_bits=key.k_bits, v_bits=key.v_bits, block=block)
+    # Warm the cache with real contents so dequant work is representative.
+    seed = jax.random.normal(keys[3], (b, 1, h, hd), jnp.float32)
+    from repro.kernels.quant_kv import ops as kv_ops
+    layer = kv_ops.quant_kv_append(layer, pos - 1, seed, seed, impl="xla")
+    return q, layer, pos, k_new, v_new, kv_valid
+
+
+def autotune_key(key: KernelKey, *, batch: int = 8, blocks: int = 8,
+                 repeats: int = 20) -> dict:
+    """Time every candidate for ``key``; return the winner + evidence.
+
+    Returns ``{"key": ..., "config": ..., "micros": ..., "candidates": n}``
+    — the shape stored per-entry in ``PolicyArtifact.kernel_configs``.
+    """
+    import jax
+
+    from repro.kernels.quant_kv import ops as kv_ops
+
+    q, layer, pos, k_new, v_new, kv_valid = _synthetic_inputs(
+        key, batch=batch, blocks=blocks)
+    best_cfg, best_t = None, float("inf")
+    for cfg in enumerate_candidates(key):
+        fn = jax.jit(lambda lyr, cfg=cfg: kv_ops.quant_kv_decode_step(
+            q, lyr, pos, k_new, v_new, kv_valid, impl=key.impl, config=cfg))
+        out, _ = fn(layer)
+        jax.block_until_ready(out)
+        t0 = time.perf_counter()
+        for _ in range(repeats):
+            out, _ = fn(layer)
+        jax.block_until_ready(out)
+        t = (time.perf_counter() - t0) / repeats
+        if t < best_t:
+            best_cfg, best_t = cfg, t
+    return {"key": key.to_dict(), "config": best_cfg,
+            "micros": round(best_t * 1e6, 2),
+            "candidates": len(enumerate_candidates(key))}
+
+
+def keys_for_state(state_bits, heads: int, head_dim: int, block: int,
+                   *, paged: bool, impl: str | None = None) -> list[KernelKey]:
+    """Distinct tuning points a deployed state policy induces."""
+    impl = impl or resolved_backend_impl()
+    family = "decode_step_paged" if paged else "decode_step"
+    seen, out = set(), []
+    for kb, vb in state_bits:
+        key = KernelKey(family=family, k_bits=int(kb), v_bits=int(vb),
+                        heads=heads, head_dim=head_dim, block=block,
+                        impl=impl)
+        if key not in seen:
+            seen.add(key)
+            out.append(key)
+    return out
+
+
+def autotune_state(state_bits, heads: int, head_dim: int, block: int,
+                   *, paged: bool, impl: str | None = None,
+                   repeats: int = 20) -> list[dict]:
+    """Tune every distinct key for a state policy → artifact-ready list."""
+    return [autotune_key(k, repeats=repeats)
+            for k in keys_for_state(state_bits, heads, head_dim, block,
+                                    paged=paged, impl=impl)]
+
+
+# -- active-config registry ---------------------------------------------------
+# Installed at deploy time (ServeEngine) or after a search; consulted by the
+# fused-op dispatcher at *trace* time.  Module-level state keeps tuned
+# configs out of jit signatures (dicts are unhashable there); callers that
+# retrace after `set_active_configs` pick up the new table, and ServeEngine
+# constructs its jitted programs after installing, so staleness is bounded
+# to one engine instance.
+
+_ACTIVE: dict[KernelKey, dict] = {}
+
+
+def set_active_configs(entries) -> None:
+    """Install artifact ``kernel_configs`` entries (or ``None`` to clear)."""
+    _ACTIVE.clear()
+    for e in entries or ():
+        _ACTIVE[KernelKey.from_dict(e["key"])] = dict(e["config"])
+
+
+def active_configs() -> dict[KernelKey, dict]:
+    return dict(_ACTIVE)
+
+
+def lookup(family: str, k_bits: int, v_bits: int, heads: int, head_dim: int,
+           block: int, impl: str) -> dict | None:
+    return _ACTIVE.get(KernelKey(family=family, k_bits=k_bits, v_bits=v_bits,
+                                 heads=heads, head_dim=head_dim, block=block,
+                                 impl=impl))
+
+
+def validate_configs(entries, *, heads: int, head_dim: int, block: int,
+                     bit_pairs) -> None:
+    """Refuse artifact configs whose geometry doesn't match the deployment.
+
+    Raises ``ValueError`` naming the first mismatch; the engine wraps it in
+    ``ArtifactError``.  Keys for bit pairs the deployed policy doesn't use
+    are tolerated (a policy edit shouldn't invalidate the whole table), but
+    a wrong ``heads``/``head_dim``/``block`` means the table was tuned for a
+    different model/cache geometry and must not be replayed.
+    """
+    for e in entries or ():
+        key = KernelKey.from_dict(e["key"])
+        if (key.heads, key.head_dim, key.block) != (heads, head_dim, block):
+            raise ValueError(
+                f"kernel config {key} was tuned for geometry "
+                f"(heads={key.heads}, head_dim={key.head_dim}, "
+                f"block={key.block}) but the deployment has "
+                f"(heads={heads}, head_dim={head_dim}, block={block})")
+        if cfg_missing := [k for k in ("place", "attend")
+                           if k not in e.get("config", {})]:
+            raise ValueError(
+                f"kernel config {key} is missing knobs {cfg_missing}")
+    del bit_pairs  # informational only; extra keys are tolerated

@@ -1,1 +1,2 @@
-from .ops import quant_kv_append, quant_kv_attention  # noqa: F401
+from .ops import (quant_kv_append, quant_kv_attention,  # noqa: F401
+                  quant_kv_decode_step, resolve_impl)

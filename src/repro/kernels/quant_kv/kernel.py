@@ -294,6 +294,438 @@ def quant_kv_attention_paged_pallas(
       mask)
 
 
+# ---------------------------------------------------------------------------
+# fused decode step: dequant + append/requant + attend in ONE kernel
+# ---------------------------------------------------------------------------
+
+
+def _requant_row(p_full, s_full, new, off, bidx, *, bits: int, hd: int,
+                 block: int):
+    """Shared fused-step requant core: insert ``new`` into the touched block.
+
+    ``p_full``: (S, hd/lanes) packed; ``s_full``: (nb, 1) scales; ``new``:
+    (hd,) fp; ``off``/``bidx``: scalars.  Returns the requantized packed
+    block (block, hd/lanes), its (1, 1) scale, and the *updated* full
+    (S, ·)/(nb, 1) views — the exact bytes the sequential append + scatter
+    would have produced, built in VMEM so attention reads them with zero
+    extra HBM traffic.  The math is `_append_kernel`'s, specialized to the
+    one head this program owns.
+    """
+    blk = jax.lax.dynamic_slice_in_dim(p_full, bidx * block, block, axis=0)
+    sc = jax.lax.dynamic_slice_in_dim(s_full, bidx, 1, axis=0)    # (1, 1)
+    lev = _unpack_block(blk[None], bits, hd)                      # (1, block, hd)
+    fp = lev.astype(jnp.float32) * sc[None]
+    idx = jax.lax.broadcasted_iota(jnp.int32, (1, block, 1), 1)
+    fp = jnp.where(idx < off, fp, 0.0)
+    fp = jnp.where(idx == off, new[None, None, :].astype(jnp.float32), fp)
+    q = float(2 ** (bits - 1) - 1)
+    amax = jnp.max(jnp.abs(fp), axis=(1, 2), keepdims=True)       # (1, 1, 1)
+    scn = jnp.maximum(amax, 1e-12) / q
+    levn = jnp.clip(jnp.round(fp / scn), -q, q).astype(jnp.int32)
+    pb = _pack_lanes(levn, bits)[0]                               # (block, hdp)
+    scn = scn[0]                                                  # (1, 1)
+    p_upd = jax.lax.dynamic_update_slice_in_dim(p_full, pb, bidx * block,
+                                                axis=0)
+    s_upd = jax.lax.dynamic_update_slice_in_dim(s_full, scn, bidx, axis=0)
+    return pb, scn, p_upd, s_upd
+
+
+def _fused_step_kernel(pos_ref, q_ref, kn_ref, vn_ref, kp_ref, ks_ref, vp_ref,
+                       vs_ref, mask_ref, out_ref, kblk_ref, ksc_ref, vblk_ref,
+                       vsc_ref, *, k_bits: int, v_bits: int, hd: int,
+                       block: int):
+    i = pl.program_id(0)
+    pos = pos_ref[i]
+    bidx = pos // block
+    off = pos % block
+    kb, ksn, kp_upd, ks_upd = _requant_row(kp_ref[0, 0], ks_ref[0, 0],
+                                           kn_ref[0, 0], off, bidx,
+                                           bits=k_bits, hd=hd, block=block)
+    vb, vsn, vp_upd, vs_upd = _requant_row(vp_ref[0, 0], vs_ref[0, 0],
+                                           vn_ref[0, 0], off, bidx,
+                                           bits=v_bits, hd=hd, block=block)
+    kblk_ref[0, 0] = kb
+    ksc_ref[0, 0] = ksn
+    vblk_ref[0, 0] = vb
+    vsc_ref[0, 0] = vsn
+    out_ref[0, 0] = _attn_math(q_ref[0, 0], kp_upd, ks_upd, vp_upd, vs_upd,
+                               mask_ref[...], k_bits=k_bits, v_bits=v_bits,
+                               hd=hd, block=block)
+
+
+@functools.partial(jax.jit, static_argnames=("k_bits", "v_bits", "hd", "block",
+                                             "interpret"))
+def quant_kv_decode_step_pallas(
+    pos: jax.Array,       # (B,) int32 per-slot write positions
+    q: jax.Array,         # (B, n_kv, g, hd) float
+    k_new: jax.Array,     # (B, n_kv, hd) float — the new token's K rows
+    v_new: jax.Array,
+    k_packed: jax.Array,  # (B, n_kv, S, hd/lanes_k) int8
+    k_scale: jax.Array,   # (B, n_kv, S/block, 1) f32
+    v_packed: jax.Array,
+    v_scale: jax.Array,
+    mask: jax.Array,      # (B, S) f32 additive (0 valid / -1e30 invalid)
+    *,
+    k_bits: int,
+    v_bits: int,
+    hd: int,
+    block: int,
+    interpret: bool = False,
+):
+    """ONE kernel per (slot, head): dequant + append/requant + attend.
+
+    The packed cache bytes cross HBM->VMEM exactly once per decode step;
+    the post-append view attention needs is built in VMEM by splicing the
+    requantized block into the just-DMA'd buffer.  Emits the attention
+    output plus the touched block + scale per side — the caller scatters
+    them back with the same ``ops.place_block`` the sequential path uses,
+    so the updated cache is bit-identical to append-then-attend.
+    """
+    b, n_kv, g, _ = q.shape
+    s = k_packed.shape[2]
+    nb = s // block
+    hk, hv = k_packed.shape[-1], v_packed.shape[-1]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, hd), lambda i, j, pos_r: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, hd), lambda i, j, pos_r: (i, j, 0)),
+            pl.BlockSpec((1, 1, hd), lambda i, j, pos_r: (i, j, 0)),
+            pl.BlockSpec((1, 1, s, hk), lambda i, j, pos_r: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, nb, 1), lambda i, j, pos_r: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, s, hv), lambda i, j, pos_r: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, nb, 1), lambda i, j, pos_r: (i, j, 0, 0)),
+            pl.BlockSpec((1, s), lambda i, j, pos_r: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, g, hd), lambda i, j, pos_r: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, block, hk), lambda i, j, pos_r: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, 1, 1), lambda i, j, pos_r: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, block, hv), lambda i, j, pos_r: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, 1, 1), lambda i, j, pos_r: (i, j, 0, 0)),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_fused_step_kernel, k_bits=k_bits, v_bits=v_bits,
+                          hd=hd, block=block),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((b, n_kv, g, hd), jnp.float32),
+            jax.ShapeDtypeStruct((b, n_kv, block, hk), jnp.int8),
+            jax.ShapeDtypeStruct((b, n_kv, 1, 1), jnp.float32),
+            jax.ShapeDtypeStruct((b, n_kv, block, hv), jnp.int8),
+            jax.ShapeDtypeStruct((b, n_kv, 1, 1), jnp.float32),
+        ],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel")),
+        interpret=interpret,
+    )(jnp.asarray(pos, jnp.int32), q, k_new, v_new, k_packed, k_scale,
+      v_packed, v_scale, mask)
+
+
+def _fused_step_paged_kernel(pos_ref, tbl_ref, q_ref, kn_ref, vn_ref, kp_ref,
+                             ks_ref, vp_ref, vs_ref, ktch_ref, kts_ref,
+                             vtch_ref, vts_ref, mask_ref, out_ref, kblk_ref,
+                             ksc_ref, vblk_ref, vsc_ref, kacc, ksacc, vacc,
+                             vsacc, *, k_bits: int, v_bits: int, hd: int,
+                             block: int):
+    i, b = pl.program_id(0), pl.program_id(2)
+    nb = pl.num_programs(2)
+    # gather phase — identical to _paged_attn_kernel: table-mapped pool
+    # blocks land in the dense-layout scratch, unmapped entries zero-fill.
+    mapped = tbl_ref[i, b] >= 0
+    kacc[pl.ds(b * block, block), :] = jnp.where(mapped, kp_ref[0, 0], jnp.int8(0))
+    vacc[pl.ds(b * block, block), :] = jnp.where(mapped, vp_ref[0, 0], jnp.int8(0))
+    ksacc[pl.ds(b, 1), :] = jnp.where(mapped, ks_ref[0, 0], 1e-12).reshape(1, 1)
+    vsacc[pl.ds(b, 1), :] = jnp.where(mapped, vs_ref[0, 0], 1e-12).reshape(1, 1)
+
+    @pl.when(b == nb - 1)
+    def _():
+        pos = pos_ref[i]
+        bidx = pos // block
+        off = pos % block
+        # The touched *physical* block was DMA'd separately (ktch/vtch), so
+        # idle slots requantize the real trash-block contents — exactly what
+        # the sequential paged append emits.  The attention view substitutes
+        # the update only where the slot's table actually maps the block
+        # (trash writes must stay invisible, as they are in the sequential
+        # gather over the post-scatter pool).
+        mapped_t = tbl_ref[i, bidx] >= 0
+
+        def side(tch, tsc, new, bits, blk_out, sc_out, acc, sacc):
+            lev = _unpack_block(tch[None], bits, hd)              # (1, block, hd)
+            fp = lev.astype(jnp.float32) * tsc[None]
+            idx = jax.lax.broadcasted_iota(jnp.int32, (1, block, 1), 1)
+            fp = jnp.where(idx < off, fp, 0.0)
+            fp = jnp.where(idx == off, new[None, None, :].astype(jnp.float32),
+                           fp)
+            qm = float(2 ** (bits - 1) - 1)
+            amax = jnp.max(jnp.abs(fp), axis=(1, 2), keepdims=True)
+            scn = jnp.maximum(amax, 1e-12) / qm
+            levn = jnp.clip(jnp.round(fp / scn), -qm, qm).astype(jnp.int32)
+            pb = _pack_lanes(levn, bits)[0]                       # (block, hdp)
+            scn = scn[0]                                          # (1, 1)
+            blk_out[0, 0] = pb
+            sc_out[0, 0] = scn
+            full = acc[...]
+            sfull = sacc[...]
+            p_upd = jax.lax.dynamic_update_slice_in_dim(full, pb, bidx * block,
+                                                        axis=0)
+            s_upd = jax.lax.dynamic_update_slice_in_dim(sfull, scn, bidx,
+                                                        axis=0)
+            return (jnp.where(mapped_t, p_upd, full),
+                    jnp.where(mapped_t, s_upd, sfull))
+
+        kf, ksf = side(ktch_ref[0, 0], kts_ref[0, 0], kn_ref[0, 0], k_bits,
+                       kblk_ref, ksc_ref, kacc, ksacc)
+        vf, vsf = side(vtch_ref[0, 0], vts_ref[0, 0], vn_ref[0, 0], v_bits,
+                       vblk_ref, vsc_ref, vacc, vsacc)
+        out_ref[0, 0] = _attn_math(q_ref[0, 0], kf, ksf, vf, vsf,
+                                   mask_ref[...], k_bits=k_bits,
+                                   v_bits=v_bits, hd=hd, block=block)
+
+
+@functools.partial(jax.jit, static_argnames=("k_bits", "v_bits", "hd", "block",
+                                             "interpret"))
+def quant_kv_decode_step_paged_pallas(
+    pos: jax.Array,       # (B,) int32 per-slot write positions
+    table: jax.Array,     # (B, S/block) int32 block table; -1 = unmapped
+    q: jax.Array,         # (B, n_kv, g, hd) float
+    k_new: jax.Array,     # (B, n_kv, hd) float
+    v_new: jax.Array,
+    k_packed: jax.Array,  # (P, n_kv, block, hd/lanes_k) int8 — the pool
+    k_scale: jax.Array,   # (P, n_kv, 1, 1) f32
+    v_packed: jax.Array,
+    v_scale: jax.Array,
+    mask: jax.Array,      # (B, S) f32 additive
+    *,
+    k_bits: int,
+    v_bits: int,
+    hd: int,
+    block: int,
+    interpret: bool = False,
+):
+    """Paged fused decode step: gather + append/requant + attend, one kernel.
+
+    The scalar-prefetched (pos, table) pair drives every DMA: the grid's
+    inner axis gathers the slot's mapped pool blocks into dense-layout
+    scratch (as the paged attention kernel does), plus ONE extra block — the
+    physical block the append touches — which is requantized with the new
+    row and spliced into the gathered view before the shared attention math
+    runs.  Emits out + per-side (block, scale); the caller scatters them
+    with ``ops.place_paged_block``, identical to the sequential path.
+
+    Assumes the engine's CoW exclusivity (a live slot's touched block is
+    mapped by that slot alone) — the same precondition the sequential
+    append+attend pair already relies on for step-order independence.
+    """
+    b, n_kv, g, _ = q.shape
+    nb = table.shape[1]
+    s = nb * block
+    hk, hv = k_packed.shape[-1], v_packed.shape[-1]
+    phys = lambda i, blk, tbl: jnp.maximum(tbl[i, blk], 0)
+    physt = lambda i, pos_r, tbl: jnp.maximum(tbl[i, pos_r[i] // block], 0)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, n_kv, nb),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, hd), lambda i, j, blk, p_, t_: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, hd), lambda i, j, blk, p_, t_: (i, j, 0)),
+            pl.BlockSpec((1, 1, hd), lambda i, j, blk, p_, t_: (i, j, 0)),
+            pl.BlockSpec((1, 1, block, hk),
+                         lambda i, j, blk, p_, t_: (phys(i, blk, t_), j, 0, 0)),
+            pl.BlockSpec((1, 1, 1, 1),
+                         lambda i, j, blk, p_, t_: (phys(i, blk, t_), j, 0, 0)),
+            pl.BlockSpec((1, 1, block, hv),
+                         lambda i, j, blk, p_, t_: (phys(i, blk, t_), j, 0, 0)),
+            pl.BlockSpec((1, 1, 1, 1),
+                         lambda i, j, blk, p_, t_: (phys(i, blk, t_), j, 0, 0)),
+            pl.BlockSpec((1, 1, block, hk),
+                         lambda i, j, blk, p_, t_: (physt(i, p_, t_), j, 0, 0)),
+            pl.BlockSpec((1, 1, 1, 1),
+                         lambda i, j, blk, p_, t_: (physt(i, p_, t_), j, 0, 0)),
+            pl.BlockSpec((1, 1, block, hv),
+                         lambda i, j, blk, p_, t_: (physt(i, p_, t_), j, 0, 0)),
+            pl.BlockSpec((1, 1, 1, 1),
+                         lambda i, j, blk, p_, t_: (physt(i, p_, t_), j, 0, 0)),
+            pl.BlockSpec((1, s), lambda i, j, blk, p_, t_: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, g, hd), lambda i, j, blk, p_, t_: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, block, hk),
+                         lambda i, j, blk, p_, t_: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, 1, 1), lambda i, j, blk, p_, t_: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, block, hv),
+                         lambda i, j, blk, p_, t_: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, 1, 1), lambda i, j, blk, p_, t_: (i, j, 0, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((s, hk), jnp.int8), pltpu.VMEM((nb, 1), jnp.float32),
+            pltpu.VMEM((s, hv), jnp.int8), pltpu.VMEM((nb, 1), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_fused_step_paged_kernel, k_bits=k_bits,
+                          v_bits=v_bits, hd=hd, block=block),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((b, n_kv, g, hd), jnp.float32),
+            jax.ShapeDtypeStruct((b, n_kv, block, hk), jnp.int8),
+            jax.ShapeDtypeStruct((b, n_kv, 1, 1), jnp.float32),
+            jax.ShapeDtypeStruct((b, n_kv, block, hv), jnp.int8),
+            jax.ShapeDtypeStruct((b, n_kv, 1, 1), jnp.float32),
+        ],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(jnp.asarray(pos, jnp.int32), jnp.asarray(table, jnp.int32), q, k_new,
+      v_new, k_packed, k_scale, v_packed, v_scale,
+      # the pool buffers again: the touched-block specs (physt index map)
+      # DMA the append target separately from the gather stream
+      k_packed, k_scale, v_packed, v_scale, mask)
+
+
+def _rope_rows(x, cos, sin, hd: int):
+    """Rotate (rows, hd) by (1, hd/2) cos/sin — `models.layers.apply_rope`'s
+    math specialized to one position (the decode token)."""
+    x1 = x[:, :hd // 2]
+    x2 = x[:, hd // 2:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+def _fused_step_proj_kernel(pos_ref, x_ref, wq_ref, wqs_ref, wk_ref, wks_ref,
+                            wv_ref, wvs_ref, cos_ref, sin_ref, kp_ref, ks_ref,
+                            vp_ref, vs_ref, mask_ref, out_ref, kblk_ref,
+                            ksc_ref, vblk_ref, vsc_ref, *, w_bits: int,
+                            k_bits: int, v_bits: int, d: int, g: int, hd: int,
+                            block: int):
+    i = pl.program_id(0)
+    pos = pos_ref[i]
+    bidx = pos // block
+    off = pos % block
+    x = x_ref[...].astype(jnp.float32)                            # (1, d)
+
+    def proj(w_ref, ws_ref):
+        # quant_gemv's inner step at one K block: integer-level dot first,
+        # per-output-channel scale after the accumulation finishes.
+        lev = _unpack_block(w_ref[...], w_bits, d)                # (rows, d)
+        acc = jax.lax.dot_general(x, lev.astype(jnp.float32),
+                                  (((1,), (1,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+        return acc * ws_ref[...]                                  # (1, rows)
+
+    cos = cos_ref[...]                                            # (1, hd/2)
+    sin = sin_ref[...]
+    qrows = _rope_rows(proj(wq_ref, wqs_ref).reshape(g, hd), cos, sin, hd)
+    krow = _rope_rows(proj(wk_ref, wks_ref), cos, sin, hd)        # (1, hd)
+    vrow = proj(wv_ref, wvs_ref)                                  # (1, hd)
+    kb, ksn, kp_upd, ks_upd = _requant_row(kp_ref[0, 0], ks_ref[0, 0],
+                                           krow[0], off, bidx, bits=k_bits,
+                                           hd=hd, block=block)
+    vb, vsn, vp_upd, vs_upd = _requant_row(vp_ref[0, 0], vs_ref[0, 0],
+                                           vrow[0], off, bidx, bits=v_bits,
+                                           hd=hd, block=block)
+    kblk_ref[0, 0] = kb
+    ksc_ref[0, 0] = ksn
+    vblk_ref[0, 0] = vb
+    vsc_ref[0, 0] = vsn
+    out_ref[0, 0] = _attn_math(qrows, kp_upd, ks_upd, vp_upd, vs_upd,
+                               mask_ref[...], k_bits=k_bits, v_bits=v_bits,
+                               hd=hd, block=block)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "w_bits", "k_bits", "v_bits", "n_heads", "hd", "block", "interpret"))
+def quant_kv_decode_step_proj_pallas(
+    pos: jax.Array,       # (B,) int32 per-slot write positions
+    x: jax.Array,         # (B, d) float — post-norm hidden, one token/slot
+    w_packed: jax.Array,  # (N, d/lanes_w) int8 — fused wqkv, N = (nh+2*nkv)*hd
+    w_scale: jax.Array,   # (1, N) f32
+    cos: jax.Array,       # (B, hd/2) f32 — rope factors at pos
+    sin: jax.Array,
+    k_packed: jax.Array,  # (B, n_kv, S, hd/lanes_k) int8
+    k_scale: jax.Array,
+    v_packed: jax.Array,
+    v_scale: jax.Array,
+    mask: jax.Array,      # (B, S) f32 additive
+    *,
+    w_bits: int,
+    k_bits: int,
+    v_bits: int,
+    n_heads: int,
+    hd: int,
+    block: int,
+    interpret: bool = False,
+):
+    """Fused step with the Q/K/V projection pulled into the same dispatch.
+
+    Each (slot, kv-head) program DMAs only its slice of the fused ``wqkv``
+    buffer — the query group's ``g*hd`` rows plus one ``hd`` K row-block and
+    one V row-block, selected by BlockSpec row-block index — projects with
+    the gemv integer-dot + scale-after order, applies rope, and falls into
+    the same requant + attend body as the plain fused step.  Geometry gate
+    (ops.py): fused ``wqkv`` leaf, default rope, no qk-norm, single gemv
+    K-step (d <= 512).
+    """
+    b, d = x.shape
+    n_kv = k_packed.shape[1]
+    g = n_heads // n_kv
+    s = k_packed.shape[2]
+    nb = s // block
+    hk, hv = k_packed.shape[-1], v_packed.shape[-1]
+    dp = w_packed.shape[-1]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda i, j, pos_r: (i, 0)),
+            # wqkv rows: q group j = row-block j of g*hd rows; K head j and
+            # V head j = hd-row blocks at offsets n_heads + j / n_heads +
+            # n_kv + j (in hd-row units).
+            pl.BlockSpec((g * hd, dp), lambda i, j, pos_r: (j, 0)),
+            pl.BlockSpec((1, g * hd), lambda i, j, pos_r: (0, j)),
+            pl.BlockSpec((hd, dp), lambda i, j, pos_r: (n_heads + j, 0)),
+            pl.BlockSpec((1, hd), lambda i, j, pos_r: (0, n_heads + j)),
+            pl.BlockSpec((hd, dp), lambda i, j, pos_r: (n_heads + n_kv + j, 0)),
+            pl.BlockSpec((1, hd), lambda i, j, pos_r: (0, n_heads + n_kv + j)),
+            pl.BlockSpec((1, hd // 2), lambda i, j, pos_r: (i, 0)),
+            pl.BlockSpec((1, hd // 2), lambda i, j, pos_r: (i, 0)),
+            pl.BlockSpec((1, 1, s, hk), lambda i, j, pos_r: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, nb, 1), lambda i, j, pos_r: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, s, hv), lambda i, j, pos_r: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, nb, 1), lambda i, j, pos_r: (i, j, 0, 0)),
+            pl.BlockSpec((1, s), lambda i, j, pos_r: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, g, hd), lambda i, j, pos_r: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, block, hk), lambda i, j, pos_r: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, 1, 1), lambda i, j, pos_r: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, block, hv), lambda i, j, pos_r: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, 1, 1), lambda i, j, pos_r: (i, j, 0, 0)),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_fused_step_proj_kernel, w_bits=w_bits,
+                          k_bits=k_bits, v_bits=v_bits, d=d, g=g, hd=hd,
+                          block=block),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((b, n_kv, g, hd), jnp.float32),
+            jax.ShapeDtypeStruct((b, n_kv, block, hk), jnp.int8),
+            jax.ShapeDtypeStruct((b, n_kv, 1, 1), jnp.float32),
+            jax.ShapeDtypeStruct((b, n_kv, block, hv), jnp.int8),
+            jax.ShapeDtypeStruct((b, n_kv, 1, 1), jnp.float32),
+        ],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel")),
+        interpret=interpret,
+        # the fused wqkv buffer + scale enter three times — the q-group, K-head,
+        # and V-head specs each DMA their own row-block slice
+    )(jnp.asarray(pos, jnp.int32), x, w_packed, w_scale, w_packed, w_scale,
+      w_packed, w_scale, cos, sin, k_packed, k_scale, v_packed, v_scale, mask)
+
+
 def _paged_append_kernel(pos_ref, tbl_ref, new_ref, packed_ref, scale_ref,
                          blk_ref, sc_ref, *, bits: int, hd: int, block: int):
     del tbl_ref  # consumed by the index maps; requant math is table-agnostic

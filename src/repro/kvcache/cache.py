@@ -210,6 +210,26 @@ def insert_state_rows(state, ids: jax.Array, st_new, valid_len: jax.Array):
     return walk(state, st_new)
 
 
+def requantize_block_levels(blk_fp: jax.Array, new: jax.Array, off: jax.Array,
+                            bits: int):
+    """:func:`requantize_block` stopping at the integer levels (pre-pack).
+
+    The fused decode-step path (kernels/quant_kv) consumes the ``(B, H,
+    block, hd)`` int32 levels directly — attention can substitute them into
+    the unpacked cache without a pack->unpack round trip, bit-identically
+    (pack/unpack is exact on the clipped signed grid).
+    """
+    q = quantizer.qmax(bits)
+    idx = jnp.arange(blk_fp.shape[2])[None, None, :, None]
+    offb = off[:, None, None, None]
+    fp = jnp.where(idx < offb, blk_fp, 0.0)
+    fp = jnp.where(idx == offb, new.astype(jnp.float32)[:, :, None, :], fp)
+    amax = jnp.max(jnp.abs(fp), axis=(2, 3), keepdims=True)    # (B, H, 1, 1)
+    sc = jnp.maximum(amax, 1e-12) / q
+    lev = jnp.clip(jnp.round(fp / sc), -q, q).astype(jnp.int32)
+    return lev, sc
+
+
 def requantize_block(blk_fp: jax.Array, new: jax.Array, off: jax.Array,
                      bits: int):
     """Insert ``new`` at ``off`` into a dequantized block and requantize.
@@ -225,14 +245,7 @@ def requantize_block(blk_fp: jax.Array, new: jax.Array, off: jax.Array,
     shared-prefix scheme both ride on.  (The Pallas ``_append_kernel`` body
     is the kernel-side counterpart; the parity harness pins the two.)
     """
-    q = quantizer.qmax(bits)
-    idx = jnp.arange(blk_fp.shape[2])[None, None, :, None]
-    offb = off[:, None, None, None]
-    fp = jnp.where(idx < offb, blk_fp, 0.0)
-    fp = jnp.where(idx == offb, new.astype(jnp.float32)[:, :, None, :], fp)
-    amax = jnp.max(jnp.abs(fp), axis=(2, 3), keepdims=True)    # (B, H, 1, 1)
-    sc = jnp.maximum(amax, 1e-12) / q
-    lev = jnp.clip(jnp.round(fp / sc), -q, q).astype(jnp.int32)
+    lev, sc = requantize_block_levels(blk_fp, new, off, bits)
     return packing.pack(lev, bits), sc
 
 

@@ -478,7 +478,7 @@ def decode_attend_one(
     so a burst position is bitwise the decode step it replaces (DESIGN.md
     §13).  Returns ``(o (B, 1, hq, hd), cache)``.
     """
-    from repro.kernels.quant_kv.ops import quant_kv_append, quant_kv_attention
+    from repro.kernels.quant_kv.ops import quant_kv_decode_step
 
     b = q.shape[0]
     if isinstance(cache, dict):
@@ -500,14 +500,17 @@ def decode_attend_one(
         o = _direct_attention(q, cache_k, cache_v, cfg.n_kv_heads,
                               causal=False, kv_valid=kv_valid)
         return o, {"k": cache_k, "v": cache_v}
-    cache = quant_kv_append(cache, pos, k_new, v_new, impl=qimpl)
     skv = cache.seq
     posv = jnp.asarray(pos, jnp.int32).reshape(-1)[:, None]   # (B or 1, 1)
     kv_valid = jnp.broadcast_to(jnp.arange(skv)[None, :] <= posv, (b, skv))
     if window:
         kv_valid &= jnp.broadcast_to(jnp.arange(skv)[None, :] > (posv - window),
                                      (b, skv))
-    o = quant_kv_attention(q, cache, kv_valid, impl=qimpl, out_dtype=q.dtype)
+    # ONE fused dispatch per layer: dequant + append/requant + attend —
+    # bitwise-identical to the quant_kv_append -> quant_kv_attention pair
+    # (parity-pinned), but the packed cache bytes move once per step.
+    o, cache = quant_kv_decode_step(q, cache, pos, k_new, v_new, kv_valid,
+                                    impl=qimpl, out_dtype=q.dtype)
     return o, cache
 
 
@@ -558,12 +561,57 @@ def attention_decode_quant(
     """
     b = x.shape[0]
     positions = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1, 1), (b, 1))
-    q, k_new, v_new = _qkv(p, x, cfg, positions, bits=bits, qimpl=qimpl)
-    o, cache = decode_attend_one(cache, q, k_new, v_new, pos, cfg,
-                                 window=window, qimpl=qimpl)
+    if _can_fuse_step_proj(p, cfg, cache, bits, qimpl, x):
+        o, cache = _decode_step_proj_fused(p, x, cache, positions, cfg,
+                                           window=window, qimpl=qimpl)
+    else:
+        q, k_new, v_new = _qkv(p, x, cfg, positions, bits=bits, qimpl=qimpl)
+        o, cache = decode_attend_one(cache, q, k_new, v_new, pos, cfg,
+                                     window=window, qimpl=qimpl)
     o = o.astype(x.dtype)
     y = qdense(p["wo"], o.reshape(b, 1, -1), bits=_b(bits, "wo"), qimpl=qimpl)
     return y, cache
+
+
+def _can_fuse_step_proj(p, cfg, cache, bits, qimpl: str, x) -> bool:
+    """Gate for pulling the fused-wqkv GEMV into the fused decode step.
+
+    Pallas-family impls, dense quantized cache, fused ``wqkv``
+    QuantizedTensor leaf, default rope, no qk-norm, f32 activations in the
+    gemv fast-path batch regime, and no per-call bits override — every
+    condition the in-kernel projection needs to reproduce the composition's
+    numerics (kernels/quant_kv/kernel.py: _fused_step_proj_kernel).
+    """
+    from repro.kernels.quant_kv.ops import can_fuse_qkv
+
+    w = p.get("wqkv")
+    return (isinstance(w, QuantizedTensor)
+            and cfg.rope == "default" and not cfg.qk_norm
+            and _b(bits, "wqkv") is None
+            and x.dtype == jnp.float32 and x.shape[0] <= 8
+            and can_fuse_qkv(cache, cfg.d_model, w.bits, qimpl))
+
+
+def _decode_step_proj_fused(p, x, cache, positions, cfg, *, window: int,
+                            qimpl: str):
+    """Projection + rope + append + attend in the fused kernel dispatch."""
+    from repro.kernels.quant_kv.ops import quant_kv_decode_step_proj
+
+    b = x.shape[0]
+    pos = positions[:, 0]                                     # (B,)
+    skv = cache.seq
+    kv_valid = jnp.arange(skv)[None, :] <= pos[:, None]
+    if window:
+        kv_valid &= jnp.arange(skv)[None, :] > (pos[:, None] - window)
+    hd = cfg.resolved_head_dim
+    # same angle formula as apply_rope, evaluated at the one decode position
+    ang = pos[:, None].astype(jnp.float32) * rope_freqs(hd, cfg.rope_theta)
+    w = p["wqkv"]
+    o, cache = quant_kv_decode_step_proj(
+        x[:, 0], w.packed, w.scale, jnp.cos(ang), jnp.sin(ang), cache, pos,
+        kv_valid, w_bits=w.bits, n_heads=cfg.n_heads, impl=qimpl,
+        out_dtype=x.dtype)
+    return o[:, None], cache
 
 
 # ---------------------------------------------------------------------------

@@ -34,14 +34,15 @@ def test_budget_search_serve_tiny(capsys):
     # the CLI deployments ran for the other two conditions
     assert stdout.count("launch.serve --policy") == 2
 
-    from repro.core.policy import PolicyArtifact
+    from repro.core.policy import ARTIFACT_VERSION, PolicyArtifact
 
     art = PolicyArtifact.load(os.path.join(out_dir, "policy_kv_budgeted.json"))
     assert art.state_policy is not None
     assert art.report["state_bytes"] > 0
     # v3: the pool geometry the state budget bought rides in the artifact
     assert art.pool is not None and art.pool["num_blocks"] >= 1
-    assert art.version == 4  # v4: draft-policy fields ride along (None here)
+    # v4/v5 fields (draft policy, kernel configs) ride along, None here
+    assert art.version == ARTIFACT_VERSION
     # --speculate: the condition-4 artifact additionally carries the draft,
     # and the engine served speculatively from it
     assert "[speculative] draft mean_bits=" in stdout

@@ -4,6 +4,8 @@ ONE parametrized sweep covers every (kernel family, impl, bits) cell:
 
     family ∈ quant_matmul / quant_gemv / quant_kv_attention / quant_kv_append
              / quant_kv_attention_paged / quant_kv_append_paged
+             / quant_kv_decode_step / quant_kv_decode_step_paged
+             / quant_kv_decode_step_proj
     impl   ∈ interpret (the Pallas kernel body on CPU) / xla (the fallback)
     bits   ∈ VALID_BITS (2, 4, 6, 8)
 
@@ -181,6 +183,116 @@ def _run_kv_append_paged(impl, bits):
                                rtol=1e-5, atol=1e-5)
 
 
+def _step_configs(family: str, impl: str):
+    """Every tuned layout the autotuner could install for this cell, plus
+    None (the dispatcher default) — a config the parity sweep has not pinned
+    must never be enumerable."""
+    from repro.kernels import autotune
+
+    key = autotune.KernelKey(family=family, k_bits=4, v_bits=4, heads=H,
+                             head_dim=HD, block=BLOCK, impl=impl)
+    return [None, *autotune.enumerate_candidates(key)]
+
+
+def _assert_same_cache(got, want, tag):
+    """Fused-vs-sequential caches must match BITWISE: packed levels AND
+    scales (both paths run the identical requantize float sequence)."""
+    for f in ("k_packed", "v_packed", "k_scale", "v_scale"):
+        assert jnp.array_equal(getattr(got, f), getattr(want, f)), (tag, f)
+
+
+def _run_kv_decode_step(impl, bits):
+    """Fused append+attend == sequential append -> attend, bitwise, for
+    every tuned layout candidate (kernels/autotune) at this impl."""
+    layer = _dense_layer(bits)
+    kn, vn = _new_token()
+    pos = jnp.asarray(LENS, jnp.int32)
+    valid = jnp.arange(S)[None, :] <= pos[:, None]
+    seq = kv_ops.quant_kv_append(layer, pos, kn, vn, impl=impl)
+    o_seq = kv_ops.quant_kv_attention(_query(), seq, valid, impl=impl,
+                                      out_dtype=jnp.float32)
+    for cfg in _step_configs("decode_step", impl):
+        o, new = kv_ops.quant_kv_decode_step(
+            _query(), layer, pos, kn, vn, valid, impl=impl,
+            out_dtype=jnp.float32, config=cfg)
+        assert jnp.array_equal(o, o_seq), cfg
+        _assert_same_cache(new, seq, cfg)
+
+
+def _run_kv_decode_step_paged(impl, bits):
+    """Paged fused step vs sequential on the same pool — including an IDLE
+    slot (fully unmapped table row): its append lands in the trash block in
+    both paths, byte-for-byte (the engine parks free slots this way)."""
+    layer = _paged_layer(bits)
+    tbl = np.asarray(layer.block_table).copy()
+    tbl[1, :] = -1                      # slot 1 idle: every write -> trash
+    layer = pg.with_table(layer, jnp.asarray(tbl))
+    kn, vn = _new_token()
+    pos = jnp.asarray(LENS, jnp.int32)
+    valid = jnp.arange(S)[None, :] <= pos[:, None]
+    seq = kv_ops.quant_kv_append(layer, pos, kn, vn, impl=impl)
+    o_seq = kv_ops.quant_kv_attention(_query(), seq, valid, impl=impl,
+                                      out_dtype=jnp.float32)
+    for cfg in _step_configs("decode_step_paged", impl):
+        o, new = kv_ops.quant_kv_decode_step(
+            _query(), layer, pos, kn, vn, valid, impl=impl,
+            out_dtype=jnp.float32, config=cfg)
+        assert jnp.array_equal(o, o_seq), cfg
+        _assert_same_cache(new, seq, cfg)
+
+
+class _ProjCfg:
+    n_heads = HQ
+    n_kv_heads = H
+    resolved_head_dim = HD
+    rope = "default"
+    rope_theta = 10_000.0
+    qk_norm = False
+
+
+def _run_kv_decode_step_proj(impl, bits):
+    """Proj-fused step (gemv Q/K/V + rope in the same dispatch) against the
+    gemv -> rope -> sequential append/attend composition.
+
+    Cache buffers must be BITWISE equal (the K/V written through the fused
+    path feed every later step).  The attention output is allclose rather
+    than bitwise: the in-kernel projection dots a 1-row M block where
+    quant_gemv pads M to 8 rows, which can move the f32 dot by ~1 ulp
+    before the (exactly quantized) cache write.  The xla fallback has no
+    proj-fused kernel — the cell checks the dispatch gate refuses it.
+    """
+    from repro.models import layers as L
+
+    d_model = 64
+    if impl == "xla":
+        lyr = _dense_layer(bits)
+        assert not kv_ops.can_fuse_qkv(lyr, d_model, 4, impl)
+        return
+    key = jax.random.key(17 + bits)
+    x = jax.random.normal(jax.random.fold_in(key, 0), (B, d_model), jnp.float32)
+    w = jax.random.normal(jax.random.fold_in(key, 1),
+                          (d_model, (HQ + 2 * H) * HD), jnp.float32) * 0.05
+    wqkv = quantize_tensor(w, 4)
+    layer = _dense_layer(bits)
+    assert kv_ops.can_fuse_qkv(layer, d_model, wqkv.bits, impl)
+    pos = jnp.asarray(LENS, jnp.int32)
+    valid = jnp.arange(S)[None, :] <= pos[:, None]
+    cfg = _ProjCfg()
+    q4, kn, vn = L._qkv({"wqkv": wqkv}, x[:, None, :], cfg, pos[:, None],
+                        qimpl=impl)
+    seq = kv_ops.quant_kv_append(layer, pos, kn, vn, impl=impl)
+    o_seq = kv_ops.quant_kv_attention(q4[:, 0], seq, valid, impl=impl,
+                                      out_dtype=jnp.float32)
+    ang = pos[:, None].astype(jnp.float32) * L.rope_freqs(HD, cfg.rope_theta)
+    o, new = kv_ops.quant_kv_decode_step_proj(
+        x, wqkv.packed, wqkv.scale, jnp.cos(ang), jnp.sin(ang), layer, pos,
+        valid, w_bits=wqkv.bits, n_heads=HQ, impl=impl,
+        out_dtype=jnp.float32)
+    _assert_same_cache(new, seq, "proj")
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o_seq),
+                               rtol=1e-6, atol=1e-6)
+
+
 FAMILIES = {
     "quant_matmul": _run_quant_matmul,
     "quant_gemv": _run_quant_gemv,
@@ -188,6 +300,9 @@ FAMILIES = {
     "quant_kv_append": _run_kv_append,
     "quant_kv_attention_paged": _run_kv_attention_paged,
     "quant_kv_append_paged": _run_kv_append_paged,
+    "quant_kv_decode_step": _run_kv_decode_step,
+    "quant_kv_decode_step_paged": _run_kv_decode_step_paged,
+    "quant_kv_decode_step_proj": _run_kv_decode_step_proj,
 }
 
 
@@ -206,7 +321,9 @@ def test_sweep_is_exhaustive():
     covered = set(FAMILIES)
     assert {"quant_matmul", "quant_gemv", "quant_kv_attention",
             "quant_kv_append", "quant_kv_attention_paged",
-            "quant_kv_append_paged"} == covered
+            "quant_kv_append_paged", "quant_kv_decode_step",
+            "quant_kv_decode_step_paged",
+            "quant_kv_decode_step_proj"} == covered
 
 
 # ---------------------------------------------------------------------------

@@ -59,7 +59,7 @@ class TestDraftPolicyV4:
                                     report=art.report, budget=art.budget,
                                     draft_policy=draft, draft_k=3)
         back = PolicyArtifact.from_json(art4.to_json())
-        assert back.version == ARTIFACT_VERSION == 4
+        assert back.version == ARTIFACT_VERSION
         assert back.draft_k == 3
         assert back.draft_policy.bits == draft.bits
         assert back.draft_policy.layers == draft.layers
@@ -105,6 +105,52 @@ class TestDraftPolicyV4:
         back = PolicyArtifact.from_json(json.dumps(doc))
         assert back.version == 3
         assert back.draft_policy is None and back.draft_k == 0
+
+
+class TestKernelConfigsV5:
+    """v5: autotuned fused decode-step kernel configs ride the artifact."""
+
+    ENTRY = {"key": {"family": "decode_step", "k_bits": 4, "v_bits": 4,
+                     "heads": 2, "head_dim": 16, "block": 8, "impl": "xla"},
+             "config": {"place": "dus", "attend": "substitute"},
+             "micros": 12.3, "candidates": 4}
+
+    def test_roundtrip_carries_kernel_configs(self):
+        art = make_artifact()
+        art5 = PolicyArtifact.build(art.policy, backend=art.backend,
+                                    kernel_configs=[self.ENTRY])
+        back = PolicyArtifact.from_json(art5.to_json())
+        assert back.version == ARTIFACT_VERSION == 5
+        assert back.kernel_configs == [self.ENTRY]
+
+    def test_build_rejects_malformed_entries(self):
+        art = make_artifact()
+        with pytest.raises(ValueError, match="needs 'key' and 'config'"):
+            PolicyArtifact.build(art.policy, kernel_configs=[{"key": {}}])
+
+    @pytest.mark.parametrize("version", [1, 2, 3, 4])
+    def test_older_versions_load_without_kernel_configs(self, version):
+        """Every pre-v5 layout loads with its missing fields defaulted —
+        the full backward-compat ladder in one sweep."""
+        doc = json.loads(make_artifact().to_json())
+        doc["artifact_version"] = version
+        del doc["kernel_configs"]
+        if version < 4:
+            del doc["draft_policy"], doc["draft_k"]
+        if version < 3:
+            del doc["pool"]
+        if version < 2:
+            del doc["state_policy"], doc["state_registry_hash"]
+        back = PolicyArtifact.from_json(json.dumps(doc))
+        assert back.version == version
+        assert back.kernel_configs is None
+        assert back.policy.bits == make_artifact().policy.bits
+
+    def test_attach_kernel_configs_needs_state_policy(self):
+        from repro.launch.search import attach_kernel_configs
+
+        with pytest.raises(ValueError, match="needs a state policy"):
+            attach_kernel_configs(make_artifact(), cfg=None)
 
 
 class TestRegistryHash:
