@@ -35,6 +35,7 @@ from repro.kernels import autotune
 from repro.kernels.quant_kv import ops as kv_ops
 from repro.kvcache import kv_entry_names
 from repro.models import registry
+from repro.obs import trace as obs_trace
 from repro.quant import apply as qapply
 from repro.serve.engine import ServeEngine
 
@@ -75,6 +76,24 @@ def _engine_step_s(eng) -> dict:
     return best
 
 
+def _phase_breakdown(eng) -> dict:
+    """One traced pass over the same workload: decompose the engine step
+    into the named serve-loop phases (DESIGN.md §16) instead of reporting
+    a single opaque overhead residual."""
+    prompts = [[3 + i] for i in range(BENCH["max_slots"])]
+    obs_trace.enable()
+    eng.generate(prompts, max_new_tokens=BENCH["max_new_tokens"])
+    obs_trace.disable()
+    rep = eng.trace_report()
+    return {
+        "attributed_fraction": round(rep["attributed_fraction"], 4),
+        "by_phase": {name: {"mean_us": round(ph["mean_us"], 2),
+                            "fraction_of_step": round(
+                                ph["fraction_of_step"], 4)}
+                     for name, ph in rep["phases"].items()},
+    }
+
+
 def _kernel_micros(cfg, impl: str, *, paged: bool) -> dict:
     """Autotuned fused decode-step time for the deployed geometry."""
     blocks = BENCH["max_seq"] // 16  # DEFAULT_BLOCK cache geometry
@@ -97,6 +116,7 @@ def run(fast: bool = True) -> dict:
                       prefill_pad=BENCH["prefill_pad"], qimpl="auto",
                       state_bits=BENCH["state_bits"])
     step = _engine_step_s(eng)
+    phases = _phase_breakdown(eng)
 
     n_layers = len(kv_entry_names(cfg))
     dense = _kernel_micros(cfg, impl, paged=False)
@@ -118,6 +138,9 @@ def run(fast: bool = True) -> dict:
             "micros": round(overhead, 2),
             "fraction_of_step": round(overhead / step["step_micros"], 3),
         },
+        # the overhead residual decomposed into named serve-loop phases
+        # from a traced pass (tracer spans, DESIGN.md §16)
+        "phases": phases,
     }
     with open(OUT_PATH, "w") as f:
         json.dump(doc, f, indent=1)
@@ -128,6 +151,10 @@ def run(fast: bool = True) -> dict:
           f"({step['tokens_per_s']} tok/s); kernels {kernel_total:.0f}us "
           f"across {n_layers} layers -> overhead {overhead:.0f}us "
           f"({doc['overhead']['fraction_of_step']:.0%} of the step)")
+    top = sorted(phases["by_phase"].items(),
+                 key=lambda kv: -kv[1]["fraction_of_step"])[:4]
+    print(f"phases (attributed {phases['attributed_fraction']:.0%}): "
+          + ", ".join(f"{n} {p['fraction_of_step']:.0%}" for n, p in top))
     return doc
 
 

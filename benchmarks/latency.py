@@ -1,0 +1,199 @@
+"""Open-loop serving latency benchmark -> BENCH_latency.json (repo root).
+
+The missing half of the serve-path story: throughput benchmarks drive the
+engine closed-loop (next request enters the moment a slot frees), which
+hides queueing entirely.  Production arrivals do not wait for the server —
+this section drives a **Poisson open-loop** workload (seeded exponential
+inter-arrival gaps, submitted on the wall clock via ``run(step_hook=)``
+regardless of engine occupancy) at a configured fraction of measured
+capacity, and reports the percentiles that actually rule a latency SLO:
+
+  * **TTFT** — time to first token from *enqueue* (queue wait included),
+    exact per-request values from the lifecycle records;
+  * **ITL** — inter-token latency, from the engine's always-on ``itl_s``
+    histogram (interpolated p50/p99).
+
+The measured run executes with the process-wide tracer enabled, so the
+same run yields a Chrome/Perfetto trace (``artifacts/latency_trace.json``,
+uploaded by CI) and the per-phase step decomposition of DESIGN.md §16 —
+and doubles as a standing check that tracing overhead stays negligible.
+
+Registered as the "latency" section of benchmarks/run.py.
+
+    PYTHONPATH=src python -m benchmarks.latency [--full]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import gemma_2b
+from repro.core.policy import BitPolicy
+from repro.models import registry
+from repro.obs import trace as obs_trace
+from repro.quant import apply as qapply
+from repro.serve import Request, RequestState, ServeEngine
+
+OUT_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_latency.json")
+TRACE_PATH = os.path.join(os.path.dirname(__file__), "..", "artifacts",
+                          "latency_trace.json")
+
+#: pure-decode-dominated cell: short prompts, modest generation
+BENCH = dict(max_slots=4, max_seq=96, prefill_pad=16, bits=4, state_bits=4,
+             max_new_tokens=16, load_frac=0.6, seed=0)
+N_REQUESTS = dict(fast=10, full=32)
+
+
+def _build():
+    cfg = gemma_2b.CONFIG.reduced()
+    api = registry.get_api(cfg)
+    params = api.init(cfg, jax.random.key(BENCH["seed"]))
+    sp = api.unstack(params, cfg)
+    policy = BitPolicy.uniform(qapply.layer_specs(params, cfg), BENCH["bits"])
+    qp = qapply.quantize_for_serve(sp, policy, cfg)
+    eng = ServeEngine(cfg, qp, max_slots=BENCH["max_slots"],
+                      max_seq=BENCH["max_seq"],
+                      prefill_pad=BENCH["prefill_pad"], qimpl="xla",
+                      state_bits=BENCH["state_bits"])
+    return cfg, eng
+
+
+def _requests(cfg, n, uid_base=0, rng=None):
+    rng = rng or np.random.default_rng(BENCH["seed"])
+    return [Request(uid=uid_base + i,
+                    prompt=rng.integers(1, cfg.vocab_size,
+                                        int(rng.integers(4, 12))).tolist(),
+                    max_new_tokens=BENCH["max_new_tokens"])
+            for i in range(n)]
+
+
+def _capacity_steps_per_s(cfg, eng) -> float:
+    """Warmup (compile all shapes) + measure closed-loop decode step rate.
+
+    Open-loop arrivals admit 1..max_slots requests per turn, and each
+    admission width is a distinct batched-prefill shape — warm them ALL, or
+    the measured TTFT percentiles are mostly XLA compiles a production
+    server would have amortized long ago."""
+    for k in range(1, BENCH["max_slots"] + 1):
+        eng.run(_requests(cfg, k, uid_base=9000 + 10 * k))
+    steps0 = eng.stats()["decode_steps"]
+    t0 = time.perf_counter()
+    eng.run(_requests(cfg, BENCH["max_slots"], uid_base=9500))
+    dt = time.perf_counter() - t0
+    return (eng.stats()["decode_steps"] - steps0) / dt
+
+
+def _open_loop(cfg, eng, n: int, mean_gap_s: float) -> dict[int, list[int]]:
+    """Submit n requests on a seeded Poisson schedule, wall-clock driven.
+
+    Arrivals are OPEN LOOP: the schedule never looks at engine occupancy,
+    so queue wait lands in TTFT exactly as production traffic would see it.
+    """
+    rng = np.random.default_rng(BENCH["seed"] + 1)
+    gaps = rng.exponential(mean_gap_s, size=n)
+    gaps[0] = 0.0
+    schedule = list(zip(np.cumsum(gaps), _requests(cfg, n, rng=rng)))
+    t_start = time.perf_counter()
+    results: dict[int, list[int]] = {}
+
+    def hook(engine, step):
+        now = time.perf_counter() - t_start
+        while schedule and schedule[0][0] <= now:
+            engine.submit(schedule.pop(0)[1])
+
+    while schedule:
+        wait = schedule[0][0] - (time.perf_counter() - t_start)
+        if wait > 0:
+            time.sleep(wait)
+        hook(eng, 0)
+        results.update(eng.run(step_hook=hook))
+    results.update(eng.run())
+    return results
+
+
+def run(fast: bool = True) -> dict:
+    n = N_REQUESTS["fast" if fast else "full"]
+    cfg, eng = _build()
+    steps_per_s = _capacity_steps_per_s(cfg, eng)
+    # a request occupies a slot for ~max_new_tokens steps: full-occupancy
+    # service rate, scaled down to the target utilisation
+    service_req_s = steps_per_s * BENCH["max_slots"] / BENCH["max_new_tokens"]
+    arrival_rate = service_req_s * BENCH["load_frac"]
+    mean_gap_s = 1.0 / arrival_rate
+
+    # measured run is traced: same tokens as untraced (see
+    # tests/test_chaos_serve.py), plus a Perfetto timeline for free
+    eng.metrics.histogram("ttft_s").clear()
+    eng.metrics.histogram("itl_s").clear()
+    obs_trace.enable()
+    results = _open_loop(cfg, eng, n, mean_gap_s)
+    obs_trace.disable()
+    del results  # lifecycle records below carry the latency evidence
+
+    lcs = [eng.lifecycles[i] for i in range(n)]
+    done = [lc for lc in lcs if lc.state is RequestState.DONE]
+    ttfts = sorted(lc.ttft() for lc in done if lc.ttft() is not None)
+    itl_hist = eng.metrics.histogram("itl_s")
+    rep = eng.trace_report()
+
+    os.makedirs(os.path.dirname(TRACE_PATH), exist_ok=True)
+    doc_trace = obs_trace.get_tracer().save(TRACE_PATH)
+    obs_trace.validate_chrome_trace(doc_trace)
+
+    def pct(sorted_vals, p):
+        return (round(float(np.percentile(sorted_vals, p)), 4)
+                if sorted_vals else None)
+
+    doc = {
+        "config": dict(BENCH, arch="gemma-2b.reduced",
+                       backend=jax.default_backend(), n_requests=n),
+        "workload": {
+            "model": "poisson open-loop",
+            "measured_capacity_steps_per_s": round(steps_per_s, 1),
+            "arrival_rate_req_s": round(arrival_rate, 3),
+            "mean_interarrival_s": round(mean_gap_s, 4),
+        },
+        "completion": {"rate": round(len(done) / n, 3), "requests": n},
+        "ttft": {"p50_s": pct(ttfts, 50), "p99_s": pct(ttfts, 99),
+                 "mean_s": (round(float(np.mean(ttfts)), 4)
+                            if ttfts else None)},
+        "itl": {"p50_s": round(itl_hist.percentile(50), 4),
+                "p99_s": round(itl_hist.percentile(99), 4),
+                "count": itl_hist.count},
+        "trace": {
+            "path": os.path.relpath(TRACE_PATH,
+                                    os.path.join(os.path.dirname(__file__),
+                                                 "..")),
+            "events": len(doc_trace["traceEvents"]),
+            "attributed_fraction": round(rep["attributed_fraction"], 4),
+        },
+    }
+    with open(OUT_PATH, "w") as f:
+        json.dump(doc, f, indent=1)
+    print(f"open loop: {n} requests @ {arrival_rate:.2f} req/s "
+          f"({BENCH['load_frac']:.0%} of capacity), "
+          f"completion {doc['completion']['rate']:.0%}")
+    print(f"TTFT p50={doc['ttft']['p50_s']}s p99={doc['ttft']['p99_s']}s; "
+          f"ITL p50={doc['itl']['p50_s']}s p99={doc['itl']['p99_s']}s "
+          f"({itl_hist.count} gaps)")
+    print(f"trace: {doc['trace']['events']} events -> {TRACE_PATH} "
+          f"(step phases attributed "
+          f"{rep['attributed_fraction'] * 100:.1f}%)")
+    return doc
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args(argv)
+    run(fast=not args.full)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -20,9 +20,9 @@ import time
 import traceback
 
 from . import (allocator, decode_step, decode_throughput, degradation,
-               fig3_trajectory, fig5_hw, kvcache, kvcache_paged, roofline,
-               speculative, table1_sigma_kl, table2_phases, table3_sota,
-               table4_hparam, table5_bops, table6_mac)
+               fig3_trajectory, fig5_hw, kvcache, kvcache_paged, latency,
+               roofline, speculative, table1_sigma_kl, table2_phases,
+               table3_sota, table4_hparam, table5_bops, table6_mac)
 
 SECTIONS = {
     "decode": ("Decode throughput (BENCH_decode.json)", decode_throughput.run),
@@ -39,6 +39,9 @@ SECTIONS = {
     "degradation": ("Graceful degradation under pool pressure: shed tiers + "
                     "preemption vs indefinite wait (BENCH_degradation.json)",
                     degradation.run),
+    "latency": ("Open-loop Poisson serving latency: p50/p99 TTFT + "
+                "inter-token latency, Perfetto trace (BENCH_latency.json)",
+                latency.run),
     "allocator": ("Allocator: wall-time + budget satisfaction x backends "
                   "(BENCH_allocator.json)", allocator.run),
     "table1": ("Table I: sigma vs KL vs final bits", table1_sigma_kl.run),
@@ -65,7 +68,17 @@ HEADLINES = {
                                  ("pool.utilization", "higher"),
                                  ("tokens_per_s_ratio", "higher")],
     "BENCH_decode_step.json": [("engine.tokens_per_s", "higher"),
-                               ("kernel.dense.micros", "lower")],
+                               ("kernel.dense.micros", "lower"),
+                               ("overhead.fraction_of_step", "lower"),
+                               ("phases.attributed_fraction", "higher")],
+    # open-loop wall-clock percentiles: tracked headlines, but (like the
+    # decode_step micros) NOT in the CI compare-baseline list — shared CI
+    # machines make absolute latency numbers too noisy to gate on
+    "BENCH_latency.json": [("ttft.p50_s", "lower"),
+                           ("ttft.p99_s", "lower"),
+                           ("itl.p50_s", "lower"),
+                           ("itl.p99_s", "lower"),
+                           ("completion.rate", "higher")],
     "BENCH_speculative.json": [("acceptance.accepted_per_verify_step", "higher"),
                                ("steps_ratio", "higher"),
                                ("tokens_per_s_ratio", "higher")],

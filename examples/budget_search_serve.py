@@ -77,6 +77,11 @@ def main(argv=None):
                     help="condition 4: search a strictly-cheaper DRAFT policy "
                          "for the condition-3 artifact and serve the same "
                          "requests self-speculatively (DESIGN.md §13)")
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="record the condition-3 deployment as a "
+                         "Chrome/Perfetto trace (DESIGN.md §16): open the "
+                         "file at https://ui.perfetto.dev for per-request "
+                         "lifecycle lanes + step-phase spans")
     args = ap.parse_args(argv)
     pretrain = 8 if args.tiny else 40
     iters = 4 if args.tiny else 10
@@ -153,11 +158,22 @@ def main(argv=None):
     # bidirectionally verified against the artifact (a v3 pool geometry
     # makes the engine build block tables + on-demand allocation)
     qp = qapply.quantize_for_serve(serve_params, art_kv, cfg)
+    if args.trace:
+        from repro.obs import trace as obs_trace
+        obs_trace.enable()
     eng = ServeEngine(cfg, qp, max_slots=slots, max_seq=max_seq, artifact=art_kv)
     outs = eng.generate([[5, 6, 7, 8], [1, 2, 9], [4, 4, 4, 4, 4]],
                         max_new_tokens=8)
     print(f"  served {len(outs)} requests on the quantized KV cache; "
           f"state_bits={eng.state_bits}")
+    if args.trace:
+        doc = obs_trace.get_tracer().save(args.trace)
+        obs_trace.disable()
+        rep = eng.trace_report()
+        print(f"  traced: {len(doc['traceEvents'])} events -> {args.trace}; "
+              f"step phases attributed "
+              f"{rep['attributed_fraction'] * 100:.1f}% "
+              f"(open at https://ui.perfetto.dev)")
     if args.paged:
         dense_eng = ServeEngine(cfg, qp, max_slots=slots, max_seq=max_seq,
                                 state_bits=art_kv.state_policy)

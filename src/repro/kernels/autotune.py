@@ -141,21 +141,33 @@ def autotune_key(key: KernelKey, *, batch: int = 8, blocks: int = 8,
 
     from repro.kernels.quant_kv import ops as kv_ops
 
+    from repro.obs import trace as obs_trace
+
+    tracer = obs_trace.get_tracer()
     q, layer, pos, k_new, v_new, kv_valid = _synthetic_inputs(
         key, batch=batch, blocks=blocks)
     best_cfg, best_t = None, float("inf")
     for cfg in enumerate_candidates(key):
         fn = jax.jit(lambda lyr, cfg=cfg: kv_ops.quant_kv_decode_step(
             q, lyr, pos, k_new, v_new, kv_valid, impl=key.impl, config=cfg))
-        out, _ = fn(layer)
-        jax.block_until_ready(out)
-        t0 = time.perf_counter()
-        for _ in range(repeats):
+        with tracer.span("autotune_compile", cat="kernel", track="kernel",
+                         args={"key": key.to_dict(), "config": cfg}):
             out, _ = fn(layer)
-        jax.block_until_ready(out)
-        t = (time.perf_counter() - t0) / repeats
+            jax.block_until_ready(out)
+        with tracer.span("autotune_candidate", cat="kernel",
+                         track="kernel") as sp:
+            t0 = time.perf_counter()
+            for _ in range(repeats):
+                out, _ = fn(layer)
+            jax.block_until_ready(out)
+            t = (time.perf_counter() - t0) / repeats
+            sp.annotate(key=key.to_dict(), config=cfg, repeats=repeats,
+                        micros=round(t * 1e6, 2))
         if t < best_t:
             best_cfg, best_t = cfg, t
+    tracer.instant("autotune_winner", cat="kernel", track="kernel",
+                   args={"key": key.to_dict(), "config": best_cfg,
+                         "micros": round(best_t * 1e6, 2)})
     return {"key": key.to_dict(), "config": best_cfg,
             "micros": round(best_t * 1e6, 2),
             "candidates": len(enumerate_candidates(key))}

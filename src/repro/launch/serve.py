@@ -20,6 +20,7 @@ import numpy as np
 
 from repro.configs import ARCH_MODULES, get_config
 from repro.core.policy import BitPolicy, PolicyArtifact
+from repro.obs import trace as obs_trace
 from repro.models import registry
 from repro.quant import apply as qapply
 from repro.serve.engine import Request, ServeEngine
@@ -40,7 +41,16 @@ def main(argv=None) -> int:
                          "overrides --wbits")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="record a Chrome/Perfetto trace of the whole serve "
+                         "run (open at https://ui.perfetto.dev) and print "
+                         "the per-phase step decomposition")
     args = ap.parse_args(argv)
+
+    if args.trace:
+        # enable BEFORE the engine builds so kernel-config replay and any
+        # autotuner activity land in the same trace as the decode steps
+        obs_trace.enable()
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -103,6 +113,18 @@ def main(argv=None) -> int:
           f"stragglers={st['health']['straggler_flagged']}")
     for uid in sorted(results)[:4]:
         print(f"  req {uid}: {results[uid][:10]}")
+    if args.trace:
+        doc = obs_trace.get_tracer().save(args.trace)
+        obs_trace.validate_chrome_trace(doc)
+        obs_trace.disable()
+        rep = eng.trace_report()
+        print(f"trace: {len(doc['traceEvents'])} events -> {args.trace} "
+              f"(open at https://ui.perfetto.dev)")
+        print(f"step phases over {rep['steps']} turns "
+              f"(attributed {rep['attributed_fraction'] * 100:.1f}%):")
+        for name, ph in rep["phases"].items():
+            print(f"  {name:<12} {ph['fraction_of_step'] * 100:5.1f}%  "
+                  f"mean={ph['mean_us']:8.1f}µs  p99={ph['p99_us']:8.1f}µs")
     return 0
 
 

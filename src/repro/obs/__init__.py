@@ -1,0 +1,19 @@
+"""Serve-path observability: low-overhead tracing + metrics (DESIGN.md §16).
+
+Two small, dependency-free pillars:
+
+* :mod:`repro.obs.trace` — a process-wide event/span tracer on the
+  monotonic clock with an explicit no-op fast path when disabled and
+  Chrome/Perfetto ``trace_event`` JSON export.
+* :mod:`repro.obs.metrics` — counters, gauges, and fixed-bucket histograms
+  (p50/p90/p99 summaries) behind a :class:`MetricsRegistry`; the
+  ``ServeEngine`` keeps one and serves its legacy ``stats()`` dict as a
+  view over it.
+
+Import cost is stdlib-only, so kernels/launchers can depend on this
+unconditionally.
+"""
+from . import metrics, trace  # noqa: F401
+from .metrics import Counter, Gauge, Histogram, MetricsRegistry  # noqa: F401
+from .trace import (NOOP_SPAN, Tracer, get_tracer,  # noqa: F401
+                    validate_chrome_trace)

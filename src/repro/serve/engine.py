@@ -88,6 +88,8 @@ from repro import kvcache
 from repro.configs.base import ArchConfig
 from repro.core.policy import PolicyArtifact
 from repro.models import registry
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.quant import apply as qapply
 from repro.runtime.resilience import (FailureInjector, SimulatedFailure,
                                       StepTimer, StragglerMonitor)
@@ -114,6 +116,8 @@ class _Slot:
     req: Request | None = None
     pos: int = 0                  # next write position
     generated: list[int] = dataclasses.field(default_factory=list)
+    #: monotonic time of the last committed token (inter-token latency)
+    last_token_t: float | None = None
 
     @property
     def free(self) -> bool:
@@ -122,6 +126,19 @@ class _Slot:
 
 def _round_up(n: int, mult: int) -> int:
     return -(-n // mult) * mult
+
+
+#: integer counters the legacy ``stats()`` view exposes (wall_s rides as a
+#: float counter next to these)
+_COUNTER_KEYS = ("prefill_tokens", "decode_steps", "loop_turns", "completed",
+                 "spec_steps", "spec_proposed", "spec_accepted", "preemptions",
+                 "failed", "cancelled", "timed_out", "nan_quarantined",
+                 "nan_draft_fallbacks")
+
+#: step-phase span names in serve-loop order (DESIGN.md §16); ``hook`` only
+#: appears when a ``step_hook`` is installed
+_PHASE_NAMES = ("hook", "reap", "admission", "prep", "dispatch",
+                "device_sync", "commit", "bookkeeping")
 
 
 class ServeEngine:
@@ -263,11 +280,24 @@ class ServeEngine:
         # install it process-wide before any decode program traces, so
         # serving replays the searched layouts instead of re-timing them
         self._install_kernel_configs()
-        self._stats = {"prefill_tokens": 0, "decode_steps": 0, "completed": 0,
-                       "wall_s": 0.0, "spec_steps": 0, "spec_proposed": 0,
-                       "spec_accepted": 0, "preemptions": 0, "failed": 0,
-                       "cancelled": 0, "timed_out": 0, "nan_quarantined": 0,
-                       "nan_draft_fallbacks": 0, "shed_events": []}
+        # observability (DESIGN.md §16): the metrics registry is the source
+        # of truth behind the legacy stats() dict; the process-wide tracer
+        # adds step-phase + lifecycle spans when (and only when) enabled
+        self.metrics = obs_metrics.MetricsRegistry()
+        for name in _COUNTER_KEYS:
+            self.metrics.counter(name)
+        self.metrics.counter("wall_s")
+        #: full loop-turn wall time — admission + prefill turns included,
+        #: not just decode-dispatch bodies (health medians agree with the
+        #: phase spans on totals)
+        self.metrics.histogram("step_time_s")
+        self.metrics.histogram("ttft_s")
+        self.metrics.histogram("itl_s")
+        self._tracer = obs_trace.get_tracer()
+        self._shed_events: list[dict] = []
+        #: uid -> perf_counter start of the request's current lifecycle
+        #: segment (tracing only)
+        self._lc_marks: dict[int, float] = {}
         # graceful degradation (DESIGN.md §14): the live burst K walks the
         # shed ladder under pool pressure; tier index 0 = full service
         self._shed_policy = shed
@@ -357,6 +387,59 @@ class ServeEngine:
                 f"policy artifact kernel_configs do not fit this "
                 f"deployment: {e}") from e
         autotune.set_active_configs(entries)
+        # replayed configs land in the trace next to the live step times, so
+        # a Perfetto timeline shows WHICH searched layout each step ran
+        tr = obs_trace.get_tracer()
+        if tr.enabled:
+            for e in entries:
+                tr.instant("kernel_config_replayed", cat="kernel",
+                           track="kernel", args=dict(e))
+
+    # -- observability (DESIGN.md §16) ------------------------------------
+    def _count(self, name: str, n: int = 1) -> None:
+        self.metrics.counter(name).inc(n)
+
+    def _nsteps(self) -> int:
+        return int(self.metrics.counter("decode_steps").value)
+
+    def _span(self, name: str, **args):
+        """A step-phase span: trace event + ``phase/<name>`` histogram when
+        tracing is enabled, the shared no-op singleton otherwise."""
+        tr = self._tracer
+        if not tr.enabled:
+            return obs_trace.NOOP_SPAN
+        return tr.span(name, cat="phase", track="engine",
+                       hist=self.metrics.histogram("phase/" + name),
+                       args=args or None)
+
+    def _observe_transition(self, lc: RequestLifecycle, old: RequestState,
+                            new: RequestState, now: float,
+                            diagnostic: str) -> None:
+        """Lifecycle observer: close the span for the segment that just
+        ended on the request's own trace track, mark terminal states with
+        an instant.  Keyed off the SAME validated transitions the resource
+        accounting uses (serve/lifecycle.py)."""
+        tr = self._tracer
+        if not tr.enabled:
+            self._lc_marks.pop(lc.uid, None)
+            return
+        t = tr.now()
+        track = f"req/{lc.uid}"
+        t0 = self._lc_marks.pop(lc.uid, None)
+        if t0 is not None:
+            tr.complete(old.value, ts=t0, dur=t - t0, cat="request",
+                        track=track, args={"uid": lc.uid})
+        if new in (RequestState.DONE, RequestState.FAILED,
+                   RequestState.CANCELLED, RequestState.TIMED_OUT):
+            tr.instant(new.value, cat="request", track=track,
+                       args={"uid": lc.uid,
+                             "diagnostic": diagnostic or lc.diagnostic,
+                             "preemptions": lc.preemptions})
+        else:
+            if new is RequestState.QUEUED:  # preemption / admission rollback
+                tr.instant("requeued", cat="request", track=track,
+                           args={"uid": lc.uid, "diagnostic": diagnostic})
+            self._lc_marks[lc.uid] = t
 
     # -- fault injection (runtime/resilience.py) ---------------------------
     def _fault(self, site: str, step: int | None = None) -> bool:
@@ -364,7 +447,7 @@ class ServeEngine:
         if self._injector is None:
             return False
         if step is None:
-            step = self._stats["decode_steps"]
+            step = self._nsteps()
         return self._injector.fires(site, step)
 
     # -- speculative decode (DESIGN.md §13) -------------------------------
@@ -455,20 +538,24 @@ class ServeEngine:
         """One draft-K / verify / accept / commit round -> (emitted tokens
         per active slot (1..K+1 each: accepted draft prefix + bonus),
         per-slot draft/verify non-finite flags)."""
-        acc, out, self.state, self._key, draft_bad, verify_bad = self._spec_fn(k)(
-            self.params, self.draft_params, self.state,
-            jnp.asarray(tokens_h), jnp.asarray(pos_h), self._key,
-            jnp.asarray(inject_draft), jnp.asarray(inject_verify),
-            self.temperature, self.top_k, self.top_p)
+        with self._span("dispatch", k=k):
+            acc, out, self.state, self._key, draft_bad, verify_bad = \
+                self._spec_fn(k)(
+                    self.params, self.draft_params, self.state,
+                    jnp.asarray(tokens_h), jnp.asarray(pos_h), self._key,
+                    jnp.asarray(inject_draft), jnp.asarray(inject_verify),
+                    self.temperature, self.top_k, self.top_p)
+        with self._span("device_sync"):
+            jax.block_until_ready((acc, out, draft_bad, verify_bad))
         acc_h = np.asarray(acc)      # the step's ONLY host transfer:
         out_h = np.asarray(out)      # (B,) accepts + (B, K+1) tokens + flags
-        self._stats["spec_steps"] += 1
+        self._count("spec_steps")
         emitted: dict[int, list[int]] = {}
         for i in active:
             a = int(acc_h[i])
             emitted[i] = [int(t) for t in out_h[i, : a + 1]]
-            self._stats["spec_proposed"] += k
-            self._stats["spec_accepted"] += a
+            self._count("spec_proposed", k)
+            self._count("spec_accepted", a)
         return emitted, np.asarray(draft_bad), np.asarray(verify_bad)
 
     # -- state surgery ---------------------------------------------------
@@ -665,9 +752,11 @@ class ServeEngine:
         return True
 
     def _shed_event(self, action: str, **extra) -> None:
-        self._stats["shed_events"].append(
-            {"action": action, "step": self._stats["decode_steps"],
-             "tier": self._shed_tier, "k": self._k_live, **extra})
+        ev = {"action": action, "step": self._nsteps(),
+              "tier": self._shed_tier, "k": self._k_live, **extra}
+        self._shed_events.append(ev)
+        self._tracer.instant("shed:" + action, cat="degradation",
+                             track="engine", args=ev)
 
     def _maybe_shed(self, waiting: list[Request]) -> bool:
         """ONE degradation action for this loop turn (True if state changed):
@@ -730,7 +819,7 @@ class ServeEngine:
                           diagnostic="preempted under pool pressure")
             lc.preemptions += 1
             lc.resume_tokens.extend(s.generated)
-        self._stats["preemptions"] += 1
+        self._count("preemptions")
         self._shed_event("preempt", uid=req.uid, at_tokens=len(s.generated))
         resumed = dataclasses.replace(
             req, prompt=req.prompt + s.generated,
@@ -751,6 +840,14 @@ class ServeEngine:
         if existing is not None and not existing.terminal:
             raise LifecycleError(
                 f"request uid {req.uid} is already live ({existing.state.value})")
+        lc.observer = self._observe_transition
+        tr = self._tracer
+        if tr.enabled:
+            self._lc_marks[req.uid] = tr.now()
+            tr.instant("submit", cat="request", track=f"req/{req.uid}",
+                       args={"uid": req.uid, "priority": req.priority,
+                             "prompt_tokens": len(req.prompt),
+                             "max_new_tokens": req.max_new_tokens})
         self.lifecycles[req.uid] = lc
         self._queue.append(req)
         return lc
@@ -787,10 +884,10 @@ class ServeEngine:
             results[req.uid] = gen
         if slot_id is not None:
             self._release_slot(slot_id)
-        self._stats[{RequestState.DONE: "completed",
+        self._count({RequestState.DONE: "completed",
                      RequestState.FAILED: "failed",
                      RequestState.CANCELLED: "cancelled",
-                     RequestState.TIMED_OUT: "timed_out"}[state]] += 1
+                     RequestState.TIMED_OUT: "timed_out"}[state])
 
     def _reap(self, now: float, results: dict[int, list[int]]) -> None:
         """Apply pending cancellations and deadline/TTFT expiries, queued
@@ -902,7 +999,7 @@ class ServeEngine:
             else:
                 self._insert_rows([slot_id for slot_id, _ in with_head], st,
                                   lengths)
-            self._stats["prefill_tokens"] += sum(len(h) for _, h in with_head)
+            self._count("prefill_tokens", sum(len(h) for _, h in with_head))
         now = time.monotonic()
         for req in admitted:
             lc = self.lifecycles.get(req.uid)
@@ -922,6 +1019,13 @@ class ServeEngine:
         ``step_hook(engine, step)`` fires once per loop turn before
         admission; the chaos harness uses it for mid-run ``submit`` /
         ``cancel`` at deterministic steps.
+
+        With the process-wide tracer enabled (``repro.obs.trace.enable()``)
+        every turn additionally records a ``step`` span decomposed into the
+        named phases of ``_turn`` plus per-request lifecycle spans — see
+        ``trace_report()`` and DESIGN.md §16.  Tracing never changes the
+        dispatch or sampling math, so traced runs are token-identical to
+        untraced runs.
         """
         t0 = time.perf_counter()
         for req in requests:
@@ -930,15 +1034,52 @@ class ServeEngine:
         self._pending_token = {}
         tokens_h = np.zeros((self.max_slots, 1), np.int32)
         pos_h = np.zeros((self.max_slots,), np.int32)
+        step_hist = self.metrics.histogram("step_time_s")
 
-        def active() -> list[int]:
-            return [i for i, s in enumerate(self.slots) if not s.free]
+        while self._queue or self._active():
+            tr = self._tracer
+            step_idx = self._nsteps()
+            step_span = (tr.span("step", cat="step", track="engine",
+                                 hist=self.metrics.histogram("traced_step_s"),
+                                 args={"step": step_idx})
+                         if tr.enabled else obs_trace.NOOP_SPAN)
+            with step_span:
+                self._count("loop_turns")
+                # the turn timer covers the WHOLE turn — admission and
+                # prefill work included, not just the decode dispatch — so
+                # health medians and the phase spans agree on totals
+                with StepTimer() as turn:
+                    dispatch_dt = self._turn(results, tokens_h, pos_h,
+                                             step_hook)
+                step_hist.observe(turn.dt)
+                with self._span("bookkeeping"):
+                    if dispatch_dt is not None:
+                        self._after_dispatch(step_idx, dispatch_dt)
+                    if tr.enabled:
+                        tr.counter("queue_depth", len(self._queue))
+                        tr.counter("active_slots",
+                                   sum(not s.free for s in self.slots))
+                        if self.paged:
+                            tr.counter("pool_available", self.pool.available)
+        self.metrics.counter("wall_s").inc(time.perf_counter() - t0)
+        return results
 
-        while self._queue or active():
-            if step_hook is not None:
-                step_hook(self, self._stats["decode_steps"])
-            # cancellations + deadline/TTFT expiry, queued and resident alike
+    def _active(self) -> list[int]:
+        return [i for i, s in enumerate(self.slots) if not s.free]
+
+    def _turn(self, results: dict[int, list[int]], tokens_h, pos_h,
+              step_hook) -> float | None:
+        """One serve-loop turn, decomposed into the named step phases
+        (DESIGN.md §16): hook -> reap -> admission -> prep -> dispatch ->
+        device_sync -> commit.  Returns the dispatch+sync+transfer duration
+        (the StragglerMonitor's latency signal), or None if no decode ran."""
+        if step_hook is not None:
+            with self._span("hook"):
+                step_hook(self, self._nsteps())
+        # cancellations + deadline/TTFT expiry, queued and resident alike
+        with self._span("reap"):
             self._reap(time.monotonic(), results)
+        with self._span("admission"):
             # fill free slots: one batched admission per loop turn, highest
             # priority first (stable sort: FIFO within a priority class)
             free = [i for i, s in enumerate(self.slots) if s.free]
@@ -963,7 +1104,7 @@ class ServeEngine:
                     # wait (shedding below) for completions to free blocks
                     self._queue[:0] = rejected
                     pressure = bool(rejected)
-                    if rejected and not active():
+                    if rejected and not self._active():
                         # an idle pool that still rejects can never admit:
                         # shedding has nothing left to reclaim
                         raise RuntimeError(
@@ -980,27 +1121,29 @@ class ServeEngine:
                 self._preempt_for(self._queue)
             else:
                 self._relax_shed()
-            act = active()
+        act = self._active()
+        if not act:
+            return None
+        if self.paged and self._fault("append_failure"):
+            # the slot's paged append bookkeeping died: quarantine that
+            # request alone; everyone else decodes this turn as usual
+            victim = act[0]
+            self._finalize(victim, self.slots[victim].req,
+                           RequestState.FAILED, results,
+                           diagnostic="paged append bookkeeping failure "
+                                      "(injected fault)")
+            act = self._active()
             if not act:
-                continue
-            if self.paged and self._fault("append_failure"):
-                # the slot's paged append bookkeeping died: quarantine that
-                # request alone; everyone else decodes this turn as usual
-                victim = act[0]
-                self._finalize(victim, self.slots[victim].req,
-                               RequestState.FAILED, results,
-                               diagnostic="paged append bookkeeping failure "
-                                          "(injected fault)")
-                act = active()
-                if not act:
-                    continue
-            k_eff = self._burst_len(act) if self._k_live else 0
+                return None
+        k_eff = self._burst_len(act) if self._k_live else 0
+        with self._span("prep"):
             if self.paged:
                 # map/CoW every block an active slot can write this step
                 # (the whole K_eff+1 burst span under speculation)
                 self._ensure_append_blocks(act, span=k_eff + 1)
-            # one lock-step decode over all slots (idle slots step harmlessly;
-            # paged idle slots append into the reserved trash block)
+            # one lock-step decode over all slots (idle slots step
+            # harmlessly; paged idle slots append into the reserved trash
+            # block)
             for i in act:
                 s = self.slots[i]
                 tokens_h[i, 0] = self._pending_token.get(
@@ -1011,69 +1154,103 @@ class ServeEngine:
             inject = np.zeros((self.max_slots,), np.float32)
             if self._fault("nan_logit"):
                 inject[act[0]] = np.float32("nan")
-            step = self._stats["decode_steps"]
-            with StepTimer() as timer:
-                if k_eff > 0:
-                    inj_draft = np.zeros((self.max_slots,), np.float32)
-                    if self._fault("nan_logit_draft"):
-                        inj_draft[act[0]] = np.float32("nan")
-                    emitted, draft_bad, verify_bad = self._spec_step(
-                        act, tokens_h, pos_h, k_eff, inj_draft, inject)
-                else:
+        step = self._nsteps()
+        with StepTimer() as timer:
+            if k_eff > 0:
+                inj_draft = np.zeros((self.max_slots,), np.float32)
+                if self._fault("nan_logit_draft"):
+                    inj_draft[act[0]] = np.float32("nan")
+                emitted, draft_bad, verify_bad = self._spec_step(
+                    act, tokens_h, pos_h, k_eff, inj_draft, inject)
+            else:
+                with self._span("dispatch"):
                     toks_dev, self.state, self._key, bad_dev = self._decode(
                         self.params, self.state, jnp.asarray(tokens_h),
                         jnp.asarray(pos_h), self._key, jnp.asarray(inject),
                         self.temperature, self.top_k, self.top_p)
-                    toks = np.asarray(toks_dev)  # ONE (B,) int32 host transfer
-                    verify_bad = np.asarray(bad_dev)
-                    draft_bad = None
-                    emitted = {i: [int(toks[i])] for i in act}
-            self._stats["decode_steps"] += 1
-            # straggler latency signal -> shed one speculation tier (floor
-            # K=1: only real pool pressure turns speculation fully off)
-            if (self._straggler.observe(step, timer.dt)
-                    and self._shed_policy is not None
-                    and self._shed_policy.straggler_sheds_spec
-                    and self._k_live > 1
-                    and self._set_live_k(self._spec_ladder[self._shed_tier + 1])):
-                self._shed_tier += 1
-                self._shed_event("straggler_shed", dt=timer.dt)
-            now = time.monotonic()
-            for i in act:
-                s = self.slots[i]
-                self._pending_token.pop(i, None)
-                if verify_bad[i]:
-                    # numerical quarantine: ONLY the poisoned request fails
-                    # (sampling already saw zeroed logits, so neighbours'
-                    # streams are untouched)
-                    self._stats["nan_quarantined"] += 1
-                    self._finalize(i, s.req, RequestState.FAILED, results,
-                                   diagnostic=f"non-finite logits at decode "
-                                              f"step {step}")
-                    continue
-                if draft_bad is not None and draft_bad[i]:
-                    # poisoned draft, healthy verify: this round already fell
-                    # back to the non-speculative token for this slot
-                    self._stats["nan_draft_fallbacks"] += 1
-                lc = self.lifecycles.get(s.req.uid)
-                for tok in emitted[i]:
-                    if lc is not None and lc.first_token_t is None:
-                        lc.first_token_t = now
-                    s.generated.append(tok)
-                    s.pos += 1
-                    done = (tok == s.req.eos_id
-                            or len(s.generated) >= s.req.max_new_tokens
-                            or s.pos >= self.max_seq - 1)
-                    if done:
-                        # a burst stops at its first terminal token: the rest
-                        # of the accepted prefix is DROPPED, the slot (and
-                        # its paged blocks) frees this very step
-                        self._finalize(i, s.req, RequestState.DONE, results)
-                        break
-            if self._debug_invariants:
-                self.check_invariants()
-        self._stats["wall_s"] += time.perf_counter() - t0
-        return results
+                with self._span("device_sync"):
+                    jax.block_until_ready((toks_dev, bad_dev))
+                toks = np.asarray(toks_dev)  # ONE (B,) int32 host transfer
+                verify_bad = np.asarray(bad_dev)
+                draft_bad = None
+                emitted = {i: [int(toks[i])] for i in act}
+        self._count("decode_steps")
+        with self._span("commit"):
+            self._commit(act, emitted, draft_bad, verify_bad, step, results)
+        return timer.dt
+
+    def _commit(self, act: list[int], emitted, draft_bad, verify_bad,
+                step: int, results: dict[int, list[int]]) -> None:
+        """Apply one dispatch round's tokens: quarantine poisoned slots,
+        append accepted tokens (recording TTFT / inter-token gaps), finalize
+        completed requests."""
+        now = time.monotonic()
+        tr = self._tracer
+        ttft_hist = self.metrics.histogram("ttft_s")
+        itl_hist = self.metrics.histogram("itl_s")
+        for i in act:
+            s = self.slots[i]
+            self._pending_token.pop(i, None)
+            if verify_bad[i]:
+                # numerical quarantine: ONLY the poisoned request fails
+                # (sampling already saw zeroed logits, so neighbours'
+                # streams are untouched)
+                self._count("nan_quarantined")
+                if tr.enabled:
+                    tr.instant("nan_quarantine", cat="anomaly",
+                               track=f"req/{s.req.uid}",
+                               args={"uid": s.req.uid, "step": step})
+                self._finalize(i, s.req, RequestState.FAILED, results,
+                               diagnostic=f"non-finite logits at decode "
+                                          f"step {step}")
+                continue
+            if draft_bad is not None and draft_bad[i]:
+                # poisoned draft, healthy verify: this round already fell
+                # back to the non-speculative token for this slot
+                self._count("nan_draft_fallbacks")
+            lc = self.lifecycles.get(s.req.uid)
+            first_of_turn = True
+            for tok in emitted[i]:
+                if lc is not None and lc.first_token_t is None:
+                    lc.first_token_t = now
+                    ttft_hist.observe(now - lc.enqueued_t)
+                    if tr.enabled:
+                        tr.instant("first_token", cat="request",
+                                   track=f"req/{lc.uid}",
+                                   args={"uid": lc.uid,
+                                         "ttft_s": now - lc.enqueued_t})
+                if s.last_token_t is not None:
+                    # tokens of one speculative burst land together: only
+                    # the first gap of the turn is a real inter-token wait
+                    itl_hist.observe((now - s.last_token_t)
+                                     if first_of_turn else 0.0)
+                s.last_token_t = now
+                first_of_turn = False
+                s.generated.append(tok)
+                s.pos += 1
+                done = (tok == s.req.eos_id
+                        or len(s.generated) >= s.req.max_new_tokens
+                        or s.pos >= self.max_seq - 1)
+                if done:
+                    # a burst stops at its first terminal token: the rest
+                    # of the accepted prefix is DROPPED, the slot (and
+                    # its paged blocks) frees this very step
+                    self._finalize(i, s.req, RequestState.DONE, results)
+                    break
+
+    def _after_dispatch(self, step: int, dt: float) -> None:
+        """Post-dispatch bookkeeping: straggler latency signal -> shed one
+        speculation tier (floor K=1: only real pool pressure turns
+        speculation fully off), then the chaos harness's invariant sweep."""
+        if (self._straggler.observe(step, dt)
+                and self._shed_policy is not None
+                and self._shed_policy.straggler_sheds_spec
+                and self._k_live > 1
+                and self._set_live_k(self._spec_ladder[self._shed_tier + 1])):
+            self._shed_tier += 1
+            self._shed_event("straggler_shed", dt=dt)
+        if self._debug_invariants:
+            self.check_invariants()
 
     # -- debug invariants (DESIGN.md §14) ---------------------------------
     def check_invariants(self) -> None:
@@ -1159,15 +1336,25 @@ class ServeEngine:
     def stats(self) -> dict:
         """Counters plus a ``health`` section (latency + degradation state).
 
-        ``step_time_median_s`` / ``straggler_flagged`` surface the
-        StragglerMonitor's rolling view of the decode loop; ``shed_tier`` /
+        This is a VIEW over ``self.metrics`` (the registry is the source of
+        truth — see DESIGN.md §16), shaped exactly like the legacy ad-hoc
+        stats dict so existing callers keep working.
+
+        ``step_time_median_s`` is the median FULL loop turn (admission and
+        prefill turns included, agreeing with ``wall_s`` and the traced
+        phase spans); ``straggler_flagged`` still reflects the
+        StragglerMonitor's dispatch-only latency signal; ``shed_tier`` /
         ``speculate_live_k`` show where on the degradation ladder the engine
         currently sits (0 / configured K = full service).
         """
-        out = dict(self._stats)
-        out["shed_events"] = list(self._stats["shed_events"])
+        out = {k: int(self.metrics.counter(k).value) for k in _COUNTER_KEYS}
+        out["wall_s"] = self.metrics.counter("wall_s").value
+        out["shed_events"] = [dict(e) for e in self._shed_events]
+        step_hist = self.metrics.histogram("step_time_s")
         out["health"] = {
-            "step_time_median_s": self._straggler.median(),
+            "step_time_median_s": (step_hist.percentile(50)
+                                   if step_hist.count else 0.0),
+            "dispatch_time_median_s": self._straggler.median(),
             "straggler_flagged": len(self._straggler.flagged),
             "shed_tier": self._shed_tier,
             "speculate_live_k": self._k_live,
@@ -1175,7 +1362,51 @@ class ServeEngine:
             "active_slots": sum(not s.free for s in self.slots),
             "pool_available": self.pool.available if self.paged else None,
         }
+        for name in ("ttft_s", "itl_s"):
+            hist = self.metrics.histogram(name)
+            if hist.count:
+                out.setdefault("latency", {})[name] = hist.summary()
         return out
+
+    def trace_report(self) -> dict:
+        """Decompose traced decode-step wall time into the named phases.
+
+        Uses the ``phase/*`` histograms populated while the process-wide
+        tracer is enabled (each phase span feeds its histogram on exit) and
+        the ``traced_step_s`` parent-span histogram as the denominator.
+        ``attributed_fraction`` is the share of total step wall time covered
+        by named phases — the acceptance bar is >= 0.90 (the remainder is
+        loop glue between spans).
+        """
+        total_hist = self.metrics.histogram("traced_step_s")
+        total = total_hist.sum
+        phases = {}
+        attributed = 0.0
+        for name in _PHASE_NAMES:
+            h = self.metrics.get("phase/" + name)
+            if h is None or h.count == 0:
+                continue
+            phases[name] = {
+                "total_s": h.sum,
+                "count": h.count,
+                "mean_us": h.mean * 1e6,
+                "p99_us": h.percentile(99) * 1e6,
+                "fraction_of_step": (h.sum / total) if total else 0.0,
+            }
+            attributed += h.sum
+        report = {
+            "steps": total_hist.count,
+            "total_s": total,
+            "phases": dict(sorted(phases.items(),
+                                  key=lambda kv: -kv[1]["total_s"])),
+            "attributed_s": attributed,
+            "attributed_fraction": (attributed / total) if total else 0.0,
+            "unattributed_fraction": (1.0 - attributed / total) if total else 0.0,
+        }
+        if total_hist.count == 0:
+            report["note"] = ("no traced steps recorded — enable the tracer "
+                              "(repro.obs.trace.enable()) before run()")
+        return report
 
     # -- state accounting ----------------------------------------------------
     def state_container_bytes(self) -> int:

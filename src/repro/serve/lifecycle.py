@@ -92,6 +92,12 @@ class RequestLifecycle:
     tokens: list[int] = dataclasses.field(default_factory=list)
     diagnostic: str = ""
     history: list[tuple[str, float]] = dataclasses.field(default_factory=list)
+    #: optional ``fn(lifecycle, old_state, new_state, now, diagnostic)``
+    #: called after every validated transition — the serve engine hangs its
+    #: tracing off this hook so per-request span timelines key off the SAME
+    #: transitions the resource accounting does (DESIGN.md §16)
+    observer: object = dataclasses.field(default=None, repr=False,
+                                         compare=False)
 
     @property
     def terminal(self) -> bool:
@@ -107,6 +113,7 @@ class RequestLifecycle:
             raise LifecycleError(
                 f"request {self.uid}: illegal transition "
                 f"{self.state.value} -> {new.value}")
+        old = self.state
         self.state = new
         self.history.append((new.value, now))
         if diagnostic:
@@ -115,6 +122,8 @@ class RequestLifecycle:
             self.admitted_t = now
         elif new in TERMINAL_STATES:
             self.finished_t = now
+        if self.observer is not None:
+            self.observer(self, old, new, now, diagnostic)
 
     def expired(self, now: float) -> str | None:
         """Which budget (if any) this request has blown at ``now``."""

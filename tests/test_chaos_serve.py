@@ -395,3 +395,32 @@ class TestLifecycleMachine:
         assert set(SERVE_FAULT_SITES) == {
             "pool_exhaustion", "nan_logit", "nan_logit_draft",
             "append_failure", "artifact_mismatch"}
+
+
+# ---------------------------------------------------------------------------
+# observability must never perturb the serve path (DESIGN.md §16)
+# ---------------------------------------------------------------------------
+
+
+def test_traced_run_is_bitwise_identical(setup):
+    """Enabling the tracer changes ZERO tokens: spans time the loop, they
+    never reorder or re-trace it.  Run the speculative paged config (the
+    config with the most live machinery) traced and compare against the
+    untraced reference, with full invariant sweeps on."""
+    from repro.obs import trace as obs_trace
+
+    cfg, sp = setup
+    ref = _reference(cfg, sp, "paged-spec")
+    obs_trace.enable()
+    try:
+        eng = _engine(cfg, sp, "paged-spec", debug_invariants=True)
+        out = eng.run(_requests())
+    finally:
+        obs_trace.disable()
+    assert out == ref
+    tr = obs_trace.get_tracer()
+    assert any(e[1] == "step" for e in tr.events())          # phase spans
+    assert any(e[3].startswith("req/") for e in tr.events())  # lifecycle
+    obs_trace.validate_chrome_trace(tr.chrome_trace())
+    tr.clear()
+    _assert_clean(eng)

@@ -12,15 +12,23 @@ EXAMPLES = pathlib.Path(__file__).resolve().parents[1] / "examples"
 
 
 @pytest.mark.slow
-def test_budget_search_serve_tiny(capsys):
+def test_budget_search_serve_tiny(capsys, tmp_path):
     sys.path.insert(0, str(EXAMPLES))
     try:
         import budget_search_serve
     finally:
         sys.path.pop(0)
 
-    out_dir = budget_search_serve.main(["--tiny", "--paged", "--speculate"])
+    trace_path = tmp_path / "serve_trace.json"
+    out_dir = budget_search_serve.main(["--tiny", "--paged", "--speculate",
+                                        "--trace", str(trace_path)])
     stdout = capsys.readouterr().out
+    # --trace wrote a valid Perfetto document for the condition-3 serve
+    assert "traced:" in stdout
+    import json
+
+    from repro.obs.trace import validate_chrome_trace
+    validate_chrome_trace(json.loads(trace_path.read_text()))
     # all three conditions produced artifacts on disk
     for name in ("policy_memory_tight.json", "policy_latency_tight.json",
                  "policy_kv_budgeted.json"):

@@ -1,0 +1,367 @@
+"""Observability subsystem (DESIGN.md §16): tracer no-op fast path, span
+nesting + Chrome/Perfetto export schema, histogram percentiles, the engine's
+metrics-backed stats() view, per-request lifecycle spans for every terminal
+state, step-phase attribution, and the tracing-overhead guard."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import gemma_2b
+from repro.models import registry
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
+from repro.obs.trace import NOOP_SPAN, Tracer, validate_chrome_trace
+from repro.runtime.resilience import FailureInjector
+from repro.serve import Request, RequestState, ServeEngine
+
+
+@pytest.fixture(autouse=True)
+def _clean_global_tracer():
+    """Never leak an enabled process-wide tracer into other tests."""
+    yield
+    obs_trace.disable()
+    obs_trace.get_tracer().clear()
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = gemma_2b.CONFIG.reduced()
+    api = registry.get_api(cfg)
+    sp = api.unstack(api.init(cfg, jax.random.key(0)), cfg)
+    return cfg, sp
+
+
+def _engine(cfg, sp, **kw):
+    base = dict(max_slots=2, max_seq=64, prefill_pad=8, qimpl="xla")
+    base.update(kw)
+    return ServeEngine(cfg, sp, **base)
+
+
+def _requests(n=3, max_new=6, **kw):
+    return [Request(uid=i, prompt=[3 + i + j for j in range(4 + i)],
+                    max_new_tokens=max_new, **kw) for i in range(n)]
+
+
+def _events_on(tracer, track):
+    return [e for e in tracer.events() if e[3] == track]
+
+
+# ---------------------------------------------------------------------------
+# tracer
+# ---------------------------------------------------------------------------
+
+
+def test_disabled_tracer_is_noop_singleton():
+    t = Tracer()
+    assert not t.enabled
+    # every call site gets the SAME pre-allocated object: no per-call
+    # allocation on the disabled fast path
+    s1 = t.span("a", args={"x": 1})
+    s2 = t.span("b")
+    assert s1 is NOOP_SPAN and s2 is NOOP_SPAN
+    with s1:
+        s1.annotate(ignored=True)
+    t.instant("nope")
+    t.counter("nope", 1.0)
+    t.complete("nope", ts=0.0, dur=1.0)
+    assert t.events() == []
+
+
+def test_span_records_and_reenables_cleanly():
+    t = Tracer()
+    t.enable()
+    with t.span("outer", cat="phase", args={"k": 1}):
+        with t.span("inner"):
+            pass
+    t.disable()
+    with t.span("after-disable"):
+        pass
+    evs = t.events()
+    assert [e[1] for e in evs] == ["inner", "outer"]  # exit order
+    outer = evs[1]
+    inner = evs[0]
+    # nesting: inner's interval is contained in outer's
+    assert outer[4] <= inner[4]
+    assert inner[4] + inner[5] <= outer[4] + outer[5] + 1e-9
+
+
+def test_span_feeds_histogram():
+    t = Tracer()
+    t.enable()
+    h = obs_metrics.Histogram()
+    with t.span("timed", hist=h):
+        pass
+    assert h.count == 1 and h.sum > 0
+
+
+def test_chrome_trace_schema_and_tracks():
+    t = Tracer()
+    t.enable()
+    with t.span("phase_a", cat="phase", track="engine"):
+        t.instant("marker", track="req/7", args={"uid": 7})
+    t.counter("queue_depth", 3)
+    doc = t.chrome_trace()
+    validate_chrome_trace(doc)
+    names = {e["name"] for e in doc["traceEvents"]}
+    assert {"phase_a", "marker", "queue_depth", "process_name",
+            "thread_name"} <= names
+    # each distinct track becomes a named thread lane
+    lanes = {e["args"]["name"] for e in doc["traceEvents"]
+             if e["name"] == "thread_name"}
+    assert {"engine", "req/7", "counters"} <= lanes
+    # timestamps rebased to enable time: everything non-negative µs
+    assert all(e.get("ts", 0) >= 0 for e in doc["traceEvents"])
+
+
+def test_validate_rejects_malformed_docs():
+    with pytest.raises(ValueError):
+        validate_chrome_trace({"nope": []})
+    with pytest.raises(ValueError):
+        validate_chrome_trace(
+            {"traceEvents": [{"ph": "X", "name": "a", "pid": 0, "tid": 1,
+                              "ts": 0.0}]})  # X without dur
+    with pytest.raises(ValueError):
+        validate_chrome_trace(
+            {"traceEvents": [{"ph": "?", "name": "a", "pid": 0, "tid": 1,
+                              "ts": 0.0}]})
+
+
+def test_save_roundtrip(tmp_path):
+    t = Tracer()
+    t.enable()
+    with t.span("x"):
+        pass
+    path = tmp_path / "trace.json"
+    doc = t.save(str(path))
+    import json
+    assert json.loads(path.read_text()) == doc
+
+
+# ---------------------------------------------------------------------------
+# metrics
+# ---------------------------------------------------------------------------
+
+
+def test_counter_and_gauge():
+    reg = obs_metrics.MetricsRegistry()
+    c = reg.counter("done")
+    c.inc()
+    c.inc(2.5)
+    assert reg.counter("done") is c and c.value == 3.5
+    with pytest.raises(ValueError):
+        c.inc(-1)
+    g = reg.gauge("depth")
+    g.set(7)
+    assert g.value == 7.0
+    with pytest.raises(TypeError):
+        reg.gauge("done")  # kind mismatch
+
+
+def test_histogram_percentiles_uniform():
+    h = obs_metrics.Histogram(buckets=[float(x) for x in range(0, 1001, 10)])
+    vals = np.arange(1, 1001, dtype=float)
+    for v in vals:
+        h.observe(v)
+    # fine buckets + uniform data: interpolation lands near the exact rank
+    for p in (50, 90, 99):
+        exact = float(np.percentile(vals, p))
+        assert abs(h.percentile(p) - exact) <= 15.0, (p, h.percentile(p))
+    assert h.min == 1.0 and h.max == 1000.0
+    assert h.summary()["count"] == 1000
+
+
+def test_histogram_single_sample_is_exact():
+    h = obs_metrics.Histogram()
+    h.observe(0.003)
+    for p in (0, 50, 100):
+        assert h.percentile(p) == pytest.approx(0.003)
+    assert h.summary()["p99"] == pytest.approx(0.003)
+
+
+def test_histogram_empty_and_overflow():
+    h = obs_metrics.Histogram(buckets=[1.0, 2.0])
+    assert h.percentile(50) == 0.0 and h.summary()["count"] == 0
+    h.observe(50.0)  # overflow bucket
+    assert h.percentile(99) == pytest.approx(50.0)
+
+
+# ---------------------------------------------------------------------------
+# engine integration
+# ---------------------------------------------------------------------------
+
+
+def test_stats_view_is_metrics_backed(setup):
+    cfg, sp = setup
+    eng = _engine(cfg, sp)
+    out = eng.run(_requests())
+    st = eng.stats()
+    for key in ("prefill_tokens", "decode_steps", "loop_turns", "completed",
+                "failed", "cancelled", "timed_out", "wall_s", "shed_events",
+                "health"):
+        assert key in st, key
+    assert st["completed"] == 3 == len(out)
+    assert st["loop_turns"] >= st["decode_steps"] > 0
+    assert st["wall_s"] > 0
+    # the registry is the source of truth behind the view
+    assert st["decode_steps"] == int(eng.metrics.counter("decode_steps").value)
+    # the always-on step-time histogram covers EVERY loop turn (admission
+    # and prefill turns included), and feeds the health median
+    h = eng.metrics.histogram("step_time_s")
+    assert h.count == st["loop_turns"]
+    assert st["health"]["step_time_median_s"] == pytest.approx(
+        h.percentile(50))
+    # TTFT/ITL land unconditionally (tracing was never enabled here)
+    assert eng.metrics.histogram("ttft_s").count == 3
+    assert st["latency"]["ttft_s"]["count"] == 3
+
+
+def test_trace_report_attributes_step_time(setup):
+    cfg, sp = setup
+    eng = _engine(cfg, sp)
+    eng.run(_requests())          # warmup: compile outside the traced pass
+    obs_trace.enable()
+    eng.run(_requests(n=2))
+    obs_trace.disable()
+    rep = eng.trace_report()
+    assert rep["steps"] > 0
+    assert set(rep["phases"]) <= {"hook", "reap", "admission", "prep",
+                                  "dispatch", "device_sync", "commit",
+                                  "bookkeeping"}
+    assert "dispatch" in rep["phases"]
+    # acceptance bar: >= 90% of traced step wall time lands in named phases
+    assert rep["attributed_fraction"] >= 0.90, rep
+    assert rep["unattributed_fraction"] <= 0.10
+    fracs = [p["fraction_of_step"] for p in rep["phases"].values()]
+    assert abs(sum(fracs) - rep["attributed_fraction"]) < 1e-6
+
+
+def test_trace_report_notes_untraced_engine(setup):
+    cfg, sp = setup
+    eng = _engine(cfg, sp)
+    eng.run(_requests(n=1))
+    rep = eng.trace_report()
+    assert rep["steps"] == 0 and "note" in rep
+
+
+def test_lifecycle_spans_done(setup):
+    cfg, sp = setup
+    eng = _engine(cfg, sp)
+    obs_trace.enable()
+    eng.run(_requests(n=1))
+    tr = obs_trace.get_tracer()
+    evs = _events_on(tr, "req/0")
+    names = [e[1] for e in evs]
+    assert "submit" in names and "first_token" in names
+    # one closed span per traversed segment + the terminal instant
+    spans = [e[1] for e in evs if e[0] == "X"]
+    assert spans == ["queued", "prefill", "decode"]
+    assert names[-1] == "done"
+
+
+def test_lifecycle_spans_failed(setup):
+    cfg, sp = setup
+    inj = FailureInjector(schedule={"nan_logit": (1,)})
+    eng = _engine(cfg, sp, state_bits=8, fault_injector=inj)
+    obs_trace.enable()
+    eng.run(_requests(n=1))
+    assert eng.lifecycles[0].state is RequestState.FAILED
+    tr = obs_trace.get_tracer()
+    names = [e[1] for e in _events_on(tr, "req/0")]
+    assert "nan_quarantine" in names and names[-1] == "failed"
+
+
+def test_lifecycle_spans_cancelled(setup):
+    cfg, sp = setup
+    eng = _engine(cfg, sp)
+
+    def hook(engine, step):
+        engine.cancel(0)
+
+    obs_trace.enable()
+    eng.run(_requests(n=1, max_new=32), step_hook=hook)
+    assert eng.lifecycles[0].state is RequestState.CANCELLED
+    tr = obs_trace.get_tracer()
+    names = [e[1] for e in _events_on(tr, "req/0")]
+    assert names[-1] == "cancelled"
+
+
+def test_lifecycle_spans_timed_out(setup):
+    cfg, sp = setup
+    eng = _engine(cfg, sp)
+    obs_trace.enable()
+    eng.run([Request(uid=0, prompt=[3, 4, 5], max_new_tokens=4,
+                     deadline_s=0.0)])
+    assert eng.lifecycles[0].state is RequestState.TIMED_OUT
+    tr = obs_trace.get_tracer()
+    evs = _events_on(tr, "req/0")
+    # never admitted: the queued segment closes, then the terminal instant
+    assert [e[1] for e in evs if e[0] == "X"] == ["queued"]
+    assert [e[1] for e in evs][-1] == "timed_out"
+
+
+def test_lifecycle_spans_preempted_requeue(setup):
+    cfg, sp = setup
+    eng = _engine(cfg, sp, max_slots=1)
+    fired = []
+
+    def hook(engine, step):
+        if step == 3 and not fired:
+            fired.append(step)
+            engine.submit(Request(uid=100, prompt=[9, 9, 9],
+                                  max_new_tokens=4, priority=2))
+
+    obs_trace.enable()
+    out = eng.run(_requests(n=1, max_new=24), step_hook=hook)
+    assert eng.lifecycles[0].state is RequestState.DONE
+    assert eng.lifecycles[0].preemptions == 1
+    assert len(out[0]) == 24
+    tr = obs_trace.get_tracer()
+    evs = _events_on(tr, "req/0")
+    names = [e[1] for e in evs]
+    assert "requeued" in names
+    spans = [e[1] for e in evs if e[0] == "X"]
+    # the preempted request traverses decode twice around the re-queue
+    assert spans.count("decode") == 2 and spans.count("prefill") == 2
+    assert names[-1] == "done"
+
+
+def test_kernel_config_replay_traced(setup):
+    cfg, sp = setup
+    obs_trace.enable()
+    from repro.kernels import autotune
+    key = autotune.KernelKey(family="decode_step", k_bits=4, v_bits=4,
+                             heads=cfg.n_kv_heads,
+                             head_dim=cfg.resolved_head_dim, block=16,
+                             impl="xla")
+    autotune.autotune_key(key, batch=2, blocks=4, repeats=1)
+    tr = obs_trace.get_tracer()
+    names = [e[1] for e in _events_on(tr, "kernel")]
+    assert "autotune_candidate" in names and "autotune_winner" in names
+
+
+def test_tracing_overhead_bounded(setup):
+    """Tracing must stay cheap: generous bound (3x + slack) so a noisy CI
+    box never flakes, while a pathological per-span cost still fails."""
+    import time
+
+    cfg, sp = setup
+    eng = _engine(cfg, sp)
+    reqs = _requests(n=2, max_new=8)
+    eng.run(reqs)  # compile
+
+    def timed(traced):
+        if traced:
+            obs_trace.enable()
+        else:
+            obs_trace.disable()
+        best = float("inf")
+        for _ in range(3):
+            t0 = time.perf_counter()
+            eng.run(_requests(n=2, max_new=8))
+            best = min(best, time.perf_counter() - t0)
+        return best
+
+    untraced = timed(False)
+    traced = timed(True)
+    obs_trace.disable()
+    assert traced <= untraced * 3 + 0.05, (traced, untraced)
