@@ -18,6 +18,12 @@ same run yields a Chrome/Perfetto trace (``artifacts/latency_trace.json``,
 uploaded by CI) and the per-phase step decomposition of DESIGN.md §16 —
 and doubles as a standing check that tracing overhead stays negligible.
 
+A second, **mixed long x short** cell (DESIGN.md §17) replays a burst
+workload twice — whole-prompt admission vs chunked prefill under the
+per-step token budget — and records the short-request p99 TTFT of both
+arms plus their ratio: the headline evidence that chunking stops long
+prefills from stalling short requests' first tokens.
+
 Registered as the "latency" section of benchmarks/run.py.
 
     PYTHONPATH=src python -m benchmarks.latency [--full]
@@ -48,19 +54,37 @@ BENCH = dict(max_slots=4, max_seq=96, prefill_pad=16, bits=4, state_bits=4,
              max_new_tokens=16, load_frac=0.6, seed=0)
 N_REQUESTS = dict(fast=10, full=32)
 
+#: mixed long x short cell (DESIGN.md §17): a burst of short prompts
+#: arrives together with long ones, the exact workload whole-prompt
+#: admission is worst at — the shorts admit into the same padded prefill
+#: batch as the longs, so every short's first token waits on the full
+#: long-prompt quadratic prefill (head-of-line blocking).  One slot per
+#: request keeps queue wait out of the picture: the cell isolates the
+#: admission stall itself.  Run twice, without and with chunked prefill;
+#: the headline is the short-request p99 TTFT under chunking and the
+#: (machine-speed cancelling) improvement ratio.
+MIXED = dict(max_seq=576, prefill_pad=16, long_prompt=513,
+             short_lo=5, short_hi=12, long_every=4, prefill_chunk=32,
+             max_new_tokens=16)
+N_MIXED = dict(fast=8, full=16)
 
-def _build():
+
+def _params():
     cfg = gemma_2b.CONFIG.reduced()
     api = registry.get_api(cfg)
     params = api.init(cfg, jax.random.key(BENCH["seed"]))
     sp = api.unstack(params, cfg)
     policy = BitPolicy.uniform(qapply.layer_specs(params, cfg), BENCH["bits"])
-    qp = qapply.quantize_for_serve(sp, policy, cfg)
+    return cfg, qapply.quantize_for_serve(sp, policy, cfg)
+
+
+def _build():
+    cfg, qp = _params()
     eng = ServeEngine(cfg, qp, max_slots=BENCH["max_slots"],
                       max_seq=BENCH["max_seq"],
                       prefill_pad=BENCH["prefill_pad"], qimpl="xla",
                       state_bits=BENCH["state_bits"])
-    return cfg, eng
+    return cfg, qp, eng
 
 
 def _requests(cfg, n, uid_base=0, rng=None):
@@ -116,9 +140,93 @@ def _open_loop(cfg, eng, n: int, mean_gap_s: float) -> dict[int, list[int]]:
     return results
 
 
+def _mixed_requests(cfg, n, uid_base=0):
+    """Burst workload: every ``long_every``-th request is a long prompt,
+    the rest short, ALL enqueued at t=0 (uid order = FIFO order), so the
+    shorts' TTFT directly measures how admission handles a long prefill
+    in front of them."""
+    rng = np.random.default_rng(BENCH["seed"] + 2)
+    reqs, long_uids = [], set()
+    for i in range(n):
+        if i % MIXED["long_every"] == 0:
+            length = MIXED["long_prompt"]
+            long_uids.add(uid_base + i)
+        else:
+            length = int(rng.integers(MIXED["short_lo"], MIXED["short_hi"]))
+        reqs.append(Request(uid=uid_base + i,
+                            prompt=rng.integers(1, cfg.vocab_size,
+                                                length).tolist(),
+                            max_new_tokens=MIXED["max_new_tokens"]))
+    return reqs, long_uids
+
+
+def _mixed_arm(cfg, qp, n: int, chunked: bool) -> dict:
+    """One arm of the with/without-chunking comparison: identical engine
+    geometry and workload, the scheduler is the only variable."""
+    extra = {}
+    if chunked:
+        # budget with headroom over the floor: one long chunk AND a couple
+        # of whole short prompts per turn, so shorts never queue behind the
+        # long's chunk stream (the floor budget would trickle them out one
+        # per turn and hand the latency win right back)
+        extra = {"prefill_chunk": MIXED["prefill_chunk"],
+                 "step_token_budget": (n + MIXED["prefill_chunk"]
+                                       + 2 * MIXED["short_hi"])}
+    eng = ServeEngine(cfg, qp, max_slots=n, max_seq=MIXED["max_seq"],
+                      prefill_pad=MIXED["prefill_pad"], qimpl="xla",
+                      state_bits=BENCH["state_bits"], **extra)
+    warm, _ = _mixed_requests(cfg, n, uid_base=9000)
+    eng.run(warm)  # compile every admission/chunk/insert shape off-clock
+    reqs, long_uids = _mixed_requests(cfg, n)
+    eng.run(reqs)
+
+    def ttfts(uids):
+        vals = [eng.lifecycles[u].ttft() for u in uids
+                if eng.lifecycles[u].state is RequestState.DONE
+                and eng.lifecycles[u].ttft() is not None]
+        return sorted(vals)
+
+    shorts = ttfts([r.uid for r in reqs if r.uid not in long_uids])
+    longs = ttfts(sorted(long_uids))
+    done = sum(eng.lifecycles[r.uid].state is RequestState.DONE for r in reqs)
+    out = {
+        "short_ttft": {"p50_s": round(float(np.percentile(shorts, 50)), 4),
+                       "p99_s": round(float(np.percentile(shorts, 99)), 4)},
+        "long_ttft_p99_s": round(float(np.percentile(longs, 99)), 4),
+        "completion_rate": round(done / n, 3),
+    }
+    if chunked:
+        st = eng.stats()["scheduler"]
+        out["scheduler"] = {k: st[k] for k in
+                            ("prefill_chunk", "step_token_budget",
+                             "max_step_tokens", "chunk_tokens")}
+    return out
+
+
+def _run_mixed(cfg, qp, fast: bool) -> dict:
+    n = N_MIXED["fast" if fast else "full"]
+    arms = {"unchunked": _mixed_arm(cfg, qp, n, chunked=False),
+            "chunked": _mixed_arm(cfg, qp, n, chunked=True)}
+    p99_un = arms["unchunked"]["short_ttft"]["p99_s"]
+    p99_ch = arms["chunked"]["short_ttft"]["p99_s"]
+    return {
+        "workload": dict(n_requests=n, max_slots=n, arrival="burst at t=0",
+                         **{k: MIXED[k] for k in
+                            ("long_prompt", "long_every",
+                             "short_lo", "short_hi", "max_new_tokens")}),
+        "unchunked": arms["unchunked"],
+        "chunked": arms["chunked"],
+        # headline: short-request p99 TTFT with chunked prefill on, plus
+        # the dimensionless ratio (robust to CI machine speed)
+        "ttft": {"p99_s": p99_ch},
+        "improvement": {"short_ttft_p99_x":
+                        round(p99_un / p99_ch, 3) if p99_ch else None},
+    }
+
+
 def run(fast: bool = True) -> dict:
     n = N_REQUESTS["fast" if fast else "full"]
-    cfg, eng = _build()
+    cfg, _qp, eng = _build()
     steps_per_s = _capacity_steps_per_s(cfg, eng)
     # a request occupies a slot for ~max_new_tokens steps: full-occupancy
     # service rate, scaled down to the target utilisation
@@ -172,6 +280,7 @@ def run(fast: bool = True) -> dict:
             "events": len(doc_trace["traceEvents"]),
             "attributed_fraction": round(rep["attributed_fraction"], 4),
         },
+        "mixed": _run_mixed(cfg, _qp, fast),
     }
     with open(OUT_PATH, "w") as f:
         json.dump(doc, f, indent=1)
@@ -184,6 +293,11 @@ def run(fast: bool = True) -> dict:
     print(f"trace: {doc['trace']['events']} events -> {TRACE_PATH} "
           f"(step phases attributed "
           f"{rep['attributed_fraction'] * 100:.1f}%)")
+    mx = doc["mixed"]
+    print(f"mixed long x short: short-request TTFT p99 "
+          f"{mx['unchunked']['short_ttft']['p99_s']}s unchunked -> "
+          f"{mx['chunked']['short_ttft']['p99_s']}s chunked "
+          f"({mx['improvement']['short_ttft_p99_x']}x)")
     return doc
 
 

@@ -71,14 +71,20 @@ HEADLINES = {
                                ("kernel.dense.micros", "lower"),
                                ("overhead.fraction_of_step", "lower"),
                                ("phases.attributed_fraction", "higher")],
-    # open-loop wall-clock percentiles: tracked headlines, but (like the
-    # decode_step micros) NOT in the CI compare-baseline list — shared CI
-    # machines make absolute latency numbers too noisy to gate on
+    # open-loop wall-clock percentiles are tracked headlines; the compare
+    # GATE rides on the mixed-workload cell — its headline p99 and the
+    # (machine-speed cancelling) improvement ratio are what chunked
+    # prefill must keep delivering.  The single-cell absolute percentiles
+    # stay informational (see INFORMATIONAL below): they move with the
+    # machine, not the code.
     "BENCH_latency.json": [("ttft.p50_s", "lower"),
                            ("ttft.p99_s", "lower"),
                            ("itl.p50_s", "lower"),
                            ("itl.p99_s", "lower"),
-                           ("completion.rate", "higher")],
+                           ("completion.rate", "higher"),
+                           ("mixed.ttft.p99_s", "lower"),
+                           ("mixed.improvement.short_ttft_p99_x", "higher"),
+                           ("mixed.chunked.completion_rate", "higher")],
     "BENCH_speculative.json": [("acceptance.accepted_per_verify_step", "higher"),
                                ("steps_ratio", "higher"),
                                ("tokens_per_s_ratio", "higher")],
@@ -93,6 +99,17 @@ HEADLINES = {
 
 #: fractional move in the bad direction that fails --compare
 REGRESSION_TOLERANCE = 0.10
+
+#: headline keys --compare reports but never GATES on: absolute open-loop
+#: wall-clock percentiles track the machine the baseline was produced on,
+#: not the code.  BENCH_latency.json's gate rides on the mixed cell
+#: instead — its improvement ratio is dimensionless (both arms run in the
+#: same process on the same machine) and its headline p99 is the promoted
+#: chunked-prefill metric.
+INFORMATIONAL = {
+    "BENCH_latency.json": {"ttft.p50_s", "ttft.p99_s",
+                           "itl.p50_s", "itl.p99_s"},
+}
 
 
 def _dig(doc, dotted: str):
@@ -120,6 +137,7 @@ def compare(baseline_path: str) -> int:
         base = json.load(f)
     with open(current_path) as f:
         cur = json.load(f)
+    informational = INFORMATIONAL.get(name, set())
     failures = []
     print(f"comparing {name}: current vs baseline ({baseline_path})")
     for key, direction in specs:
@@ -133,10 +151,14 @@ def compare(baseline_path: str) -> int:
             continue
         change = (c - b) / abs(b) if b else (0.0 if c == b else float("inf"))
         bad = -change if direction == "higher" else change
-        flag = "REGRESSED" if bad > REGRESSION_TOLERANCE else "ok"
+        if bad > REGRESSION_TOLERANCE:
+            flag = ("drifted (informational)" if key in informational
+                    else "REGRESSED")
+        else:
+            flag = "ok"
         print(f"  {key:>42}: {b:g} -> {c:g}  ({change:+.1%}, {direction} "
               f"is better) {flag}")
-        if bad > REGRESSION_TOLERANCE:
+        if bad > REGRESSION_TOLERANCE and key not in informational:
             failures.append(key)
     if failures:
         print(f"REGRESSION (> {REGRESSION_TOLERANCE:.0%}) in: {failures}")

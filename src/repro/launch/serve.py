@@ -41,6 +41,14 @@ def main(argv=None) -> int:
                          "overrides --wbits")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--prefill-chunk", type=int, default=None, metavar="C",
+                    help="chunked-prefill continuous batching (DESIGN.md "
+                         "§17): prefill prompts in C-token pieces "
+                         "interleaved with decode turns")
+    ap.add_argument("--token-budget", type=int, default=None, metavar="N",
+                    help="per-step token budget shared by decode slots and "
+                         "prefill chunks (default: slots + prefill-chunk); "
+                         "requires --prefill-chunk")
     ap.add_argument("--trace", default=None, metavar="OUT.json",
                     help="record a Chrome/Perfetto trace of the whole serve "
                          "run (open at https://ui.perfetto.dev) and print "
@@ -100,7 +108,8 @@ def main(argv=None) -> int:
             for i in range(args.requests)]
     eng = ServeEngine(cfg, sp, max_slots=args.slots, max_seq=args.max_seq,
                       temperature=args.temperature, seed=args.seed,
-                      artifact=artifact)
+                      artifact=artifact, prefill_chunk=args.prefill_chunk,
+                      step_token_budget=args.token_budget)
     t0 = time.perf_counter()
     results = eng.run(reqs)
     dt = time.perf_counter() - t0

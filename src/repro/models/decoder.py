@@ -256,6 +256,68 @@ def prefill(params, cfg, tokens=None, embeds=None, *, qimpl="auto", lengths=None
     return logits, caches
 
 
+def init_prefill_scratch(cfg, seq: int, dtype=None) -> list[dict]:
+    """Per-layer fp K/V scratch carried across prefill chunks (one slot).
+
+    The chunked prefill never reads the (possibly quantized) decode state:
+    each chunk writes its fp K/V rows here and attends over the scratch, so
+    the rows that finally insert into the cache are computed from exactly
+    the same fp values a whole-prompt prefill would have produced — which is
+    what keeps chunked admission token-identical across fp / quantized /
+    paged caches (the quantizer runs once, at insert, on full fp rows).
+    """
+    hd = cfg.resolved_head_dim
+    dt = _dtype(cfg) if dtype is None else dtype
+    kv = lambda: jnp.zeros((1, seq, cfg.n_kv_heads, hd), dt)
+    return [{"k": kv(), "v": kv()} for _ in range(cfg.n_layers)]
+
+
+def prefill_chunk(params, cfg, scratch, tokens, offset, *, qimpl="auto"):
+    """One prefill chunk: tokens ``(1, C)`` at absolute positions
+    ``offset .. offset + C - 1`` -> updated scratch (see
+    :func:`init_prefill_scratch`).
+
+    Per layer: the chunk's K/V rows land in the scratch at ``offset`` and
+    the chunk's queries attend causally over the whole scratch with
+    ``q_offset=offset`` — rows below ``offset`` hold earlier chunks' K/V
+    bitwise, rows at/after ``offset + C`` are causally masked, so chunk
+    boundaries never change what any valid query position sees.  Logits are
+    not computed: the engine's first sampled token comes from the decode
+    step that replays the last prompt token (serve/engine.py admission).
+
+    ``offset`` may be a traced scalar — one compilation per (C, scratch
+    seq) shape pair, reused across chunks and requests.
+    """
+    x = embed_tokens(params, tokens, cfg)
+    b, c = x.shape[:2]
+    positions = layers.position_ids(b, c, cfg.rope) + offset
+    seq = scratch[0]["k"].shape[1]
+    # masked row write instead of dynamic_update_slice: the final (short)
+    # chunk of a prompt near the scratch end would otherwise be start-index
+    # CLAMPED onto earlier rows; here out-of-range rows simply keep the
+    # scratch value (and rows past the head zero at the engine's insert)
+    src = jnp.arange(seq) - offset                          # (S,)
+    take = ((src >= 0) & (src < c))[None, :, None, None]
+    src = jnp.clip(src, 0, c - 1)
+    new_scratch = []
+    for lp, buf in zip(params["layers"], scratch):
+        xn = layers.norm(lp["ln1"], x, cfg.norm, cfg.norm_eps)
+        q, k, v = layers._qkv(lp["attn"], xn, cfg, positions, qimpl=qimpl)
+        sk = jnp.where(take, k.astype(buf["k"].dtype)[:, src], buf["k"])
+        sv = jnp.where(take, v.astype(buf["v"].dtype)[:, src], buf["v"])
+        new_scratch.append({"k": sk, "v": sv})
+        o = layers._direct_attention(q, sk, sv, cfg.n_kv_heads, causal=True,
+                                     q_offset=offset)
+        o = layers.qdense(lp["attn"]["wo"], o.reshape(b, c, -1), qimpl=qimpl)
+        h = x + o
+        hn = layers.norm(lp["ln2"], h, cfg.norm, cfg.norm_eps)
+        if cfg.family == "moe":
+            x = h + moe.moe_mlp(lp["mlp"], hn, cfg, qimpl=qimpl)
+        else:
+            x = h + layers.mlp(lp["mlp"], hn, cfg.mlp, qimpl=qimpl)
+    return new_scratch
+
+
 def prefill_sp(params, cfg, tokens, *, mesh, qimpl="auto"):
     """Sequence-parallel prefill (EXPERIMENTS.md §Perf cell 2).
 

@@ -223,8 +223,14 @@ def _qkv_post(p, q, k, v, cfg, positions):
     return q, k, v
 
 
-def _direct_attention(q, k, v, n_kv, *, causal, window=0, kv_valid=None):
-    """Materialized-scores path (short sequences / decode)."""
+def _direct_attention(q, k, v, n_kv, *, causal, window=0, kv_valid=None,
+                      q_offset=None):
+    """Materialized-scores path (short sequences / decode).
+
+    ``q_offset``: absolute position of q row 0 (chunked prefill attends a
+    chunk of queries against a longer scratch KV whose row 0 is position 0);
+    default ``skv - sq`` — queries are the suffix of the keys.
+    """
     b, sq, hq, hd = q.shape
     skv = k.shape[1]
     g = hq // n_kv
@@ -238,11 +244,10 @@ def _direct_attention(q, k, v, n_kv, *, causal, window=0, kv_valid=None):
     q_pos = jnp.arange(sq)[:, None]
     k_pos = jnp.arange(skv)[None, :]
     mask = jnp.ones((sq, skv), bool)
+    off = (skv - sq) if q_offset is None else q_offset
     if causal:
-        off = skv - sq  # query i sits at absolute position off + i
-        mask &= k_pos <= (q_pos + off)
+        mask &= k_pos <= (q_pos + off)  # query i sits at absolute off + i
     if window:
-        off = skv - sq
         mask &= k_pos > (q_pos + off - window)
     if kv_valid is not None and kv_valid.ndim == 2:   # per-slot validity (B, skv)
         full = mask[None, None, None] & kv_valid[:, None, None, None, :]

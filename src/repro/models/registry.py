@@ -78,6 +78,15 @@ class ModelAPI:
     # (logits (B,T,V), state, burst_kv); None where the family's state cannot
     # rewind a burst (SSM/hybrid recurrent state, enc-dec cross-attention)
     decode_verify: Callable | None = None
+    # chunked prefill (serve/scheduler.py): (params, cfg, scratch,
+    # tokens (1,C), offset) -> scratch; carries fp K/V across chunks so a
+    # long prompt prefills in budgeted pieces interleaved with decode steps.
+    # None where the recurrent state cannot split a prefill bitwise
+    # (SSM/hybrid chunked-scan inter-chunk recurrence) — the engine falls
+    # back to prefix-recompute chunking for those families.
+    prefill_chunk: Callable | None = None
+    # (cfg, seq) -> per-layer scratch pytree for prefill_chunk (one slot)
+    init_prefill_scratch: Callable | None = None
 
 
 def _decoder_state(cfg, batch, seq, dtype=jnp.bfloat16, abstract=False, *,
@@ -126,6 +135,8 @@ _DECODER_API = ModelAPI(
     decode_step=decoder.decode_step,
     init_decode_state=_decoder_state,
     decode_verify=decoder.decode_verify,
+    prefill_chunk=decoder.prefill_chunk,
+    init_prefill_scratch=decoder.init_prefill_scratch,
 )
 
 _REGISTRY: dict[str, ModelAPI] = {

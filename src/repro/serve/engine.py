@@ -76,6 +76,7 @@ every loop turn.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import time
 from typing import Any
@@ -98,6 +99,7 @@ from repro.spec.draft import build_draft_params
 from .lifecycle import (LifecycleError, RequestLifecycle, RequestState,
                         ShedPolicy, spec_ladder)
 from .sampling import sample
+from .scheduler import ChunkScheduler, SchedulerConfig
 
 
 @dataclasses.dataclass
@@ -114,10 +116,15 @@ class Request:
 @dataclasses.dataclass
 class _Slot:
     req: Request | None = None
-    pos: int = 0                  # next write position
+    pos: int = 0                  # next write position (chunked prefill:
+                                  # head tokens prefilled so far)
     generated: list[int] = dataclasses.field(default_factory=list)
     #: monotonic time of the last committed token (inter-token latency)
     last_token_t: float | None = None
+    #: mid-chunked-prefill: the slot holds a request whose prompt is still
+    #: being prefilled in budgeted chunks (DESIGN.md §17); excluded from the
+    #: decode dispatch and (paged) its device table row is masked to -1
+    prefilling: bool = False
 
     @property
     def free(self) -> bool:
@@ -130,15 +137,17 @@ def _round_up(n: int, mult: int) -> int:
 
 #: integer counters the legacy ``stats()`` view exposes (wall_s rides as a
 #: float counter next to these)
-_COUNTER_KEYS = ("prefill_tokens", "decode_steps", "loop_turns", "completed",
+_COUNTER_KEYS = ("prefill_tokens", "prefill_chunks", "decode_steps",
+                 "loop_turns", "completed",
                  "spec_steps", "spec_proposed", "spec_accepted", "preemptions",
                  "failed", "cancelled", "timed_out", "nan_quarantined",
                  "nan_draft_fallbacks")
 
 #: step-phase span names in serve-loop order (DESIGN.md §16); ``hook`` only
-#: appears when a ``step_hook`` is installed
-_PHASE_NAMES = ("hook", "reap", "admission", "prep", "dispatch",
-                "device_sync", "commit", "bookkeeping")
+#: appears when a ``step_hook`` is installed, ``prefill_chunk`` only under
+#: chunked prefill (DESIGN.md §17)
+_PHASE_NAMES = ("hook", "reap", "admission", "prefill_chunk", "prep",
+                "dispatch", "device_sync", "commit", "bookkeeping")
 
 
 class ServeEngine:
@@ -154,7 +163,9 @@ class ServeEngine:
                  artifact: PolicyArtifact | None = None,
                  shed: ShedPolicy | None = ShedPolicy(),
                  fault_injector: FailureInjector | None = None,
-                 debug_invariants: bool = False):
+                 debug_invariants: bool = False,
+                 prefill_chunk: int | None = None,
+                 step_token_budget: int | None = None):
         if cfg.family in ("audio", "encdec"):
             raise NotImplementedError(
                 "enc-dec serving goes through registry.prefill/decode_step directly "
@@ -225,6 +236,33 @@ class ServeEngine:
         self.batch_admission = batch_admission
         self._key = jax.random.key(seed)
         self.slots = [_Slot() for _ in range(max_slots)]
+        # chunked-prefill continuous batching (DESIGN.md §17): prompts admit
+        # in the PREFILLING state and prefill in <= prefill_chunk pieces
+        # interleaved with decode turns under a per-step token budget
+        self.prefill_chunk = prefill_chunk
+        if prefill_chunk is not None:
+            if step_token_budget is None:
+                # tightest legal budget: a full decode house plus one chunk
+                step_token_budget = max_slots + prefill_chunk
+            self._scheduler = ChunkScheduler(
+                SchedulerConfig(prefill_chunk, step_token_budget), max_slots)
+        else:
+            if step_token_budget is not None:
+                raise ValueError("step_token_budget has no meaning without "
+                                 "prefill_chunk (chunked prefill disabled)")
+            self._scheduler = None
+        #: slot -> per-layer fp K/V scratch carried across chunks (decoder
+        #: families); quantization into the live cache happens ONCE at the
+        #: final insert, so the cache bytes match the unchunked path
+        self._scratch: dict[int, Any] = {}
+        #: slot -> padded head tokens (1, S_scr) kept for the whole prefill:
+        #: the SSM/hybrid prefix-recompute fallback re-prefills them each
+        #: chunk (lengths-masked), decoder finals index them for insertion
+        self._chunk_head: dict[int, np.ndarray] = {}
+        #: streaming front-end: uid -> on_token callback, plus the poll()
+        #: ring of (uid, token) committed since the last drain
+        self._on_token: dict[int, Any] = {}
+        self._token_events: collections.deque = collections.deque(maxlen=65536)
         # quantized decode state (DESIGN.md §11): explicit state_bits wins,
         # else a searched state policy rides in on the artifact
         if state_bits is None and artifact is not None:
@@ -350,6 +388,16 @@ class ServeEngine:
         # instead of silently keeping the init-time value.
         self._decode = jax.jit(decode, donate_argnums=(1,), static_argnums=(6, 7, 8))
         self._prefill = jax.jit(prefill)
+        # chunked prefill: one donated-scratch dispatch per chunk.  The
+        # offset rides as a traced scalar so every chunk of a prompt reuses
+        # ONE compilation per (scratch_len, chunk) shape pair.
+        if api.prefill_chunk is not None:
+            def chunk_step(params, scratch, tokens, offset):
+                return api.prefill_chunk(params, cfg_, scratch, tokens,
+                                         offset, qimpl=qimpl)
+            self._chunk_step = jax.jit(chunk_step, donate_argnums=(1,))
+        else:
+            self._chunk_step = None
 
     # -- autotuned kernel configs (DESIGN.md §15) --------------------------
     def _install_kernel_configs(self) -> None:
@@ -573,13 +621,25 @@ class ServeEngine:
 
     # -- paged block bookkeeping (DESIGN.md §12) --------------------------
     def _push_tables(self) -> None:
-        """Mirror the host block tables into every paged layer's device copy."""
+        """Mirror the host block tables into every paged layer's device copy.
+
+        Rows of slots still mid-chunked-prefill push as -1: their mapped
+        blocks hold no bytes until the final insert, and the lockstep decode
+        dispatch must keep appending those slots' (idle) writes into the
+        trash block instead of corrupting mapped-but-unwritten blocks.  The
+        real row pushes when the prefill completes (``_finish_prefill`` sets
+        ``_tables_dirty``).
+        """
         if not self._tables_dirty:
             return
+        tbl = self._host_tables
+        masked = [i for i, s in enumerate(self.slots) if s.prefilling]
+        if masked:
+            tbl = tbl.copy()
+            tbl[masked] = -1
         # one device copy PER layer: the decode step donates the state, and
         # donation rejects the same buffer appearing in two arguments
-        self.state = [kvcache.paged.with_table(layer,
-                                               jnp.asarray(self._host_tables))
+        self.state = [kvcache.paged.with_table(layer, jnp.asarray(tbl))
                       for layer in self.state]
         self._tables_dirty = False
 
@@ -616,7 +676,9 @@ class ServeEngine:
         donor, common = None, 0
         if self.share_prefix:
             for other, slot in enumerate(self.slots):
-                if other == slot_id or slot.free:
+                # a prefilling slot cannot donate: its mapped blocks hold no
+                # pool bytes until the final scratch insert lands
+                if other == slot_id or slot.free or slot.prefilling:
                     continue
                 lcp = 0
                 for a, b in zip(prompt, slot.req.prompt):
@@ -655,6 +717,33 @@ class ServeEngine:
         self._reserved[slot_id] = growth
         self._shared_blocks[slot_id] = shared
         self._tables_dirty = True
+        return True
+
+    def _map_chunked_blocks(self, slot_id: int, req: Request) -> bool:
+        """Reserve a chunked admission's ENTIRE block need upfront; map
+        nothing yet.
+
+        Chunked slots take no shared-prefix donors (their bytes land only at
+        the final insert, so there is nothing to compare against), so the
+        whole span — head blocks plus decode growth plus burst headroom,
+        the same ``last_pos`` formula as ``_map_slot_blocks`` — is a plain
+        reservation.  Each chunk then maps its fully-filled blocks via
+        ``_grow_alloc`` (reservation -> mapped, one ledger), which keeps
+        ``_reserved[slot] == _required_growth(slot, k)`` exact at every
+        progress point with NO resync — ``check_invariants`` is unchanged.
+        Returns False (nothing touched) when the pool cannot cover the span.
+        """
+        blk = self._kv_blk
+        length = len(req.prompt)
+        last_pos = min(max(length - 1, length - 2 + req.max_new_tokens),
+                       self.max_seq - 2)
+        last_pos = min(last_pos + self._k_live, self.max_seq - 1)
+        total = last_pos // blk + 1
+        if self.pool.available < total:
+            return False
+        self.pool.reserve(total)
+        self._reserved[slot_id] = total
+        self._shared_blocks[slot_id] = set()
         return True
 
     def _grow_alloc(self, slot_id: int) -> int:
@@ -819,6 +908,7 @@ class ServeEngine:
                           diagnostic="preempted under pool pressure")
             lc.preemptions += 1
             lc.resume_tokens.extend(s.generated)
+            lc.prefill_progress = 0  # a mid-chunk victim restarts its prefill
         self._count("preemptions")
         self._shed_event("preempt", uid=req.uid, at_tokens=len(s.generated))
         resumed = dataclasses.replace(
@@ -828,10 +918,16 @@ class ServeEngine:
         self._queue.append(resumed)
 
     # -- lifecycle bookkeeping (serve/lifecycle.py) -----------------------
-    def submit(self, req: Request) -> RequestLifecycle:
+    def submit(self, req: Request, on_token=None) -> RequestLifecycle:
         """Enqueue a request (usable mid-``run`` from a step hook).  Creates
         the lifecycle record; admission order is priority-first, FIFO within
-        a priority class."""
+        a priority class.
+
+        ``on_token(uid, token)`` — optional streaming callback, fired from
+        the commit phase for every token the moment it commits (speculative
+        burst tokens fire individually, in order).  Tokens also land in the
+        ``poll()`` ring regardless of whether a callback is installed.
+        """
         lc = RequestLifecycle(uid=req.uid, priority=req.priority,
                               deadline_s=req.deadline_s,
                               ttft_budget_s=req.ttft_budget_s,
@@ -849,8 +945,17 @@ class ServeEngine:
                              "prompt_tokens": len(req.prompt),
                              "max_new_tokens": req.max_new_tokens})
         self.lifecycles[req.uid] = lc
+        if on_token is not None:
+            self._on_token[req.uid] = on_token
         self._queue.append(req)
         return lc
+
+    def poll(self):
+        """Drain committed-but-unread tokens: yields ``(uid, token)`` in
+        commit order.  Call between ``run()`` invocations or from a step
+        hook mid-run; the ring keeps the most recent 65536 events."""
+        while self._token_events:
+            yield self._token_events.popleft()
 
     def cancel(self, uid: int) -> None:
         """Request cancellation; takes effect at the next loop turn (the
@@ -864,6 +969,8 @@ class ServeEngine:
             self._free_slot_blocks(slot_id)
         self.slots[slot_id] = _Slot()
         self._pending_token.pop(slot_id, None)
+        self._scratch.pop(slot_id, None)
+        self._chunk_head.pop(slot_id, None)
 
     def _finalize(self, slot_id: int | None, req: Request,
                   state: RequestState, results: dict[int, list[int]],
@@ -884,6 +991,7 @@ class ServeEngine:
             results[req.uid] = gen
         if slot_id is not None:
             self._release_slot(slot_id)
+        self._on_token.pop(req.uid, None)
         self._count({RequestState.DONE: "completed",
                      RequestState.FAILED: "failed",
                      RequestState.CANCELLED: "cancelled",
@@ -973,7 +1081,38 @@ class ServeEngine:
                 lc.transition(RequestState.PREFILL, now)
             slot = self.slots[slot_id]
             slot.req, slot.generated = req, []
-            slot.pos = len(prompt) - 1
+            w = len(prompt) - 1
+            if self._scheduler is not None and w >= 1:
+                # chunked admission (DESIGN.md §17): the slot enters the
+                # PREFILLING state with zero progress; the scheduler feeds
+                # its head to the model chunk-by-chunk across loop turns,
+                # and the request stays in lifecycle PREFILL until the final
+                # chunk inserts.  No pending replay token yet — that is what
+                # keeps the slot out of the decode dispatch.
+                slot.pos = 0
+                slot.prefilling = True
+                if self.paged and not self._map_chunked_blocks(slot_id, req):
+                    self.slots[slot_id] = _Slot()
+                    if lc is not None:
+                        lc.transition(RequestState.QUEUED, now)
+                    rejected.append(req)
+                    continue
+                pad = min(_round_up(w, self.prefill_pad), self.max_seq)
+                head = np.zeros((1, pad), np.int32)
+                head[0, :w] = prompt[:-1]
+                self._chunk_head[slot_id] = head
+                if self.api.init_prefill_scratch is not None:
+                    self._scratch[slot_id] = self.api.init_prefill_scratch(
+                        self.cfg, pad)
+                continue
+            slot.pos = w
+            if w == 0 and self.api.prefill_chunk is None:
+                # length-1 prompts run no prefill; attention caches are
+                # causal-masked so stale rows never leak, but SSM/hybrid
+                # recurrent state is NOT position-masked — zero the slot's
+                # rows so the request decodes from the initial state instead
+                # of the previous occupant's leftovers
+                self._reset_recurrent_rows(slot_id)
             if self.paged and not self._map_slot_blocks(slot_id, req):
                 self.slots[slot_id] = _Slot()
                 if lc is not None:   # pool too full: back to the queue
@@ -1006,6 +1145,109 @@ class ServeEngine:
             if lc is not None:
                 lc.transition(RequestState.DECODE, now)
         return rejected
+
+    def _reset_recurrent_rows(self, slot_id: int) -> None:
+        """Zero one slot's rows across every plain-array state leaf.
+
+        Used for length-1 prompt admissions on recurrent families (see
+        ``_admit``): quantized KV containers are skipped (attention is
+        causal; their stale rows are already masked), every dense leaf with
+        a leading slot axis zeroes its row.
+        """
+        def zero_row(leaf):
+            if (isinstance(leaf, jax.Array) and leaf.ndim
+                    and leaf.shape[0] == self.max_slots):
+                return leaf.at[slot_id].set(jnp.zeros_like(leaf[slot_id]))
+            return leaf
+        self.state = jax.tree.map(
+            zero_row, self.state,
+            is_leaf=lambda x: isinstance(x, (kvcache.QuantizedKVLayer,
+                                             kvcache.PagedKVLayer)))
+
+    # -- chunked prefill (DESIGN.md §17) ----------------------------------
+    def _run_chunks(self, n_decode: int) -> None:
+        """Run this turn's budgeted prefill chunks (scheduler-planned).
+
+        Decoder families carry fp K/V scratch across chunks (one donated
+        dispatch per chunk, attention offset into the scratch); SSM/hybrid
+        fall back to prefix recompute — the whole padded head re-prefills
+        with ``lengths=[progress]`` each chunk and only the final (full-
+        length) state is kept, trading quadratic total compute for the
+        same bounded-stall interleaving.  Either way the live cache/state
+        is only written at the final insert, with the SAME insert path and
+        valid-length masking as an unchunked admission.
+        """
+        prefilling = [(i, len(s.req.prompt) - 1 - s.pos)
+                      for i, s in enumerate(self.slots)
+                      if not s.free and s.prefilling]
+        plan = self._scheduler.plan(self._nsteps(), n_decode, prefilling)
+        blk = self._kv_blk if self.paged else 0
+        for slot_id, n in plan:
+            s = self.slots[slot_id]
+            req = s.req
+            w = len(req.prompt) - 1
+            p = s.pos
+            with self._span("prefill_chunk", uid=req.uid, offset=p, n=n):
+                if self._chunk_step is not None:
+                    c = self.prefill_chunk
+                    toks = np.zeros((1, c), np.int32)
+                    toks[0, :n] = req.prompt[p:p + n]
+                    self._scratch[slot_id] = self._chunk_step(
+                        self.params, self._scratch[slot_id],
+                        jnp.asarray(toks), jnp.asarray(p, jnp.int32))
+                    st = self._scratch[slot_id]
+                else:
+                    # prefix recompute: lengths masks tokens past progress
+                    # out of the recurrent-state update, so ONE compiled
+                    # shape serves every chunk of this prompt
+                    st = self._prefill(self.params,
+                                       jnp.asarray(self._chunk_head[slot_id]),
+                                       jnp.asarray([p + n], jnp.int32))
+                jax.block_until_ready(st)
+            s.pos = p + n
+            self._count("prefill_tokens", n)
+            self._count("prefill_chunks")
+            lc = self.lifecycles.get(req.uid)
+            if lc is not None:
+                lc.prefill_progress = s.pos
+            if self.paged:
+                # map the blocks this chunk fully filled against the
+                # admission-time reservation; the partial block stays
+                # unmapped so the reservation ledger keeps matching
+                # _required_growth exactly (and the zero-beyond-write probe
+                # never reads a mapped-but-unwritten block)
+                for tb in range(p // blk, s.pos // blk):
+                    self._host_tables[slot_id, tb] = self._grow_alloc(slot_id)
+            if s.pos >= w:
+                self._finish_prefill(slot_id, st)
+
+    def _finish_prefill(self, slot_id: int, st) -> None:
+        """Final chunk landed: insert the carried state into the live cache
+        and hand the slot to the decode dispatch (THIS turn — the caller
+        recomputes the active set after the chunk phase, and the plan
+        already charged this slot's first decode token)."""
+        s = self.slots[slot_id]
+        prompt = s.req.prompt
+        w = len(prompt) - 1
+        lengths = jnp.asarray([w], jnp.int32)
+        if self.paged:
+            blk = self._kv_blk
+            for tb in range((w - 1) // blk + 1):
+                if self._host_tables[slot_id, tb] < 0:
+                    self._host_tables[slot_id, tb] = self._grow_alloc(slot_id)
+            pad = self._chunk_head[slot_id].shape[1]
+            self._insert_rows_paged([(slot_id, prompt[:-1])], st, lengths, pad)
+            self._tables_dirty = True  # real row replaces the -1 mask
+        else:
+            self._insert_rows([slot_id], st, lengths)
+        s.prefilling = False
+        s.pos = w
+        self._pending_token[slot_id] = prompt[-1]  # replayed next step
+        self._scratch.pop(slot_id, None)
+        self._chunk_head.pop(slot_id, None)
+        lc = self.lifecycles.get(s.req.uid)
+        if lc is not None:
+            lc.transition(RequestState.DECODE, time.monotonic())
 
     # -- main loop -----------------------------------------------------------
     def run(self, requests: list[Request] = (), *,
@@ -1067,6 +1309,13 @@ class ServeEngine:
     def _active(self) -> list[int]:
         return [i for i, s in enumerate(self.slots) if not s.free]
 
+    def _decode_active(self) -> list[int]:
+        """Slots the decode dispatch steps this turn: active and NOT still
+        mid-chunked-prefill (a prefill finishing this turn decodes from the
+        NEXT turn, so the scheduler's per-turn token accounting is exact)."""
+        return [i for i, s in enumerate(self.slots)
+                if not s.free and not s.prefilling]
+
     def _turn(self, results: dict[int, list[int]], tokens_h, pos_h,
               step_hook) -> float | None:
         """One serve-loop turn, decomposed into the named step phases
@@ -1121,8 +1370,20 @@ class ServeEngine:
                 self._preempt_for(self._queue)
             else:
                 self._relax_shed()
-        act = self._active()
+        act = self._decode_active()
+        if self._scheduler is not None:
+            # budgeted prefill chunks interleave with this turn's decode:
+            # decode slots are charged first (they never wait on prefill),
+            # chunks fill the remaining per-step token budget.  A slot whose
+            # FINAL chunk lands joins this very turn's dispatch (its +1
+            # decode charge is part of the chunk's planned cost): the insert
+            # and the slot's entry into the lockstep step are atomic, so no
+            # idle-slot write can ever land on freshly inserted rows.
+            self._run_chunks(len(act))
+            act = self._decode_active()
         if not act:
+            if self._debug_invariants:
+                self.check_invariants()  # pure-prefill turns sweep too
             return None
         if self.paged and self._fault("append_failure"):
             # the slot's paged append bookkeeping died: quarantine that
@@ -1132,7 +1393,7 @@ class ServeEngine:
                            RequestState.FAILED, results,
                            diagnostic="paged append bookkeeping failure "
                                       "(injected fault)")
-            act = self._active()
+            act = self._decode_active()
             if not act:
                 return None
         k_eff = self._burst_len(act) if self._k_live else 0
@@ -1228,6 +1489,13 @@ class ServeEngine:
                 first_of_turn = False
                 s.generated.append(tok)
                 s.pos += 1
+                # streaming front-end: the commit IS the observable event
+                # (TTFT above is the first COMMITTED token, not a prefill
+                # chunk landing)
+                self._token_events.append((s.req.uid, tok))
+                cb = self._on_token.get(s.req.uid)
+                if cb is not None:
+                    cb(s.req.uid, tok)
                 done = (tok == s.req.eos_id
                         or len(s.generated) >= s.req.max_new_tokens
                         or s.pos >= self.max_seq - 1)
@@ -1360,8 +1628,20 @@ class ServeEngine:
             "speculate_live_k": self._k_live,
             "queue_depth": len(self._queue),
             "active_slots": sum(not s.free for s in self.slots),
+            "prefilling_slots": sum(s.prefilling for s in self.slots),
             "pool_available": self.pool.available if self.paged else None,
         }
+        if self._scheduler is not None:
+            recs = self._scheduler.records
+            out["scheduler"] = {
+                "prefill_chunk": self.prefill_chunk,
+                "step_token_budget": self._scheduler.cfg.step_token_budget,
+                "planned_turns": len(recs),
+                "chunk_tokens": sum(r.chunk_tokens for r in recs),
+                "max_step_tokens": max(
+                    (r.decode_tokens + r.chunk_tokens + r.finish_tokens
+                     for r in recs), default=0),
+            }
         for name in ("ttft_s", "itl_s"):
             hist = self.metrics.histogram(name)
             if hist.count:

@@ -8,8 +8,16 @@ The engine used to know exactly two request fates: "still running" and
        |         |          |---> CANCELLED   (explicit engine.cancel)
        |         |          |---> TIMED_OUT   (deadline / TTFT budget)
        |         |          '---> QUEUED      (preempted under pool pressure)
-       |         '--> QUEUED                  (admission rejected: pool full)
+       |         '--> QUEUED                  (admission rejected: pool full,
+       |                                       or preempted mid-chunk)
        '--> CANCELLED | TIMED_OUT             (never admitted)
+
+Under chunked prefill (DESIGN.md §17) PREFILL is not one atomic turn: the
+request stays in PREFILL across every budgeted chunk, ``prefill_progress``
+counting the head tokens landed so far, and every PREFILL edge above is
+valid *between chunks* — cancel/deadline/preemption mid-chunk free the
+partial scratch, blocks and reservations through the same exactly-once
+finalization as any resident request.
 
 ``RequestLifecycle`` is the per-request record: every transition is
 validated against the edges above and timestamped, terminal states are
@@ -84,6 +92,10 @@ class RequestLifecycle:
     first_token_t: float | None = None
     finished_t: float | None = None
     preemptions: int = 0
+    #: chunked prefill (DESIGN.md §17): head tokens prefilled so far — the
+    #: PREFILLING(progress) notion; stays 0 for whole-prompt admissions and
+    #: resets with the request if a preemption sends it back to QUEUED
+    prefill_progress: int = 0
     #: tokens generated before the most recent preemption; the resumed
     #: request replays them as prompt suffix, and the final stream is
     #: ``resume_tokens + generated``

@@ -24,6 +24,14 @@ different path than incremental decode appends, so the resumed stream is
 correct-length greedy decode but not bit-identical to an uninterrupted run
 (the same reason dense-vs-paged parity needs identical write paths).
 
+Chunked prefill (DESIGN.md §17) multiplies the fault surface: a request
+can now be hit while its prompt is half-prefilled, between two chunks.
+The ``paged-chunked`` config runs the randomized matrix over that state,
+and the deterministic mid-chunk tests pin each fault site individually
+(cancel / deadline / preemption / pool exhaustion against a PREFILLING
+slot) — in every case resources are freed exactly once and untouched
+requests stay bitwise identical to a chunk-free reference run.
+
 Seeds come from ``CHAOS_SEEDS`` (comma-separated, default "0") so CI can
 fan a matrix across processes without touching the test body.
 """
@@ -57,6 +65,10 @@ CONFIGS = {
     "paged": {"state_bits": 4, "paged": True, "pool_blocks": 10},
     "paged-spec": {"state_bits": 4, "paged": True, "pool_blocks": 12,
                    "speculate": 2, "draft_policy": 4},
+    # chunked prefill (DESIGN.md §17): every fault can now also land while
+    # a slot is mid-prefill, between two chunks
+    "paged-chunked": {"state_bits": 4, "paged": True, "pool_blocks": 10,
+                      "prefill_chunk": 3},
 }
 
 
@@ -334,6 +346,135 @@ def test_submit_rejects_live_duplicate_uid(setup):
     # terminal uid may be resubmitted (fresh lifecycle record)
     eng.submit(Request(uid=7, prompt=[1, 2], max_new_tokens=2))
     eng.run()
+
+
+# ---------------------------------------------------------------------------
+# mid-chunk fault sites (DESIGN.md §17): every PREFILL-state edge is valid
+# BETWEEN two chunks of the same prompt
+# ---------------------------------------------------------------------------
+
+
+def _chunked_ref(cfg, sp):
+    """Chunk-free reference for the paged-chunked config (same cache
+    geometry, whole-prompt admission)."""
+    return _engine(cfg, sp, "paged-chunked", prefill_chunk=None).run(
+        _requests())
+
+
+def _mid_chunk(engine, uid):
+    """True while ``uid`` is resident with a half-prefilled prompt."""
+    lc = engine.lifecycles.get(uid)
+    return (lc is not None and lc.state is RequestState.PREFILL
+            and 0 < lc.prefill_progress < len(PROMPTS[uid]) - 1)
+
+
+def test_cancel_mid_chunk_frees_exactly_once(setup):
+    cfg, sp = setup
+    ref = _chunked_ref(cfg, sp)
+    eng = _engine(cfg, sp, "paged-chunked", debug_invariants=True)
+    hit = []
+
+    def hook(engine, step):
+        if not hit and _mid_chunk(engine, 2):
+            hit.append(engine.lifecycles[2].prefill_progress)
+            engine.cancel(2)
+
+    out = eng.run(_requests(), step_hook=hook)
+    assert hit, "uid 2 (11-token prompt) never observed mid-chunk"
+    lc = eng.lifecycles[2]
+    assert lc.state is RequestState.CANCELLED
+    assert out[2] == []  # cancelled before its first committed token
+    for uid in PROMPTS:
+        if uid != 2:  # neighbours untouched: bitwise identical
+            assert out[uid] == ref[uid]
+            assert eng.lifecycles[uid].state is RequestState.DONE
+    assert eng.stats()["cancelled"] == 1
+    _assert_clean(eng)
+
+
+def test_deadline_mid_chunk_reaps_the_prefilling_slot(setup):
+    cfg, sp = setup
+    ref = _chunked_ref(cfg, sp)
+    eng = _engine(cfg, sp, "paged-chunked", debug_invariants=True)
+    hit = []
+
+    def hook(engine, step):
+        if not hit and _mid_chunk(engine, 2):
+            # deterministic expiry injection: blow the budget the moment
+            # the prompt is half-prefilled, so the next reap fires between
+            # two chunks (a wall-clock deadline here would be flaky)
+            hit.append(step)
+            engine.lifecycles[2].deadline_s = 1e-9
+
+    out = eng.run(_requests(), step_hook=hook)
+    assert hit
+    lc = eng.lifecycles[2]
+    assert lc.state is RequestState.TIMED_OUT and out[2] == []
+    assert "deadline" in lc.diagnostic
+    for uid in PROMPTS:
+        if uid != 2:
+            assert out[uid] == ref[uid]
+    assert eng.stats()["timed_out"] == 1
+    _assert_clean(eng)
+
+
+def test_preempt_mid_chunk_restarts_prefill(setup):
+    """A priority waiter evicts a resident that is still mid-prefill: the
+    victim's progress is discarded (prefill_progress back to 0), it
+    requeues, replays its whole prompt and still finishes its full budget
+    bitwise-identically (no tokens had committed, so nothing to carry)."""
+    cfg, sp = setup
+    ref = _chunked_ref(cfg, sp)
+    eng = _engine(cfg, sp, "paged-chunked", debug_invariants=True)
+    hi = Request(uid=4, prompt=PROMPTS[4], max_new_tokens=MAX_NEW, priority=5)
+
+    def hook(engine, step):
+        if 4 not in engine.lifecycles and any(
+                _mid_chunk(engine, u) for u in PROMPTS):
+            engine.submit(hi)
+
+    out = eng.run([Request(uid=u, prompt=PROMPTS[u], max_new_tokens=MAX_NEW)
+                   for u in range(3)], step_hook=hook)
+    assert eng.stats()["preemptions"] >= 1
+    victims = [u for u, lc in eng.lifecycles.items() if lc.preemptions > 0]
+    assert victims and 4 not in victims
+    assert out[4] == ref[4]
+    for u in victims:
+        lc = eng.lifecycles[u]
+        assert lc.state is RequestState.DONE and len(out[u]) == MAX_NEW
+        assert out[u][: len(lc.resume_tokens)] == lc.resume_tokens
+        if not lc.resume_tokens:
+            # evicted before any token committed: the replayed run is a
+            # fresh prefill, so the stream is fully bitwise identical
+            assert out[u] == ref[u]
+    _assert_clean(eng)
+
+
+def test_pool_exhaustion_between_chunks_requeues(setup):
+    """Chunked paged admission reserves a prompt's WHOLE block footprint up
+    front (no prefix sharing mid-prefill), so a pool that fits two long
+    residents but not three must serialize the third request — requeued,
+    not corrupted — while resident prefills keep chunking."""
+    cfg, sp = setup
+    def long_reqs():  # 2 blocks each under block=16; a pool of 4 fits two
+        return [Request(uid=u, prompt=[u + 1] * 11, max_new_tokens=MAX_NEW)
+                for u in range(3)]
+
+    ref = _engine(cfg, sp, "paged-chunked", prefill_chunk=None,
+                  pool_blocks=4).run(long_reqs())
+    eng = _engine(cfg, sp, "paged-chunked", pool_blocks=4,
+                  debug_invariants=True)
+    resident_high = []
+
+    def hook(engine, step):
+        resident_high.append(sum(not s.free for s in engine.slots))
+
+    out = eng.run(long_reqs(), step_hook=hook)
+    assert max(resident_high) == 2  # the pool really did gate admission
+    assert all(eng.lifecycles[u].state is RequestState.DONE for u in range(3))
+    for u in range(3):
+        assert out[u] == ref[u]
+    _assert_clean(eng)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,289 @@
+"""Scheduler-equivalence harness for chunked-prefill continuous batching
+(DESIGN.md §17).
+
+The load-bearing claim: splitting a prompt's prefill into ``C``-token
+chunks interleaved with decode turns changes SCHEDULING ONLY — every
+request's token stream is bitwise identical to the whole-prompt engine,
+across fp / quantized-dense / paged caches and decoder / ssm / hybrid
+families, for chunk sizes 1, prime, and >= the longest prompt, over
+variable-length batches (including length-1 prompts, which run no prefill
+at all).
+
+The accounting surface is ``engine._scheduler.records`` (one
+:class:`SchedRecord` per loop turn), on which the budget invariants are
+asserted directly:
+
+  * ``decode_tokens + chunk_tokens + finish_tokens <= step_token_budget``
+    on EVERY turn (the per-step token budget is never exceeded);
+  * decode is charged before any chunk is granted, so decode never
+    starves behind a prefill backlog (starvation bound: 0 turns — any
+    turn that granted chunk tokens still stepped every active decode
+    slot).
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import gemma_2b, mamba2_2p7b, zamba2_2p7b
+from repro.models import registry
+from repro.serve import ChunkScheduler, Request, SchedulerConfig, ServeEngine
+
+MAX_NEW = 8
+# variable lengths: shared prefix (paged CoW), a length-1 prompt (no
+# prefill work at all) and a long prompt (several chunks at small C)
+PROMPTS = {
+    0: [9] * 11,
+    1: [2, 3, 4],
+    2: [5, 6, 7, 8, 1, 2, 3],
+    3: [7],
+    4: [5, 6, 7, 9, 4],
+    5: list(range(1, 32)),
+}
+
+CONFIGS = {
+    "fp": {},
+    "quant-dense": {"state_bits": 8},
+    "paged": {"state_bits": 4, "paged": True, "pool_blocks": 24},
+}
+
+CHUNKS = (1, 3, 7, 64)  # minimum, prime, prime, >= longest prompt
+
+
+@pytest.fixture(scope="module")
+def decoder():
+    cfg = gemma_2b.CONFIG.reduced()
+    api = registry.get_api(cfg)
+    sp = api.unstack(api.init(cfg, jax.random.key(0)), cfg)
+    return cfg, sp
+
+
+@pytest.fixture(scope="module")
+def recurrent():
+    out = {}
+    for fam, mod in (("ssm", mamba2_2p7b), ("hybrid", zamba2_2p7b)):
+        cfg = mod.CONFIG.reduced()
+        api = registry.get_api(cfg)
+        out[fam] = (cfg, api.unstack(api.init(cfg, jax.random.key(0)), cfg))
+    return out
+
+
+def _engine(cfg, sp, config_key, **extra):
+    kw = dict(max_slots=2, max_seq=64, prefill_pad=8, qimpl="xla",
+              debug_invariants=True)
+    kw.update(CONFIGS[config_key])
+    kw.update(extra)
+    return ServeEngine(cfg, sp, **kw)
+
+
+def _requests():
+    return [Request(uid=u, prompt=list(p), max_new_tokens=MAX_NEW)
+            for u, p in PROMPTS.items()]
+
+
+_REF = {}
+
+
+def _reference(cfg, sp, config_key):
+    """Whole-prompt (chunk-free) streams, cached per config."""
+    if config_key not in _REF:
+        _REF[config_key] = _engine(cfg, sp, config_key).run(_requests())
+    return _REF[config_key]
+
+
+def _assert_budget_invariants(eng):
+    recs = eng._scheduler.records
+    assert recs, "scheduler never planned a turn"
+    budget = eng._scheduler.cfg.step_token_budget
+    for r in recs:
+        # the per-step token budget is a hard ceiling
+        assert r.decode_tokens + r.chunk_tokens + r.finish_tokens <= budget, r
+        # decode is never displaced: chunks only spend the leftover
+        assert r.chunk_tokens <= budget - r.decode_tokens, r
+    # every turn with a prefill backlog and leftover quota made progress
+    stalled = [r for r in recs
+               if r.n_prefilling and not r.chunk_tokens
+               and budget - r.decode_tokens >= eng.prefill_chunk + 1]
+    assert not stalled, stalled
+    st = eng.stats()["scheduler"]
+    assert st["max_step_tokens"] <= st["step_token_budget"]
+    assert st["chunk_tokens"] == sum(r.chunk_tokens for r in recs)
+
+
+# ---------------------------------------------------------------------------
+# token identity: chunked == whole-prompt, every config x chunk size
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("chunk", CHUNKS)
+@pytest.mark.parametrize("config_key", sorted(CONFIGS))
+def test_chunked_streams_identical(decoder, config_key, chunk):
+    cfg, sp = decoder
+    ref = _reference(cfg, sp, config_key)
+    eng = _engine(cfg, sp, config_key, prefill_chunk=chunk)
+    out = eng.run(_requests())
+    assert out == ref
+    _assert_budget_invariants(eng)
+    # chunked admission really ran (not the legacy whole-prompt path)
+    assert eng.stats()["prefill_chunks"] > 0
+    for uid, p in PROMPTS.items():
+        lc = eng.lifecycles[uid]
+        if len(p) > 1:
+            assert lc.prefill_progress == len(p) - 1
+    assert all(s.free for s in eng.slots)
+    eng.check_invariants()
+
+
+@pytest.mark.parametrize("chunk", (1, 4, 64))
+@pytest.mark.parametrize("family", ("ssm", "hybrid", "hybrid-q"))
+def test_recurrent_families_identical(recurrent, family, chunk):
+    """SSM / hybrid carry recurrent state, not KV scratch: chunking runs
+    the lengths-masked prefix-recompute path.  Same identity contract."""
+    fam = "hybrid" if family == "hybrid-q" else family
+    cfg, sp = recurrent[fam]
+    extra = {"state_bits": 8} if family == "hybrid-q" else {}
+    kw = dict(max_slots=2, max_seq=64, prefill_pad=8, qimpl="xla",
+              debug_invariants=True, **extra)
+    ref = ServeEngine(cfg, sp, **kw).run(_requests())
+    eng = ServeEngine(cfg, sp, prefill_chunk=chunk, **kw)
+    out = eng.run(_requests())
+    assert out == ref
+    _assert_budget_invariants(eng)
+
+
+def test_tight_budget_still_identical(decoder):
+    """The floor budget (max_slots + C) forces maximal interleaving —
+    at most one chunk per turn while both slots decode.  Still identical."""
+    cfg, sp = decoder
+    ref = _reference(cfg, sp, "quant-dense")
+    eng = _engine(cfg, sp, "quant-dense", prefill_chunk=3,
+                  step_token_budget=2 + 3)
+    out = eng.run(_requests())
+    assert out == ref
+    _assert_budget_invariants(eng)
+
+
+# ---------------------------------------------------------------------------
+# scheduler unit behaviour (pure host logic)
+# ---------------------------------------------------------------------------
+
+
+class TestChunkScheduler:
+    def test_config_validation(self):
+        with pytest.raises(ValueError, match="prefill_chunk must be >= 1"):
+            SchedulerConfig(0, 10).validate(2)
+        with pytest.raises(ValueError, match="starve forever"):
+            SchedulerConfig(8, 9).validate(2)  # floor is 2 + 8
+        SchedulerConfig(8, 10).validate(2)  # exactly the floor: fine
+
+    def test_engine_rejects_budget_without_chunking(self, decoder):
+        cfg, sp = decoder
+        with pytest.raises(ValueError, match="prefill_chunk"):
+            _engine(cfg, sp, "fp", step_token_budget=32)
+
+    def test_decode_charged_first(self):
+        sched = ChunkScheduler(SchedulerConfig(4, 6), max_slots=2)
+        # decode eats the whole budget: no chunk fits
+        assert sched.plan(0, n_decode=6, prefilling=[(0, 10)]) == []
+        # leftover of 5 fits one 4-token chunk (non-final: cost 4)
+        assert sched.plan(1, n_decode=1, prefilling=[(0, 10)]) == [(0, 4)]
+        r = sched.records[-1]
+        assert (r.decode_tokens, r.chunk_tokens, r.finish_tokens) == (1, 4, 0)
+
+    def test_final_chunk_charged_plus_one(self):
+        sched = ChunkScheduler(SchedulerConfig(4, 6), max_slots=2)
+        # remaining=4 == chunk: the finisher costs 4+1 (same-turn first
+        # decode), which does NOT fit a leftover of 4...
+        assert sched.plan(0, n_decode=2, prefilling=[(0, 4)]) == []
+        # ...but fits a leftover of 5
+        assert sched.plan(1, n_decode=1, prefilling=[(0, 4)]) == [(0, 4)]
+        assert sched.records[-1].finish_tokens == 1
+
+    def test_round_robin_rotates(self):
+        sched = ChunkScheduler(SchedulerConfig(4, 6), max_slots=2)
+        # quota 6 fits exactly one non-final 4-token chunk per turn
+        first = sched.plan(0, 0, [(0, 100), (1, 100)])[0][0]
+        second = sched.plan(1, 0, [(0, 100), (1, 100)])[0][0]
+        assert {first, second} == {0, 1}
+
+    def test_all_or_nothing_chunks(self):
+        sched = ChunkScheduler(SchedulerConfig(4, 6), max_slots=2)
+        # leftover 3 < C: no partial 3-token chunk is granted
+        assert sched.plan(0, n_decode=3, prefilling=[(0, 100)]) == []
+
+
+# ---------------------------------------------------------------------------
+# streaming front-end
+# ---------------------------------------------------------------------------
+
+
+def test_streaming_callback_and_poll(decoder):
+    cfg, sp = decoder
+    ref = _reference(cfg, sp, "fp")
+    eng = _engine(cfg, sp, "fp", prefill_chunk=3)
+    streamed = {}
+    for r in _requests():
+        eng.submit(r, on_token=lambda uid, tok: streamed.setdefault(
+            uid, []).append(tok))
+    polled = {}
+
+    def hook(engine, step):
+        for uid, tok in engine.poll():  # mid-run drain from a step hook
+            polled.setdefault(uid, []).append(tok)
+
+    out = eng.run(step_hook=hook)
+    for uid, tok in eng.poll():  # post-run drain picks up the tail
+        polled.setdefault(uid, []).append(tok)
+    assert streamed == ref and polled == ref and out == ref
+    assert not list(eng.poll())  # ring drained exactly once
+
+
+def test_ttft_is_first_committed_token_not_first_chunk(decoder):
+    """TTFT must clock the first COMMITTED token.  A chunked prompt makes
+    prefill progress for several turns before any token commits; the
+    lifecycle must show progress > 0 with first_token_t still unset."""
+    cfg, sp = decoder
+    eng = _engine(cfg, sp, "fp", prefill_chunk=2)
+    seen_mid_prefill = []
+
+    def hook(engine, step):
+        lc = engine.lifecycles.get(0)
+        if lc is not None and lc.first_token_t is None:
+            seen_mid_prefill.append(lc.prefill_progress)
+
+    out = eng.run([Request(uid=0, prompt=list(PROMPTS[5]),
+                           max_new_tokens=MAX_NEW)], step_hook=hook)
+    assert len(out[0]) == MAX_NEW
+    lc = eng.lifecycles[0]
+    assert lc.ttft() is not None and lc.ttlt() >= lc.ttft()
+    # chunks ran (progress advanced) while TTFT had not yet fired
+    assert any(0 < p < len(PROMPTS[5]) - 1 for p in seen_mid_prefill)
+
+
+# ---------------------------------------------------------------------------
+# observability regression (DESIGN.md §16 + §17)
+# ---------------------------------------------------------------------------
+
+
+def test_prefill_chunk_phase_attributed(decoder):
+    """Traced chunked run: the ``phase/prefill_chunk`` histogram exists,
+    the phase appears in ``trace_report`` and attribution stays >= 0.9."""
+    from repro.obs import trace as obs_trace
+
+    cfg, sp = decoder
+    ref = _reference(cfg, sp, "paged")
+    obs_trace.enable()
+    try:
+        eng = _engine(cfg, sp, "paged", prefill_chunk=3)
+        out = eng.run(_requests())
+    finally:
+        obs_trace.disable()
+    assert out == ref  # tracing never perturbs tokens
+    h = eng.metrics.get("phase/prefill_chunk")
+    assert h is not None and h.count == eng.stats()["prefill_chunks"] > 0
+    rep = eng.trace_report()
+    assert "prefill_chunk" in rep["phases"]
+    assert rep["attributed_fraction"] >= 0.9, rep
+    tr = obs_trace.get_tracer()
+    assert any(e[1] == "prefill_chunk" for e in tr.events())
+    obs_trace.validate_chrome_trace(tr.chrome_trace())
+    tr.clear()
