@@ -1,0 +1,223 @@
+"""Cost-model calibration benchmark -> BENCH_calibration.json (repo root).
+
+Closes the predict/measure loop of DESIGN.md §18: search TWO policies under
+different cost backends (shift-add memory budget, serving-roofline latency
+budget — both with a joint ``state_bytes`` phase), deploy each through the
+real ``ServeEngine``, and record the measured/predicted ratio per cost
+metric from ``stats()["calibration"]``:
+
+  * ``container_bytes`` — packed weight HBM bytes vs the backend's
+    prediction (exact packing maths on both sides: ratio 1.0 expected);
+  * ``state_bytes`` — deployed cache bytes vs the searched prediction.
+    The policy-side accountant prices int lanes only, the deployment adds
+    per-block f32 scales, so a stable ratio slightly above 1.0 is the
+    KNOWN model-fidelity gap this benchmark makes visible (and gates on
+    staying stable);
+  * ``latency_s`` — mean traced decode compute (dispatch + device_sync)
+    vs the roofline bound, informational (machine-dependent; shift-add
+    predicts abstract units, so its ratio is reported but meaningless as
+    an absolute).
+
+The searches run under the process-wide tracer, so the same run exports a
+Chrome/Perfetto search trace (``artifacts/search_trace.json``, uploaded by
+CI) and the headline ``search.attributed_fraction`` — the share of search
+wall time the WORK_CAT env spans explain (acceptance bar >= 0.90).  The
+shift-add artifact is re-saved with the measured ratios attached
+(``artifacts/policy_calibrated.json``), ready for
+``python -m repro.launch.report``.
+
+Registered as the "calibration" section of benchmarks/run.py.
+
+    PYTHONPATH=src python -m benchmarks.calibration [--full]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.configs.base import ShapeSpec
+from repro.core.controller import ControllerConfig
+from repro.core.policy import BitPolicy, Budget
+from repro.cost import RooflineCostModel, ShiftAddCostModel
+from repro.kvcache.env import KVQuantEnv
+from repro.launch.search import search_policy, state_controller_config
+from repro.models import registry
+from repro.obs import search as obs_search
+from repro.obs import trace as obs_trace
+from repro.obs.calibration import attach_calibration, max_ratio_error
+from repro.quant import apply as qapply
+from repro.quant.env import LMQuantEnv
+from repro.serve.engine import ServeEngine
+
+OUT_PATH = os.path.join(os.path.dirname(__file__), "..",
+                        "BENCH_calibration.json")
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "artifacts")
+TRACE_PATH = os.path.join(ART_DIR, "search_trace.json")
+CALIBRATED_PATH = os.path.join(ART_DIR, "policy_calibrated.json")
+
+BENCH = dict(slots=4, max_seq=64, seed=0, n_requests=3, max_new_tokens=8)
+PRETRAIN = dict(fast=8, full=40)
+ITERS = dict(fast=4, full=10)
+
+
+def _make_env(cost_model, *, pretrain_steps: int):
+    cfg = get_config("gemma-2b").reduced()
+    api = registry.get_api(cfg)
+    with obs_search.work_span("model_init", arch=cfg.name):
+        params = api.init(cfg, jax.random.key(BENCH["seed"]))
+    env = LMQuantEnv(params, cfg, ShapeSpec("cal", "train", 64, 8),
+                     cost_model=cost_model)
+    env.pretrain(pretrain_steps)
+    return cfg, env
+
+
+def _search_one(cost_model, metric: str, frac: float, *,
+                pretrain_steps: int, iters: int):
+    """One searched policy: weight budget on ``metric`` + state phase."""
+    cfg, env = _make_env(cost_model, pretrain_steps=pretrain_steps)
+    acc_t = -(env.float_loss() + 0.10)
+    ref = env.costs(BitPolicy.uniform(env.layer_infos(), 8))
+    budget = Budget.of(acc_t, acc_buffer=0.05, buffer=0.08,
+                       **{metric: frac * ref[metric]})
+    with obs_search.work_span("unstack"):
+        serve_params = registry.get_api(cfg).unstack(env.params, cfg)
+    calib = np.random.default_rng(BENCH["seed"]).integers(
+        1, cfg.vocab_size, (4, 16))
+    kv_env = KVQuantEnv(serve_params, cfg, calib, slots=BENCH["slots"],
+                        max_seq=BENCH["max_seq"], cost_model=cost_model)
+    ref_state = kv_env.costs(BitPolicy.uniform(kv_env.layer_infos(), 8))
+    state_budget = Budget.of(-0.20, acc_buffer=0.05, buffer=0.08,
+                             state_bytes=0.80 * ref_state["state_bytes"])
+    cc = ControllerConfig(phase1_max_iters=2, phase2_max_iters=iters,
+                          phase1_qat_epochs=1, phase2_qat_epochs=1)
+    artifact, result = search_policy(
+        env, budget, config=cc, state_env=kv_env, state_budget=state_budget,
+        state_config=state_controller_config(len(kv_env.layer_infos())),
+        seed=BENCH["seed"],
+        meta={"arch": cfg.name, "backend": cost_model.name})
+    return cfg, serve_params, artifact, result
+
+
+def _deploy_and_calibrate(cfg, serve_params, artifact):
+    """Serve a few requests on the artifact and read the measured ratios."""
+    qp = qapply.quantize_for_serve(serve_params, artifact, cfg)
+    eng = ServeEngine(cfg, qp, max_slots=BENCH["slots"],
+                      max_seq=BENCH["max_seq"], artifact=artifact)
+    rng = np.random.default_rng(BENCH["seed"] + 7)
+    prompts = [rng.integers(1, cfg.vocab_size,
+                            int(rng.integers(4, 10))).tolist()
+               for _ in range(BENCH["n_requests"])]
+    # the phase/* histograms (and so the measured latency_s) only fill
+    # while the process-wide tracer is on — trace the serving run too
+    # (called after the search trace is saved, so clearing is safe)
+    obs_trace.enable()
+    eng.generate(prompts, max_new_tokens=BENCH["max_new_tokens"])
+    obs_trace.disable()
+    return eng, eng.stats().get("calibration", {})
+
+
+def run(fast: bool = True) -> dict:
+    mode = "fast" if fast else "full"
+    pretrain, iters = PRETRAIN[mode], ITERS[mode]
+
+    obs_trace.enable()
+    t0 = time.perf_counter()
+    conditions = {
+        "shift_add": _search_one(ShiftAddCostModel(), "size_mib", 0.75,
+                                 pretrain_steps=pretrain, iters=iters),
+        "roofline": _search_one(RooflineCostModel(batch=4), "latency_s", 0.72,
+                                pretrain_steps=pretrain, iters=iters),
+    }
+    tracer = obs_trace.get_tracer()
+    tracer.complete("search/main", ts=t0, dur=time.perf_counter() - t0,
+                    cat=obs_search.PHASE_CAT, track=obs_search.TRACK)
+    srep = obs_search.search_trace_report(tracer.events())
+    os.makedirs(ART_DIR, exist_ok=True)
+    doc_trace = tracer.save(TRACE_PATH, process_name="sigmaquant-search")
+    obs_trace.validate_chrome_trace(doc_trace)
+    obs_trace.disable()
+
+    policies = {}
+    byte_errors = []
+    step_hist = None
+    for name, (cfg, serve_params, artifact, result) in conditions.items():
+        eng, cal = _deploy_and_calibrate(cfg, serve_params, artifact)
+        attach_calibration(artifact, cal)
+        if name == "shift_add":
+            artifact.save(CALIBRATED_PATH)
+        byte_errors.append(max_ratio_error(
+            cal, metrics=("container_bytes", "state_bytes")))
+        # pooled step-time view across every deployed engine — the
+        # Histogram.merge() path the registry exposes for exactly this
+        h = eng.metrics.histogram("step_time_s")
+        step_hist = h if step_hist is None else step_hist.merge(h)
+        prov = artifact.provenance
+        policies[name] = {
+            "backend": artifact.backend,
+            "success": bool(result.success),
+            "mean_bits": round(artifact.policy.mean_bits(), 3),
+            "state_mean_bits": round(artifact.state_policy.mean_bits(), 3),
+            "search": {ph: {"iterations": rec["iterations"],
+                            "digest": rec["digest"],
+                            "env_fraction": (round(rec["env_s"]
+                                                   / rec["wall_s"], 4)
+                                             if rec["wall_s"] else None)}
+                       for ph, rec in prov["phases"].items()},
+            "calibration": cal,
+        }
+        ratios = {m: round(rec["ratio"], 4) for m, rec in cal.items()}
+        print(f"[{name}] ratios (measured/predicted): {ratios}")
+
+    doc = {
+        "config": dict(BENCH, mode=mode, arch="gemma-2b.reduced",
+                       backend=jax.default_backend()),
+        "policies": policies,
+        "aggregate": {
+            # the gate: byte metrics are machine-independent packing maths,
+            # so their worst |ratio - 1| must stay put across commits
+            "byte_ratio_error_max": round(max(byte_errors), 4),
+            "policies": len(policies),
+            "metrics_calibrated": sorted(
+                {m for p in policies.values() for m in p["calibration"]}),
+        },
+        "search": {
+            "attributed_fraction": round(srep["attributed_fraction"], 4),
+            "total_s": round(srep["total_s"], 3),
+            "trace_events": len(doc_trace["traceEvents"]),
+            "trace_path": os.path.relpath(
+                TRACE_PATH, os.path.join(os.path.dirname(__file__), "..")),
+        },
+        "step_time": {"count": step_hist.count,
+                      "mean_s": round(step_hist.mean, 6),
+                      "p99_s": round(step_hist.percentile(99), 6)},
+        "calibrated_artifact": os.path.relpath(
+            CALIBRATED_PATH, os.path.join(os.path.dirname(__file__), "..")),
+    }
+    with open(OUT_PATH, "w") as f:
+        json.dump(doc, f, indent=1)
+    print(f"byte ratio error (max over policies/metrics): "
+          f"{doc['aggregate']['byte_ratio_error_max']:.2%}")
+    print(f"search trace: {doc['search']['trace_events']} events -> "
+          f"{TRACE_PATH} ({srep['attributed_fraction']:.1%} of "
+          f"{srep['total_s']:.1f}s attributed to env work)")
+    print(f"calibrated artifact -> {CALIBRATED_PATH} "
+          f"(render: python -m repro.launch.report {CALIBRATED_PATH})")
+    return doc
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args(argv)
+    run(fast=not args.full)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -235,9 +235,12 @@ def run(fast: bool = True) -> dict:
     mean_gap_s = 1.0 / arrival_rate
 
     # measured run is traced: same tokens as untraced (see
-    # tests/test_chaos_serve.py), plus a Perfetto timeline for free
-    eng.metrics.histogram("ttft_s").clear()
-    eng.metrics.histogram("itl_s").clear()
+    # tests/test_chaos_serve.py), plus a Perfetto timeline for free.
+    # The capacity probe above warmed every shape THROUGH the engine, so
+    # drop ALL its metric samples — not just ttft/itl: the step/phase
+    # histograms and counters would otherwise mix compile-heavy warm-up
+    # steps into the measured run's trace_report()/stats().
+    eng.metrics.reset()
     obs_trace.enable()
     results = _open_loop(cfg, eng, n, mean_gap_s)
     obs_trace.disable()

@@ -369,12 +369,46 @@ def classify_zone(acc: float, res, t: "Targets | Budget") -> Zone:
 # ---------------------------------------------------------------------------
 
 #: bump when the artifact JSON layout changes incompatibly
-ARTIFACT_VERSION = 5
+ARTIFACT_VERSION = 6
 
 #: versions this build can still read (v1 artifacts have no KV policy,
 #: v1/v2 have no paged pool geometry, v1-v3 have no draft policy, v1-v4
-#: have no kernel configs — all load with those fields None/0)
-READABLE_ARTIFACT_VERSIONS = (1, 2, 3, 4, 5)
+#: have no kernel configs, v1-v5 have no provenance — all load with those
+#: fields None/0)
+READABLE_ARTIFACT_VERSIONS = (1, 2, 3, 4, 5, 6)
+
+
+def validate_provenance(prov) -> None:
+    """Structural validation of the v6 ``provenance`` record.
+
+    Enforced on build AND on load so a hand-edited artifact fails fast with
+    the offending field named, instead of surfacing as a KeyError deep in
+    ``launch/report.py``.  Only the load-bearing shape is checked (phases
+    mapping, per-phase iteration counts and digest) — the rest is free-form
+    so the schema can grow without another version bump.
+    """
+    if not isinstance(prov, Mapping):
+        raise ValueError("provenance must be a mapping")
+    phases = prov.get("phases")
+    if phases is None:
+        raise ValueError("invalid provenance field 'provenance.phases': "
+                         "required mapping of phase name -> record is missing")
+    if not isinstance(phases, Mapping):
+        raise ValueError("invalid provenance field 'provenance.phases': "
+                         "must be a mapping of phase name -> record")
+    for name, rec in phases.items():
+        where = f"provenance.phases.{name}"
+        if not isinstance(rec, Mapping):
+            raise ValueError(f"invalid provenance field '{where}': "
+                             "must be a mapping")
+        iters = rec.get("iterations")
+        if isinstance(iters, bool) or not isinstance(iters, int) or iters < 0:
+            raise ValueError(f"invalid provenance field '{where}.iterations': "
+                             f"must be a non-negative int (got {iters!r})")
+        digest = rec.get("digest")
+        if not isinstance(digest, str) or not digest:
+            raise ValueError(f"invalid provenance field '{where}.digest': "
+                             f"must be a non-empty string (got {digest!r})")
 
 
 def layer_registry_hash(layers: Iterable[LayerInfo]) -> str:
@@ -422,6 +456,13 @@ class PolicyArtifact:
                    layouts instead of re-timing.  None: dispatcher
                    defaults.  Every candidate is bitwise-equivalent, so a
                    stale table can cost speed but never correctness.
+    provenance     how the search arrived at this policy (v6, DESIGN.md §18):
+                   search config + limits, seed, per-phase iteration counts
+                   and SearchReport digests, iteration history and per-layer
+                   sigma/sensitivity records — enough for launch/report.py
+                   to explain a deployed policy from the artifact alone.
+                   Validated on build and on load; None for pre-v6 or
+                   hand-made artifacts.
     meta           free-form provenance (arch, controller stats, wall time)
     """
 
@@ -436,6 +477,7 @@ class PolicyArtifact:
     draft_policy: BitPolicy | None = None
     draft_k: int = 0
     kernel_configs: list | None = None
+    provenance: dict | None = None
     meta: dict = dataclasses.field(default_factory=dict)
     version: int = ARTIFACT_VERSION
 
@@ -444,6 +486,7 @@ class PolicyArtifact:
               budget: Budget | None = None, state_policy: "BitPolicy | None" = None,
               pool: Mapping | None = None, draft_policy: "BitPolicy | None" = None,
               draft_k: int = 0, kernel_configs: list | None = None,
+              provenance: Mapping | None = None,
               meta: Mapping | None = None) -> "PolicyArtifact":
         if pool is not None:
             if state_policy is None:
@@ -467,6 +510,8 @@ class PolicyArtifact:
                     raise ValueError(
                         "each kernel_configs entry needs 'key' and 'config' "
                         f"(got {e!r})")
+        if provenance is not None:
+            validate_provenance(provenance)
         return cls(policy=policy, registry_hash=layer_registry_hash(policy.layers),
                    backend=backend, report=dict(report or {}), budget=budget,
                    state_policy=state_policy,
@@ -476,6 +521,8 @@ class PolicyArtifact:
                    draft_policy=draft_policy, draft_k=int(draft_k),
                    kernel_configs=(list(kernel_configs)
                                    if kernel_configs is not None else None),
+                   provenance=(dict(provenance)
+                               if provenance is not None else None),
                    meta=dict(meta or {}))
 
     # -- validation ----------------------------------------------------------
@@ -514,6 +561,7 @@ class PolicyArtifact:
                                  if self.draft_policy is not None else None),
                 "draft_k": self.draft_k,
                 "kernel_configs": self.kernel_configs,
+                "provenance": self.provenance,
                 "meta": self.meta,
                 "policy": json.loads(self.policy.to_json()),
             },
@@ -528,6 +576,9 @@ class PolicyArtifact:
                              f"(this build reads {READABLE_ARTIFACT_VERSIONS})")
         state_policy = (BitPolicy.from_json(json.dumps(d["state_policy"]))
                         if d.get("state_policy") else None)
+        provenance = d.get("provenance")
+        if provenance is not None:
+            validate_provenance(provenance)
         return cls(
             policy=BitPolicy.from_json(json.dumps(d["policy"])),
             registry_hash=d["registry_hash"],
@@ -542,6 +593,7 @@ class PolicyArtifact:
             draft_k=int(d.get("draft_k", 0)),
             kernel_configs=(list(d["kernel_configs"])
                             if d.get("kernel_configs") else None),
+            provenance=dict(provenance) if provenance is not None else None,
             meta=dict(d.get("meta") or {}),
             version=version)
 

@@ -53,23 +53,24 @@ class KVQuantEnv(QuantEnvBase):
                                         allocated_tokens=allocated_tokens)
 
         # one calibration prefill: capture the fp K/V every entry sees
-        toks = jnp.asarray(calib_tokens, jnp.int32)
-        bc, sc = toks.shape
-        self._calib_batch, self._calib_len = bc, sc
-        self._max_seq = max_seq
-        _, caches = self._api.prefill(serve_params, cfg, tokens=toks, qimpl=qimpl)
-        self._caches = caches
-        self._capture = {}
-        for nm, node in extract_kv_entries(caches):
-            self._capture[f"{nm}.state.k"] = node["k"]
-            self._capture[f"{nm}.state.v"] = node["v"]
+        with self._span("calibrate", prompts=len(calib_tokens)):
+            toks = jnp.asarray(calib_tokens, jnp.int32)
+            bc, sc = toks.shape
+            self._calib_batch, self._calib_len = bc, sc
+            self._max_seq = max_seq
+            _, caches = self._api.prefill(serve_params, cfg, tokens=toks, qimpl=qimpl)
+            self._caches = caches
+            self._capture = {}
+            for nm, node in extract_kv_entries(caches):
+                self._capture[f"{nm}.state.k"] = node["k"]
+                self._capture[f"{nm}.state.v"] = node["v"]
 
-        # fp-state reference step: replay the last calibration token at the
-        # next position (exactly what the engine's decode step does)
-        self._next_tok = toks[:, -1:]
-        self._pos = jnp.full((bc,), sc, jnp.int32)
-        self._fp_logits = self._decode_logits(state_policy=None)
-        self._fp_scale = float(jnp.mean(jnp.abs(self._fp_logits))) or 1.0
+            # fp-state reference step: replay the last calibration token at
+            # the next position (exactly what the engine's decode step does)
+            self._next_tok = toks[:, -1:]
+            self._pos = jnp.full((bc,), sc, jnp.int32)
+            self._fp_logits = self._decode_logits(state_policy=None)
+            self._fp_scale = float(jnp.mean(jnp.abs(self._fp_logits))) or 1.0
 
     # -- state construction --------------------------------------------------
     def _build_state(self, state_policy: BitPolicy | None):
@@ -92,8 +93,9 @@ class KVQuantEnv(QuantEnvBase):
         return self._capture[name]
 
     def evaluate(self, policy: BitPolicy) -> float:
-        lq = self._decode_logits(policy)
-        return -float(jnp.mean(jnp.abs(lq - self._fp_logits))) / self._fp_scale
+        with self._span("evaluate"):
+            lq = self._decode_logits(policy)
+            return -float(jnp.mean(jnp.abs(lq - self._fp_logits))) / self._fp_scale
 
     def calibrate_and_qat(self, policy: BitPolicy, epochs: int) -> None:
         pass  # post-training: the packed state needs no retraining

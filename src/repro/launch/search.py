@@ -47,6 +47,8 @@ from repro.core.controller import ControllerConfig, SigmaQuantController, SigmaQ
 from repro.core.policy import COST_METRICS, Budget, PolicyArtifact
 from repro.cost import available_cost_models, get_cost_model
 from repro.models import registry
+from repro.obs import search as obs_search
+from repro.obs import trace as obs_trace
 from repro.quant.env import LMQuantEnv
 
 
@@ -60,7 +62,7 @@ def search_policy(env: LMQuantEnv, budget: Budget, *,
                   meta: dict | None = None, state_env=None,
                   state_budget: Budget | None = None,
                   state_config: ControllerConfig | None = None,
-                  pool: dict | None = None,
+                  pool: dict | None = None, seed: int | None = None,
                   ) -> tuple[PolicyArtifact, SigmaQuantResult]:
     """Run the two-phase search and package the result as a PolicyArtifact.
 
@@ -75,16 +77,22 @@ def search_policy(env: LMQuantEnv, budget: Budget, *,
     the budget bought (DESIGN.md §12).
     """
     t0 = time.perf_counter()
-    result = SigmaQuantController(env, budget, config, log=log).run()
+    result = SigmaQuantController(env, budget, config, log=log,
+                                  phase="weight").run()
     report = dict(env.costs(result.policy))
     meta = dict(meta or {}, success=result.success, abandoned=result.abandoned,
                 acc=result.acc, mean_bits=result.policy.mean_bits())
+    reports = {"weight": result.search_report}
+    limits = {it.metric: it.limit for it in budget.items}
     state_policy = None
     pool_geom = None
     if state_env is not None:
         assert state_budget is not None, "state search needs a state_bytes budget"
         sres = SigmaQuantController(state_env, state_budget,
-                                    state_config or config, log=log).run()
+                                    state_config or config, log=log,
+                                    phase="state").run()
+        reports["state"] = sres.search_report
+        limits.update({it.metric: it.limit for it in state_budget.items})
         state_policy = sres.policy
         report["state_bytes"] = float(state_env.costs(state_policy)["state_bytes"])
         meta.update(state_success=sres.success, state_acc=sres.acc,
@@ -104,9 +112,13 @@ def search_policy(env: LMQuantEnv, budget: Budget, *,
                     cfg.resolved_head_dim, block, limit),
             }
     meta["search_wall_s"] = round(time.perf_counter() - t0, 3)
+    provenance = obs_search.build_provenance(
+        backend=env.cost_model.name, reports=reports, seed=seed, limits=limits,
+        config=dataclasses.asdict(config or ControllerConfig()))
     artifact = PolicyArtifact.build(
         result.policy, backend=env.cost_model.name, report=report, budget=budget,
-        state_policy=state_policy, pool=pool_geom, meta=meta)
+        state_policy=state_policy, pool=pool_geom, provenance=provenance,
+        meta=meta)
     return artifact, result
 
 
@@ -145,7 +157,8 @@ def search_draft_policy(params: dict, cfg, deployed_policy, *, metric: str,
         or (min(VALID_BITS),)
     cc = config or dataclasses.replace(
         state_controller_config(len(denv.layer_infos())), bit_set=ladder)
-    result = SigmaQuantController(denv, budget, cc, log=log).run()
+    result = SigmaQuantController(denv, budget, cc, log=log,
+                                  phase="draft").run()
     return result, denv, deployed_cost
 
 
@@ -297,15 +310,25 @@ def main(argv=None) -> int:
                          "serving replays them without re-search")
     ap.add_argument("--autotune-repeats", type=int, default=20,
                     help="--autotune-kernels: timing repetitions per candidate")
+    # search-side observability (DESIGN.md §18)
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="record a Chrome/Perfetto trace of the whole search "
+                         "(controller phases + iterations + env work spans) "
+                         "and print the wall-time attribution")
     args = ap.parse_args(argv)
     if not args.limit:
         ap.error("pass at least one --limit metric=value")
+
+    if args.trace:
+        obs_trace.enable()
+        t_trace0 = time.perf_counter()
 
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
     api = registry.get_api(cfg)
-    params = api.init(cfg, jax.random.key(args.seed))
+    with obs_search.work_span("model_init", arch=cfg.name):
+        params = api.init(cfg, jax.random.key(args.seed))
     shape = ShapeSpec("search", "train", args.seq, args.batch)
     cm_kwargs = {"batch": args.decode_batch} if args.backend == "roofline" else {}
     cost_model = get_cost_model(args.backend, **cm_kwargs)
@@ -364,7 +387,7 @@ def main(argv=None) -> int:
                                              phase1_qat_epochs=1, phase2_qat_epochs=1),
         log=print, meta={"arch": cfg.name, "backend": args.backend},
         state_env=state_env, state_budget=state_budget, state_config=state_cc,
-        pool=pool_req)
+        pool=pool_req, seed=args.seed)
 
     if args.draft:
         metric = budget.primary_metric
@@ -377,6 +400,14 @@ def main(argv=None) -> int:
             cost_model=env.cost_model, draft_frac=args.draft_frac,
             draft_accept=args.draft_accept, log=print)
         draft_cost = float(env.costs(dres.policy)[metric])
+        if dres.search_report is not None and artifact.provenance is not None:
+            # rebuild the nested mapping instead of mutating it: attach_draft
+            # below copies the artifact with dataclasses.replace, which would
+            # otherwise share the inner "phases" dict across copies
+            artifact.provenance = dict(
+                artifact.provenance,
+                phases=dict(artifact.provenance.get("phases", {}),
+                            draft=obs_search.phase_provenance(dres.search_report)))
         if dres.success and draft_cost < dep_cost:
             # a draft rides the artifact ONLY when strictly cheaper than the
             # deployed policy under the chosen metric — the invariant the
@@ -407,6 +438,23 @@ def main(argv=None) -> int:
             print(f"  {k['family']} k{k['k_bits']}/v{k['v_bits']} "
                   f"[{k['impl']}]: {e['config']} ({e['micros']:g} us, "
                   f"{e['candidates']} candidates)")
+
+    if args.trace:
+        tracer = obs_trace.get_tracer()
+        # one root window over the WHOLE run (pretrain + calibration prefills
+        # + every controller phase) so the attribution denominator is the
+        # full search wall time, not just the controller windows
+        tracer.complete("search/main", ts=t_trace0,
+                        dur=time.perf_counter() - t_trace0,
+                        cat=obs_search.PHASE_CAT, track=obs_search.TRACK)
+        srep = obs_search.search_trace_report(tracer.events())
+        doc = tracer.save(args.trace, process_name="sigmaquant-search")
+        obs_trace.validate_chrome_trace(doc)
+        tracer.disable()
+        print(f"search trace -> {args.trace}  "
+              f"({len(doc['traceEvents'])} events, "
+              f"{srep['attributed_fraction']:.1%} of {srep['total_s']:.2f}s "
+              f"attributed to env work)")
 
     artifact.save(args.out)
     print(f"policy artifact -> {args.out}  (success={result.success} "

@@ -9,11 +9,18 @@ Two small, dependency-free pillars:
   (p50/p90/p99 summaries) behind a :class:`MetricsRegistry`; the
   ``ServeEngine`` keeps one and serves its legacy ``stats()`` dict as a
   view over it.
+* :mod:`repro.obs.search` — the search-side mirror (DESIGN.md §18):
+  structured ``SearchReport`` accumulation, artifact provenance payloads,
+  and interval-union wall-time attribution over search trace spans.
+* :mod:`repro.obs.calibration` — predicted-vs-measured cost-model ratios
+  comparing a ``PolicyArtifact``'s cost report against what the serve
+  engine actually deploys and measures.
 
 Import cost is stdlib-only, so kernels/launchers can depend on this
 unconditionally.
 """
-from . import metrics, trace  # noqa: F401
+from . import calibration, metrics, search, trace  # noqa: F401
 from .metrics import Counter, Gauge, Histogram, MetricsRegistry  # noqa: F401
+from .search import SearchReport, search_trace_report  # noqa: F401
 from .trace import (NOOP_SPAN, Tracer, get_tracer,  # noqa: F401
                     validate_chrome_trace)

@@ -111,6 +111,45 @@ class Histogram:
             cum += c
         return self.max
 
+    def merge(self, other: "Histogram") -> "Histogram":
+        """Fold ``other``'s observations into this histogram (in place).
+
+        Requires an identical edge ladder — bucket counts add exactly, so
+        percentiles over the merged data are what a single histogram
+        observing both streams would report.  Lets benchmark runs and
+        chaos-matrix legs aggregate percentile data across engines/runs.
+        """
+        if self.edges != other.edges:
+            raise ValueError(
+                f"cannot merge histograms with different bucket edges "
+                f"({len(self.edges)} vs {len(other.edges)} edges)")
+        for i, c in enumerate(other.counts):
+            self.counts[i] += c
+        self.count += other.count
+        self.sum += other.sum
+        self.min = min(self.min, other.min)
+        self.max = max(self.max, other.max)
+        return self
+
+    def state(self) -> dict:
+        """Full serializable state (edges + counts + sum/count/min/max) —
+        enough to reconstruct and merge across processes, unlike the
+        percentile-only ``summary()`` view."""
+        return {"edges": list(self.edges), "counts": list(self.counts),
+                "count": self.count, "sum": self.sum,
+                "min": self.min if self.count else None,
+                "max": self.max if self.count else None}
+
+    @classmethod
+    def from_state(cls, d: dict) -> "Histogram":
+        h = cls(d["edges"])
+        h.counts = list(d["counts"])
+        h.count = int(d["count"])
+        h.sum = float(d["sum"])
+        h.min = d["min"] if d.get("min") is not None else math.inf
+        h.max = d["max"] if d.get("max") is not None else -math.inf
+        return h
+
     def summary(self) -> dict:
         if self.count == 0:
             return {"count": 0, "sum": 0.0, "mean": 0.0,
@@ -148,6 +187,18 @@ class MetricsRegistry:
 
     def get(self, name: str):
         return self._metrics.get(name)
+
+    def reset(self) -> None:
+        """Zero every registered metric in place (histograms clear, counters
+        and gauges return to 0) while keeping the objects alive, so callers
+        holding metric references keep observing into the same instances.
+        The warm-up exclusion knob: call after compile-inclusive warm turns
+        so jit time stops skewing latency percentiles."""
+        for m in self._metrics.values():
+            if isinstance(m, Histogram):
+                m.clear()
+            else:
+                m.value = 0.0
 
     def items(self, prefix: str = ""):
         return sorted((k, v) for k, v in self._metrics.items()

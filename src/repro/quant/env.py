@@ -23,6 +23,7 @@ import numpy as np
 from repro.core import stats
 from repro.core.policy import BitPolicy, LayerInfo
 from repro.cost import CostModel, ShiftAddCostModel
+from repro.obs import search as obs_search
 from repro.data.images import ImageTask
 from repro.data.pipeline import TokenTask, global_batch
 from repro.models import cnn as cnn_mod
@@ -46,17 +47,24 @@ class QuantEnvBase:
     def _weight(self, name: str):
         raise NotImplementedError
 
+    def _span(self, name: str, **args):
+        """A search-work span (DESIGN.md §18): env calls are the leaf wall
+        time the search trace attributes; the shared no-op when disabled."""
+        return obs_search.work_span(name, **args)
+
     # -- QuantEnv protocol ---------------------------------------------------
     def layer_infos(self) -> tuple[LayerInfo, ...]:
         return self._specs
 
     def sigmas(self) -> np.ndarray:
-        return stats.sigma_vector(self._weight(s.name) for s in self._specs)
+        with self._span("sigmas"):
+            return stats.sigma_vector(self._weight(s.name) for s in self._specs)
 
     def sensitivities(self, policy: BitPolicy) -> np.ndarray:
-        return stats.sensitivity_vector(
-            (self._weight(s.name) for s in self._specs),
-            (policy.bits[s.name] for s in self._specs))
+        with self._span("sensitivities"):
+            return stats.sensitivity_vector(
+                (self._weight(s.name) for s in self._specs),
+                (policy.bits[s.name] for s in self._specs))
 
     def costs(self, policy: BitPolicy) -> dict[str, float]:
         """Full cost vector from the injected backend (Budget metric keys).
@@ -64,9 +72,11 @@ class QuantEnvBase:
         Includes the legacy "resource" scalar so the controller prices each
         policy with exactly one backend report per measurement.
         """
-        costs = self.cost_model.report(policy).as_costs()
-        costs["resource"] = costs["bops"] if self.objective == "bops" else costs["size_mib"]
-        return costs
+        with self._span("costs"):
+            costs = self.cost_model.report(policy).as_costs()
+            costs["resource"] = (costs["bops"] if self.objective == "bops"
+                                 else costs["size_mib"])
+            return costs
 
     def resource(self, policy: BitPolicy) -> float:
         """Legacy scalar objective, read off the same cost backend."""
@@ -98,16 +108,18 @@ class CNNQuantEnv(QuantEnvBase):
         return cnn_mod.get_weight(self.params, name)
 
     def evaluate(self, policy: BitPolicy) -> float:
-        bits = qat_mod.cnn_bits_pytree(policy)
-        return float(self._eval_fn(self.params, self._eval_imgs, self._eval_labels, bits))
+        with self._span("evaluate"):
+            bits = qat_mod.cnn_bits_pytree(policy)
+            return float(self._eval_fn(self.params, self._eval_imgs, self._eval_labels, bits))
 
     def calibrate_and_qat(self, policy: BitPolicy, epochs: int) -> None:
-        bits = qat_mod.cnn_bits_pytree(policy)
-        for _ in range(epochs * self.steps_per_epoch):
-            batch = self.task.batch_at(self._data_step, self.batch)
-            self._data_step += 1
-            self.params, self._opt_state, _ = self._step_fn(
-                self.params, self._opt_state, batch, bits)
+        with self._span("qat", epochs=epochs):
+            bits = qat_mod.cnn_bits_pytree(policy)
+            for _ in range(epochs * self.steps_per_epoch):
+                batch = self.task.batch_at(self._data_step, self.batch)
+                self._data_step += 1
+                self.params, self._opt_state, _ = self._step_fn(
+                    self.params, self._opt_state, batch, bits)
 
     # -- extras used by benchmarks -------------------------------------------
     def float_accuracy(self) -> float:
@@ -116,13 +128,14 @@ class CNNQuantEnv(QuantEnvBase):
 
     def pretrain(self, steps: int = 300) -> float:
         """Float pre-training (paper trains the FP32 baseline first)."""
-        bits = {s.name: jnp.asarray(32.0) for s in self._specs}
-        for _ in range(steps):
-            batch = self.task.batch_at(self._data_step, self.batch)
-            self._data_step += 1
-            self.params, self._opt_state, loss = self._step_fn(
-                self.params, self._opt_state, batch, bits)
-        return float(loss)
+        with self._span("pretrain", steps=steps):
+            bits = {s.name: jnp.asarray(32.0) for s in self._specs}
+            for _ in range(steps):
+                batch = self.task.batch_at(self._data_step, self.batch)
+                self._data_step += 1
+                self.params, self._opt_state, loss = self._step_fn(
+                    self.params, self._opt_state, batch, bits)
+            return float(loss)
 
 
 class LMQuantEnv(QuantEnvBase):
@@ -152,30 +165,34 @@ class LMQuantEnv(QuantEnvBase):
         return apply_mod.get_weight(self.params, name)
 
     def evaluate(self, policy: BitPolicy) -> float:
-        bits = apply_mod.bits_for_scan(policy, self.params, self.cfg)
-        return -float(self._eval_fn(self.params, self._val_batch, bits))
+        with self._span("evaluate"):
+            bits = apply_mod.bits_for_scan(policy, self.params, self.cfg)
+            return -float(self._eval_fn(self.params, self._val_batch, bits))
 
     def calibrate_and_qat(self, policy: BitPolicy, epochs: int) -> None:
-        bits = apply_mod.bits_for_scan(policy, self.params, self.cfg)
-        for _ in range(epochs * self.qat_steps_per_epoch):
-            batch = global_batch(self.task, self.cfg, self.shape, self._data_step)
-            self._data_step += 1
-            self.params, self._opt_state, _ = self._step_fn(
-                self.params, self._opt_state, batch, bits)
+        with self._span("qat", epochs=epochs):
+            bits = apply_mod.bits_for_scan(policy, self.params, self.cfg)
+            for _ in range(epochs * self.qat_steps_per_epoch):
+                batch = global_batch(self.task, self.cfg, self.shape, self._data_step)
+                self._data_step += 1
+                self.params, self._opt_state, _ = self._step_fn(
+                    self.params, self._opt_state, batch, bits)
 
     def float_loss(self) -> float:
-        bits = apply_mod.bits_for_scan(
-            BitPolicy.uniform(self._specs, 32), self.params, self.cfg)
-        return float(self._eval_fn(self.params, self._val_batch, bits))
+        with self._span("evaluate"):
+            bits = apply_mod.bits_for_scan(
+                BitPolicy.uniform(self._specs, 32), self.params, self.cfg)
+            return float(self._eval_fn(self.params, self._val_batch, bits))
 
     def pretrain(self, steps: int) -> float:
-        bits = apply_mod.bits_for_scan(
-            BitPolicy.uniform(self._specs, 32), self.params, self.cfg)
-        loss = float("nan")
-        for _ in range(steps):
-            batch = global_batch(self.task, self.cfg, self.shape, self._data_step)
-            self._data_step += 1
-            self.params, self._opt_state, m = self._step_fn(
-                self.params, self._opt_state, batch, bits)
-            loss = m["loss"]
-        return float(loss)
+        with self._span("pretrain", steps=steps):
+            bits = apply_mod.bits_for_scan(
+                BitPolicy.uniform(self._specs, 32), self.params, self.cfg)
+            loss = float("nan")
+            for _ in range(steps):
+                batch = global_batch(self.task, self.cfg, self.shape, self._data_step)
+                self._data_step += 1
+                self.params, self._opt_state, m = self._step_fn(
+                    self.params, self._opt_state, batch, bits)
+                loss = m["loss"]
+            return float(loss)

@@ -89,6 +89,7 @@ from repro import kvcache
 from repro.configs.base import ArchConfig
 from repro.core.policy import PolicyArtifact
 from repro.models import registry
+from repro.obs import calibration as obs_calibration
 from repro.obs import metrics as obs_metrics
 from repro.obs import trace as obs_trace
 from repro.quant import apply as qapply
@@ -1646,6 +1647,11 @@ class ServeEngine:
             hist = self.metrics.histogram(name)
             if hist.count:
                 out.setdefault("latency", {})[name] = hist.summary()
+        if self.artifact is not None and self.artifact.report:
+            cal = obs_calibration.calibration_ratios(self.artifact.report,
+                                                     self.measured_costs())
+            if cal:
+                out["calibration"] = cal
         return out
 
     def trace_report(self) -> dict:
@@ -1687,6 +1693,34 @@ class ServeEngine:
             report["note"] = ("no traced steps recorded — enable the tracer "
                               "(repro.obs.trace.enable()) before run()")
         return report
+
+    def weight_container_bytes(self) -> int:
+        """HBM bytes the packed weights occupy (quantized leaves only)."""
+        return sum(leaf.container_bytes() for leaf in jax.tree.leaves(
+            self.params, is_leaf=lambda x: hasattr(x, "container_bytes"))
+            if hasattr(leaf, "container_bytes"))
+
+    def measured_costs(self) -> dict:
+        """Deployment-side measurements of the artifact's predicted metrics.
+
+        The cost-model calibration input (DESIGN.md §18): ``container_bytes``
+        from the packed param tree, ``state_bytes`` from the cache
+        accountants (only when the state is actually quantized — an fp cache
+        measures a different thing than the search priced), ``latency_s``
+        as the mean traced compute time per decode step (dispatch +
+        device_sync — the part a roofline predicts; loop glue excluded)
+        when traced steps exist.
+        """
+        out = {"container_bytes": float(self.weight_container_bytes())}
+        if self._quant_state:
+            out["state_bytes"] = float(self.state_container_bytes())
+        disp = self.metrics.get("phase/dispatch")
+        sync = self.metrics.get("phase/device_sync")
+        if disp is not None and disp.count:
+            lat = disp.mean + (sync.mean if sync is not None and sync.count
+                               else 0.0)
+            out["latency_s"] = float(lat)
+        return out
 
     # -- state accounting ----------------------------------------------------
     def state_container_bytes(self) -> int:

@@ -62,21 +62,22 @@ class DraftQuantEnv(QuantEnvBase):
 
         # one calibration prefill with the deployed packing, then an fp-state
         # reference step replaying the last token (the engine's decode shape)
-        toks = jnp.asarray(calib_tokens, jnp.int32)
-        bc, sc = toks.shape
-        _, caches = self._api.prefill(self._deployed, cfg, tokens=toks,
-                                      qimpl=qimpl)
-        state = self._api.init_decode_state(cfg, bc, sc + 1, jnp.float32)
-        self._state = jax.tree.map(
-            lambda c, new: jax.lax.dynamic_update_slice(
-                c, new.astype(c.dtype), (0,) * c.ndim),
-            state, caches)
-        self._next_tok = toks[:, -1:]
-        self._pos = jnp.full((bc,), sc, jnp.int32)
-        self._ref_logits = self._step_logits(self._deployed)
-        self._ref_argmax = jnp.argmax(self._ref_logits, axis=-1)
-        self._scale = float(jnp.mean(jnp.abs(self._ref_logits))) or 1.0
-        self._probe = None
+        with self._span("calibrate", prompts=len(calib_tokens)):
+            toks = jnp.asarray(calib_tokens, jnp.int32)
+            bc, sc = toks.shape
+            _, caches = self._api.prefill(self._deployed, cfg, tokens=toks,
+                                          qimpl=qimpl)
+            state = self._api.init_decode_state(cfg, bc, sc + 1, jnp.float32)
+            self._state = jax.tree.map(
+                lambda c, new: jax.lax.dynamic_update_slice(
+                    c, new.astype(c.dtype), (0,) * c.ndim),
+                state, caches)
+            self._next_tok = toks[:, -1:]
+            self._pos = jnp.full((bc,), sc, jnp.int32)
+            self._ref_logits = self._step_logits(self._deployed)
+            self._ref_argmax = jnp.argmax(self._ref_logits, axis=-1)
+            self._scale = float(jnp.mean(jnp.abs(self._ref_logits))) or 1.0
+            self._probe = None
 
     def _step_logits(self, packed_params):
         logits, _ = self._api.decode_step(packed_params, self.cfg, self._state,
@@ -90,27 +91,30 @@ class DraftQuantEnv(QuantEnvBase):
 
     def divergence(self, policy: BitPolicy) -> float:
         """Relative one-step logit divergence of the draft re-packing."""
-        draft, _ = build_draft_params(self._deployed, policy, self.cfg,
-                                      materialize=False)
-        lq = self._step_logits(draft)
-        return float(jnp.mean(jnp.abs(lq - self._ref_logits))) / self._scale
+        with self._span("evaluate"):
+            draft, _ = build_draft_params(self._deployed, policy, self.cfg,
+                                          materialize=False)
+            lq = self._step_logits(draft)
+            return float(jnp.mean(jnp.abs(lq - self._ref_logits))) / self._scale
 
     def agreement(self, policy: BitPolicy) -> float:
         """One-step argmax agreement rate — predicted greedy acceptance."""
-        draft, _ = build_draft_params(self._deployed, policy, self.cfg,
-                                      materialize=False)
-        lq = self._step_logits(draft)
-        return float(jnp.mean((jnp.argmax(lq, axis=-1)
-                               == self._ref_argmax).astype(jnp.float32)))
+        with self._span("evaluate"):
+            draft, _ = build_draft_params(self._deployed, policy, self.cfg,
+                                          materialize=False)
+            lq = self._step_logits(draft)
+            return float(jnp.mean((jnp.argmax(lq, axis=-1)
+                                   == self._ref_argmax).astype(jnp.float32)))
 
     def evaluate(self, policy: BitPolicy) -> float:
-        draft, _ = build_draft_params(self._deployed, policy, self.cfg,
-                                      materialize=False)
-        lq = self._step_logits(draft)
-        agree = jnp.mean((jnp.argmax(lq, axis=-1)
-                          == self._ref_argmax).astype(jnp.float32))
-        div = jnp.mean(jnp.abs(lq - self._ref_logits)) / self._scale
-        return float(agree - DIVERGENCE_WEIGHT * div)
+        with self._span("evaluate"):
+            draft, _ = build_draft_params(self._deployed, policy, self.cfg,
+                                          materialize=False)
+            lq = self._step_logits(draft)
+            agree = jnp.mean((jnp.argmax(lq, axis=-1)
+                              == self._ref_argmax).astype(jnp.float32))
+            div = jnp.mean(jnp.abs(lq - self._ref_logits)) / self._scale
+            return float(agree - DIVERGENCE_WEIGHT * div)
 
     def sensitivities(self, policy: BitPolicy) -> np.ndarray:
         """Per-layer probe divergence: drop ONE layer to 4 bits, measure.
@@ -126,11 +130,12 @@ class DraftQuantEnv(QuantEnvBase):
         """
         del policy  # probe ordering is policy-independent (measured at 4b)
         if self._probe is None:
-            vals = []
-            for spec in self._specs:
-                one = BitPolicy.uniform(self._specs, 8).with_bits(spec.name, 4)
-                vals.append(self.divergence(one))
-            self._probe = np.asarray(vals)
+            with self._span("probe", layers=len(self._specs)):
+                vals = []
+                for spec in self._specs:
+                    one = BitPolicy.uniform(self._specs, 8).with_bits(spec.name, 4)
+                    vals.append(self.divergence(one))
+                self._probe = np.asarray(vals)
         return self._probe
 
     def calibrate_and_qat(self, policy: BitPolicy, epochs: int) -> None:

@@ -185,6 +185,61 @@ def test_histogram_empty_and_overflow():
     assert h.percentile(99) == pytest.approx(50.0)
 
 
+def test_histogram_merge_matches_single_stream():
+    buckets = [float(x) for x in range(0, 101, 5)]
+    a, b, ref = (obs_metrics.Histogram(buckets=buckets) for _ in range(3))
+    rng = np.random.RandomState(0)
+    for i, v in enumerate(rng.uniform(0, 100, 200)):
+        (a if i % 2 else b).observe(v)
+        ref.observe(v)
+    a.merge(b)
+    # merged counts are exactly what one histogram observing both streams
+    # would hold — same counts, sum, extremes, percentiles
+    assert a.counts == ref.counts
+    assert a.count == ref.count == 200
+    assert a.sum == pytest.approx(ref.sum)
+    assert (a.min, a.max) == (ref.min, ref.max)
+    for p in (50, 90, 99):
+        assert a.percentile(p) == pytest.approx(ref.percentile(p))
+
+
+def test_histogram_merge_rejects_mismatched_edges():
+    a = obs_metrics.Histogram(buckets=[1.0, 2.0])
+    b = obs_metrics.Histogram(buckets=[1.0, 2.0, 3.0])
+    with pytest.raises(ValueError, match="different bucket edges"):
+        a.merge(b)
+
+
+def test_histogram_state_roundtrip_then_merge():
+    h = obs_metrics.Histogram(buckets=[1.0, 10.0])
+    for v in (0.5, 5.0, 50.0):
+        h.observe(v)
+    back = obs_metrics.Histogram.from_state(h.state())
+    assert back.counts == h.counts and back.sum == h.sum
+    assert (back.min, back.max) == (h.min, h.max)
+    back.merge(h)  # reconstructed histograms stay merge-compatible
+    assert back.count == 6
+    empty = obs_metrics.Histogram.from_state(
+        obs_metrics.Histogram(buckets=[1.0, 10.0]).state())
+    assert empty.count == 0 and empty.min == float("inf")
+
+
+def test_registry_reset_keeps_instances():
+    reg = obs_metrics.MetricsRegistry()
+    c, g = reg.counter("done"), reg.gauge("depth")
+    h = reg.histogram("lat", buckets=[1.0, 2.0])
+    c.inc(3)
+    g.set(7)
+    h.observe(1.5)
+    reg.reset()
+    # zeroed in place: callers holding references keep observing into the
+    # same objects (the warm-up exclusion contract)
+    assert reg.counter("done") is c and c.value == 0.0
+    assert g.value == 0.0 and h.count == 0 and h.sum == 0.0
+    h.observe(0.5)
+    assert h.count == 1 and reg.snapshot()["lat"]["count"] == 1
+
+
 # ---------------------------------------------------------------------------
 # engine integration
 # ---------------------------------------------------------------------------
@@ -213,6 +268,46 @@ def test_stats_view_is_metrics_backed(setup):
     # TTFT/ITL land unconditionally (tracing was never enabled here)
     assert eng.metrics.histogram("ttft_s").count == 3
     assert st["latency"]["ttft_s"]["count"] == 3
+
+
+def test_stats_calibration_ratios(setup):
+    """stats()["calibration"] closes the predict/measure loop (DESIGN.md §18):
+    the packed-tree byte measurement must agree exactly with the cost model's
+    packing prediction, and the traced-latency ratio appears only once the
+    phase histograms have samples."""
+    from repro.core.policy import BitPolicy, PolicyArtifact
+    from repro.cost import ShiftAddCostModel
+    from repro.quant import apply as qapply
+
+    cfg, sp = setup
+    params = registry.get_api(cfg).init(cfg, jax.random.key(0))
+    specs = qapply.layer_specs(params, cfg)
+    rng = np.random.default_rng(1)
+    policy = BitPolicy.from_bits(
+        specs, {s.name: int(rng.choice([2, 4, 6, 8])) for s in specs})
+    report = ShiftAddCostModel().report(policy).as_costs()
+    artifact = PolicyArtifact.build(policy, backend="shift_add", report=report)
+    qp = qapply.quantize_for_serve(sp, artifact, cfg)
+    eng = _engine(cfg, qp, artifact=artifact)
+    # the measurement is real packing maths, not the prediction echoed back
+    assert eng.weight_container_bytes() == policy.container_bytes()
+    eng.run(_requests(n=1, max_new=3))
+    cal = eng.stats()["calibration"]
+    assert cal["container_bytes"]["ratio"] == pytest.approx(1.0)
+    # fp cache + untraced run: no state-bytes or latency measurement yet
+    assert "state_bytes" not in cal and "latency_s" not in cal
+    obs_trace.enable()
+    eng.run(_requests(n=1, max_new=3))
+    obs_trace.disable()
+    cal = eng.stats()["calibration"]
+    assert "latency_s" in cal and cal["latency_s"]["measured"] > 0
+
+
+def test_stats_without_report_has_no_calibration(setup):
+    cfg, sp = setup
+    eng = _engine(cfg, sp)
+    eng.run(_requests(n=1, max_new=2))
+    assert "calibration" not in eng.stats()
 
 
 def test_trace_report_attributes_step_time(setup):

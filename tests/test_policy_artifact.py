@@ -120,7 +120,7 @@ class TestKernelConfigsV5:
         art5 = PolicyArtifact.build(art.policy, backend=art.backend,
                                     kernel_configs=[self.ENTRY])
         back = PolicyArtifact.from_json(art5.to_json())
-        assert back.version == ARTIFACT_VERSION == 5
+        assert back.version == ARTIFACT_VERSION == 6
         assert back.kernel_configs == [self.ENTRY]
 
     def test_build_rejects_malformed_entries(self):
@@ -128,13 +128,15 @@ class TestKernelConfigsV5:
         with pytest.raises(ValueError, match="needs 'key' and 'config'"):
             PolicyArtifact.build(art.policy, kernel_configs=[{"key": {}}])
 
-    @pytest.mark.parametrize("version", [1, 2, 3, 4])
+    @pytest.mark.parametrize("version", [1, 2, 3, 4, 5])
     def test_older_versions_load_without_kernel_configs(self, version):
-        """Every pre-v5 layout loads with its missing fields defaulted —
+        """Every pre-v6 layout loads with its missing fields defaulted —
         the full backward-compat ladder in one sweep."""
         doc = json.loads(make_artifact().to_json())
         doc["artifact_version"] = version
-        del doc["kernel_configs"]
+        del doc["provenance"]
+        if version < 5:
+            del doc["kernel_configs"]
         if version < 4:
             del doc["draft_policy"], doc["draft_k"]
         if version < 3:
@@ -144,6 +146,7 @@ class TestKernelConfigsV5:
         back = PolicyArtifact.from_json(json.dumps(doc))
         assert back.version == version
         assert back.kernel_configs is None
+        assert back.provenance is None
         assert back.policy.bits == make_artifact().policy.bits
 
     def test_attach_kernel_configs_needs_state_policy(self):
@@ -151,6 +154,66 @@ class TestKernelConfigsV5:
 
         with pytest.raises(ValueError, match="needs a state policy"):
             attach_kernel_configs(make_artifact(), cfg=None)
+
+
+class TestProvenanceV6:
+    """v6: search provenance (config/limits/seed + per-phase records)."""
+
+    PROV = {"schema": 1, "backend": "shift_add", "seed": 0,
+            "limits": {"size_mib": 0.5}, "config": {"phase2_max_iters": 10},
+            "phases": {"weight": {"iterations": 7, "digest": "ab12cd34ef56ab78",
+                                  "success": True}}}
+
+    def test_roundtrip_carries_provenance(self):
+        art = make_artifact()
+        art6 = PolicyArtifact.build(art.policy, backend=art.backend,
+                                    provenance=self.PROV)
+        back = PolicyArtifact.from_json(art6.to_json())
+        assert back.version == ARTIFACT_VERSION == 6
+        assert back.provenance == self.PROV
+        assert make_artifact().provenance is None  # optional on build
+
+    @pytest.mark.parametrize("mutate,field", [
+        (lambda p: "not-a-mapping", "provenance"),
+        (lambda p: {k: v for k, v in p.items() if k != "phases"},
+         "provenance.phases"),
+        (lambda p: dict(p, phases=[1, 2]), "provenance.phases"),
+        (lambda p: dict(p, phases={"weight": "nope"}),
+         "provenance.phases.weight"),
+        (lambda p: dict(p, phases={"weight": {"iterations": -1,
+                                              "digest": "ab"}}),
+         "provenance.phases.weight.iterations"),
+        (lambda p: dict(p, phases={"weight": {"iterations": True,
+                                              "digest": "ab"}}),
+         "provenance.phases.weight.iterations"),
+        (lambda p: dict(p, phases={"weight": {"iterations": 3, "digest": ""}}),
+         "provenance.phases.weight.digest"),
+    ])
+    def test_malformed_provenance_names_the_field(self, mutate, field):
+        """Build AND load both reject bad provenance, naming the field."""
+        art = make_artifact()
+        bad = mutate(dict(self.PROV))
+        with pytest.raises(ValueError, match=field.replace(".", r"\.")):
+            PolicyArtifact.build(art.policy, provenance=bad)
+        doc = json.loads(PolicyArtifact.build(
+            art.policy, provenance=self.PROV).to_json())
+        doc["provenance"] = bad
+        with pytest.raises(ValueError, match=field.replace(".", r"\.")):
+            PolicyArtifact.from_json(json.dumps(doc))
+
+    def test_checkpoint_store_wraps_into_artifact_error(self, tmp_path):
+        """A corrupted checkpointed artifact surfaces as ArtifactError with
+        the source AND the offending provenance field in the message."""
+        art = PolicyArtifact.build(make_artifact().policy,
+                                   provenance=self.PROV)
+        ck.save(str(tmp_path), 3, {"w": np.zeros(2, np.float32)}, artifact=art)
+        mpath = tmp_path / "step_00000003" / "MANIFEST.json"
+        manifest = json.loads(mpath.read_text())
+        manifest["extra"][ck.ARTIFACT_KEY]["provenance"]["phases"]["weight"]["digest"] = ""
+        mpath.write_text(json.dumps(manifest))
+        with pytest.raises(ck.ArtifactError,
+                           match=r"provenance\.phases\.weight\.digest"):
+            ck.load_policy_artifact(str(tmp_path))
 
 
 class TestRegistryHash:
